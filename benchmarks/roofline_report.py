@@ -1,0 +1,58 @@
+"""Deliverable (g): render the roofline table from the dry-run JSONL.
+
+Reads experiments/dryrun_results.jsonl (written by repro.launch.dryrun)
+and prints, per (arch × shape × mesh): the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and bytes/device. If the
+JSONL is missing (dry-run not yet executed in this container), prints the
+command to produce it instead of failing the bench suite.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.roofline import analysis
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun_results.jsonl")
+
+
+def run(path: str = None):
+    path = path or os.path.abspath(RESULTS)
+    if not os.path.exists(path):
+        print(f"# no dry-run results at {path}")
+        print("# produce them with: PYTHONPATH=src python -m "
+              "repro.launch.dryrun")
+        return []
+    rows = analysis.load_jsonl(path)
+    # keep the LAST row per combo (later rows = re-runs after perf changes)
+    latest = {}
+    for r in rows:
+        latest[(r["arch"], r["shape"], r["mesh"])] = r
+    header = ["arch", "shape", "mesh", "t_compute_s", "t_memory_s",
+              "t_collective_s", "dominant", "useful_ratio",
+              "hlo_gflops_per_dev", "coll_MB_per_dev", "peak_GB_per_dev"]
+    print(",".join(header))
+    out = []
+    for key in sorted(latest):
+        r = latest[key]
+        peak = (r.get("bytes_per_device") or {}).get("peak_bytes")
+        arg = (r.get("bytes_per_device") or {}).get("argument_bytes")
+        per_dev_gb = round(((peak or 0) + (arg or 0)) / 1e9, 2)
+        row = [r["arch"], r["shape"], r["mesh"],
+               f"{r['t_compute']:.3e}", f"{r['t_memory']:.3e}",
+               f"{r['t_collective']:.3e}", r["dominant"],
+               round(r["useful_ratio"], 3),
+               round(r["hlo_flops"] / r["chips"] / 1e9, 1),
+               round(r["collective_bytes"] / r["chips"] / 1e6, 1),
+               per_dev_gb]
+        print(",".join(str(x) for x in row))
+        out.append(row)
+    doms = {}
+    for row in out:
+        doms[row[6]] = doms.get(row[6], 0) + 1
+    print(f"# dominant-term distribution: {doms}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Benchmark driver: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything (quick)
+  PYTHONPATH=src python -m benchmarks.run --only table3_comm_opt
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale repeats
+
+Each module prints a CSV block headed by its paper-table provenance; the
+roofline table (deliverable g) is rendered from the dry-run JSONL by
+``roofline_report``.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+MODULES = [
+    "table1_baseline_grid",
+    "table2_sota",
+    "table3_comm_opt",
+    "table4_threshold",
+    "table56_profiling",
+    "fig3_scaling",
+    "fig4_fault_tolerance",
+    "table7_mannwhitney",
+    "ablation_components",
+    "roofline_report",
+    "kernel_bench",
+]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale repeat counts (slow on CPU)")
+    args = ap.parse_args(argv)
+    mods = [args.only] if args.only else MODULES
+    failures = []
+    for name in mods:
+        print(f"\n===== benchmarks.{name} =====")
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            if args.full and name == "fig4_fault_tolerance":
+                mod.run(runs=100)
+            elif args.full and name == "table7_mannwhitney":
+                mod.run(runs=30)
+            else:
+                mod.run()
+            print(f"# [{name}] done in {time.time() - t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

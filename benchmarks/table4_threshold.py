@@ -1,0 +1,30 @@
+"""Paper Table IV: sensitivity analysis of the alignment threshold θ on
+UNSW-like data — θ ∈ {0.50, 0.60, 0.65, 0.70, 0.75}.
+
+Expected shape (paper §V-D): low θ admits noisy updates (more bytes /
+overhead), high θ rejects too much (accuracy dips); 0.65 balances.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import baselines
+
+
+def run(thetas=(0.50, 0.60, 0.65, 0.70, 0.75), rounds=8):
+    rows = []
+    for theta in thetas:
+        strat = baselines.ours(batch_size=64, lr=3e-2, theta=theta,
+                               dynamic_batch=False)
+        sim, hist, _ = common.run_sim(common.UNSW, strat, num_clients=10,
+                                      rounds=rounds)
+        m = hist[-1]
+        accept = sum(h.accept_rate for h in hist) / len(hist)
+        rows.append([theta, round(m.accuracy * 100, 2),
+                     round(m.comm_time, 1), round(m.bytes_sent / 1e6, 1),
+                     round(accept, 3)])
+    return common.emit(rows, ["theta", "acc_pct", "overhead_s", "MB_sent",
+                              "accept_rate"])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Paper Tables V-VI: profiling vs batch size — the TPU analogue.
+
+The paper profiles CUDA with Nsight (NVTX ranges, cudaLaunchKernel /
+cudaMemcpyAsync / cudaStreamSync counts falling ~90% from batch 64→1024).
+Our analogue: compile the LOCAL CLIENT training step per batch size and
+census the optimized HLO — instruction count, collective ops, loop-aware
+FLOPs/traffic, plus measured CPU step time. Expected trend: per-sample
+op density and launch count fall as batch grows (the paper's core
+profiling insight).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.models import api
+from repro.optim import adamw as optim_mod
+from repro.roofline import hlo_census
+
+
+def run(batches=(64, 128, 256, 512, 1024), steps=5):
+    cfg = common.UNSW
+    opt = optim_mod.sgd(1e-2)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    opt_state = opt.init(params)
+    rows = []
+    for bs in batches:
+        def one_step(p, s, batch):
+            loss, g = jax.value_and_grad(
+                lambda q: api.loss_fn(q, batch, cfg))(p)
+            p2, s2 = opt.update(g, s, p)
+            return p2, s2, loss
+
+        x = jnp.zeros((bs, cfg.num_features), jnp.float32)
+        y = jnp.zeros((bs,), jnp.int32)
+        jitted = jax.jit(one_step)
+        compiled = jitted.lower(params, opt_state,
+                                {"x": x, "y": y}).compile()
+        census = hlo_census.analyze(compiled.as_text())
+        # measured wall time per step (jitted, after warmup)
+        batch = {"x": jnp.asarray(np.random.randn(bs, cfg.num_features),
+                                  jnp.float32),
+                 "y": jnp.zeros((bs,), jnp.int32)}
+        p, s = params, opt_state
+        p, s, _ = jitted(p, s, batch)
+        jax.block_until_ready(p)
+        t0 = time.time()
+        for _ in range(steps):
+            p, s, _ = jitted(p, s, batch)
+        jax.block_until_ready(p)
+        dt = (time.time() - t0) / steps
+        rows.append([bs, census["total_instructions"],
+                     round(census["flops"] / 1e6, 2),
+                     round(census["traffic_bytes"] / 1e6, 2),
+                     round(census["flops"] / bs, 0),
+                     round(dt * 1e3, 2),
+                     round(dt * 1e6 / bs, 2)])
+    print("# per-sample instruction/flop density must FALL with batch size"
+          " (paper Table V-VI trend)")
+    return common.emit(rows, ["batch", "hlo_instructions", "MFLOPs",
+                              "traffic_MB", "flops_per_sample",
+                              "step_ms", "us_per_sample"])
+
+
+if __name__ == "__main__":
+    run()

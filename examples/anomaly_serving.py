@@ -1,0 +1,72 @@
+"""Serving example: batched network-flow scoring with the trained global
+model + ROAD-style automotive CAN masquerade detection.
+
+Trains briefly (federated), then serves two request streams:
+  1. UNSW-like flow batches -> per-class probabilities + binary AUC;
+  2. ROAD-like CAN windows -> masquerade alarm rate.
+
+  PYTHONPATH=src python examples/anomaly_serving.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import anomaly_mlp
+from repro.core import async_engine as ae
+from repro.core import baselines
+from repro.data import partition, synthetic
+from repro.models import mlp_detector
+
+
+def train(cfg, make_data, rounds=8, clients=8, seed=0, alpha=0.7):
+    X, y = make_data(seed, 16000)
+    parts = partition.dirichlet_partition(y, clients, alpha=alpha, seed=seed)
+    cl = [{"x": X[p], "y": y[p]} for p in parts]
+    Xe, ye = make_data(seed + 1, 3000)
+    sim = ae.FederatedSimulation(
+        cfg, cl, {"x": Xe, "y": ye},
+        baselines.ours(batch_size=128, lr=3e-2, local_epochs=2),
+        ae.heterogeneous_profiles(clients, seed=seed), seed=seed)
+    hist = sim.run(rounds)
+    print(f"  trained: acc={hist[-1].accuracy:.3f} "
+          f"(sim {hist[-1].sim_time:.1f}s)")
+    return sim.params
+
+
+def main():
+    print("== UNSW-like flow scoring ==")
+    cfg = anomaly_mlp.CONFIG
+    params = train(cfg, lambda s, n: synthetic.make_unsw_like(
+        s, n, cfg.num_features, cfg.num_classes))
+    serve = jax.jit(lambda p, x: mlp_detector.predict(p, x, cfg))
+    Xq, yq = synthetic.make_unsw_like(99, 4096, cfg.num_features,
+                                      cfg.num_classes)
+    t0 = time.time()
+    probs = serve(params, jnp.asarray(Xq))
+    probs.block_until_ready()
+    dt = time.time() - t0
+    scores = 1.0 - probs[:, 0]
+    auc = float(mlp_detector.auc_roc(scores, jnp.asarray((yq != 0))
+                                     .astype(jnp.float32)))
+    print(f"  scored {len(Xq)} flows in {dt*1e3:.1f} ms "
+          f"({len(Xq)/dt:.0f} flows/s), binary AUC-ROC={auc:.3f}")
+
+    print("== ROAD-like CAN masquerade detection ==")
+    rcfg = anomaly_mlp.ROAD_CONFIG
+    # binary labels + strong Dirichlet skew give degenerate all-one-class
+    # clients; use a milder split for the 2-class CAN task (alpha=5)
+    rparams = train(rcfg, lambda s, n: synthetic.make_road_like(
+        s, n, window=rcfg.num_features), rounds=12, alpha=5.0)
+    rserve = jax.jit(lambda p, x: mlp_detector.predict(p, x, rcfg))
+    Xr, yr = synthetic.make_road_like(7, 4096, window=rcfg.num_features)
+    pr = rserve(rparams, jnp.asarray(Xr))
+    alarm = jnp.argmax(pr, -1)
+    tp = float(((alarm == 1) & (yr == 1)).sum() / max((yr == 1).sum(), 1))
+    fp = float(((alarm == 1) & (yr == 0)).sum() / max((yr == 0).sum(), 1))
+    print(f"  masquerade TPR={tp:.3f} FPR={fp:.3f} "
+          f"on {len(Xr)} CAN windows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Hierarchical federated learning across pods (beyond-paper).
+
+Two "pods" (datacenters) each run the paper's masked selective aggregation
+over their own clients EVERY round; across pods, models synchronize only
+every ``--sync-every`` rounds, and the cross-pod exchange is itself gated
+by the sign-alignment test (core/hierarchy.py) — the paper's async +
+selective idea applied recursively at datacenter scale.
+
+  PYTHONPATH=src python examples/hierarchical_pods.py
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import anomaly_mlp
+from repro.core import fl_step, hierarchy
+from repro.data import partition, synthetic
+from repro.models import mlp_detector
+from repro.optim import adamw as optim_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pods", type=int, default=2)
+    ap.add_argument("--clients-per-pod", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=24)
+    ap.add_argument("--sync-every", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = anomaly_mlp.CONFIG.replace(mlp_hidden=(64, 32), num_features=20,
+                                     num_classes=5, dtype="float32")
+    P, C = args.pods, args.clients_per_pod
+    X, y = synthetic.make_unsw_like(0, 12000, cfg.num_features,
+                                    cfg.num_classes)
+    # pods see DIFFERENT non-IID slices (regional skew)
+    pod_parts = partition.dirichlet_partition(y, P, alpha=1.0, seed=1)
+    Xe, ye = synthetic.make_unsw_like(1, 3000, cfg.num_features,
+                                      cfg.num_classes)
+    ev = {"x": jnp.asarray(Xe), "y": jnp.asarray(ye)}
+
+    opt = optim_mod.sgd(3e-2)
+    step = fl_step.build_fl_train_step(cfg, opt, theta=0.6, donate=False)
+    states = [fl_step.init_state(jax.random.PRNGKey(7), cfg, opt)
+              for _ in range(P)]
+    sync = hierarchy.init_pod_sync(states[0].params)
+    rng = np.random.default_rng(0)
+
+    def pod_batch(p):
+        idx = pod_parts[p]
+        sel = rng.choice(idx, size=(C, 32))
+        return {"x": jnp.asarray(X[sel]), "y": jnp.asarray(y[sel])}
+
+    for r in range(args.rounds):
+        metrics = []
+        for p in range(P):
+            states[p], m = step(states[p], pod_batch(p))
+            metrics.append(m)
+        # stack pod params (leading pod dim) and maybe cross-pod sync
+        pod_params = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                  *[s.params for s in states])
+        pod_params, sync, sm = hierarchy.maybe_pod_sync(
+            pod_params, sync, sync_every=args.sync_every, theta=0.6)
+        for p in range(P):
+            states[p] = states[p]._replace(
+                params=jax.tree.map(lambda x, pp=p: x[pp], pod_params))
+        if float(sm["synced"]) or r % 4 == 0:
+            accs = [float(mlp_detector.accuracy(s.params, ev, cfg))
+                    for s in states]
+            spread = float(np.ptp(accs))
+            tag = (f"SYNC accept={float(sm['pod_accept']):.2f}"
+                   if float(sm["synced"]) else "    ")
+            print(f"round {r:3d} pod-accs={['%.3f' % a for a in accs]} "
+                  f"spread={spread:.3f} {tag}")
+
+    accs = [float(mlp_detector.accuracy(s.params, ev, cfg)) for s in states]
+    print(f"\nfinal: accs={['%.3f' % a for a in accs]} "
+          f"(pods converge to a shared model via selective sync)")
+
+
+if __name__ == "__main__":
+    main()

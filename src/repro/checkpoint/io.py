@@ -1,0 +1,52 @@
+"""Pytree checkpoint I/O (msgpack + raw numpy buffers, no deps beyond
+msgpack). Used by the Weibull-driven CheckpointManager and the trainers."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree) -> None:
+    leaves, treedef = _flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "leaves": [
+            {"dtype": str(np.asarray(l).dtype),
+             "shape": list(np.asarray(l).shape),
+             "data": np.asarray(l).tobytes()}
+            for l in leaves
+        ],
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)  # atomic — a crash never corrupts the checkpoint
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (shapes must match)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves_like, treedef = jax.tree.flatten(like)
+    blobs = payload["leaves"]
+    if len(blobs) != len(leaves_like):
+        raise ValueError(f"checkpoint has {len(blobs)} leaves, "
+                         f"expected {len(leaves_like)}")
+    leaves = []
+    for blob, ref in zip(blobs, leaves_like):
+        arr = np.frombuffer(blob["data"], dtype=np.dtype(blob["dtype"]))
+        arr = arr.reshape(blob["shape"])
+        if tuple(arr.shape) != tuple(np.asarray(ref).shape):
+            raise ValueError(f"shape mismatch {arr.shape} vs "
+                             f"{np.asarray(ref).shape}")
+        leaves.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, leaves)

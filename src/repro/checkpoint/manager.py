@@ -1,0 +1,61 @@
+"""Weibull-interval-driven checkpoint manager (paper §IV-C).
+
+Wraps checkpoint/io.py with the adaptive policy: the manager is told the
+current (simulated or real) time and failure history; it re-fits (λ, k)
+and writes a checkpoint whenever the optimal interval has elapsed.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.checkpoint import io
+from repro.core.checkpoint_policy import fit_weibull, optimal_interval
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, total_time: float = 3600.0,
+                 recovery_time: float = 5.0, min_interval: float = 1.0):
+        self.dir = directory
+        os.makedirs(directory, exist_ok=True)
+        self.total_time = total_time
+        self.recovery_time = recovery_time
+        self.min_interval = min_interval
+        self.failures: List[float] = []
+        self.last_save: Optional[float] = None
+        self.interval = total_time / 20.0   # prior before any failures
+        self.saves = 0
+
+    def record_failure(self, t: float):
+        self.failures.append(t)
+        if len(self.failures) >= 2:
+            lam, k = fit_weibull(np.diff(sorted(self.failures)))
+            self.interval = max(
+                self.min_interval,
+                optimal_interval(self.total_time, self.recovery_time, lam, k))
+
+    def should_save(self, now: float) -> bool:
+        if self.last_save is None:
+            return True
+        return (now - self.last_save) >= self.interval
+
+    def path(self, tag: str = "latest") -> str:
+        return os.path.join(self.dir, f"ckpt_{tag}.msgpack")
+
+    def save(self, tree, now: float = None, tag: str = "latest"):
+        now = time.time() if now is None else now
+        io.save(self.path(tag), tree)
+        self.last_save = now
+        self.saves += 1
+
+    def maybe_save(self, tree, now: float, tag: str = "latest") -> bool:
+        if self.should_save(now):
+            self.save(tree, now, tag)
+            return True
+        return False
+
+    def restore(self, like, tag: str = "latest"):
+        return io.restore(self.path(tag), like)

@@ -1,0 +1,76 @@
+"""Global model aggregation (paper §IV-C).
+
+``masked_mean``         — w_g = 1/|S| Σ_{i∈S} w_i over the accepted set S
+                          (all-ones mask == plain FedAvg, tested invariant).
+``staleness_weight``    — async aggregation weight α(τ) = (1+τ)^-0.5
+                          (polynomial staleness discount; τ = server_step −
+                          client_snapshot_step).
+``apply_async_update``  — server-side continuous aggregation:
+                          w_g ← (1−α)·w_g + α·w_i.
+
+If NO client passes the filter the global state must remain unchanged —
+``masked_mean`` returns a zero update in that case and ``fl_step`` keeps
+w_g (tested invariant).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_mean(client_trees, mask: jnp.ndarray, weights=None,
+                reduce_dtype=jnp.float32):
+    """client_trees: leading client dim C; mask: (C,). Returns mean tree.
+
+    weights (C,) optionally scales clients (e.g. by sample counts);
+    normalization is by the masked weight sum, with a zero-safe floor.
+    ``reduce_dtype=bf16`` halves the cross-client all-reduce bytes on the
+    production mesh (§Perf iteration E); results are returned in fp32.
+    """
+    w = mask if weights is None else mask * weights
+    denom = jnp.maximum(w.sum(), 1e-9).astype(jnp.float32)
+
+    def agg(x):
+        wf = w.reshape((-1,) + (1,) * (x.ndim - 1)).astype(reduce_dtype)
+        s = (x.astype(reduce_dtype) * wf).sum(0)
+        return s.astype(jnp.float32) / denom
+
+    return jax.tree.map(agg, client_trees)
+
+
+def fedavg(client_trees, weights=None):
+    C = jax.tree.leaves(client_trees)[0].shape[0]
+    return masked_mean(client_trees, jnp.ones((C,), jnp.float32), weights)
+
+
+def staleness_weight(tau, alpha0: float = 0.6):
+    """Polynomial staleness discount for async updates."""
+    return alpha0 * (1.0 + jnp.asarray(tau, jnp.float32)) ** -0.5
+
+
+def apply_async_update(global_tree, client_tree, alpha):
+    return jax.tree.map(
+        lambda g, c: ((1.0 - alpha) * g.astype(jnp.float32)
+                      + alpha * c.astype(jnp.float32)).astype(g.dtype),
+        global_tree, client_tree)
+
+
+def buffered_async_update(anchor_tree, arrivals):
+    """FedBuff-style buffered aggregation: apply the MEAN of staleness-
+    discounted client deltas relative to the round anchor —
+        w_g ← w_a + (1/N) Σ_i α(τ_i) · (w_i − w_a).
+    With all τ=0 this is exactly FedAvg over the senders (tested), unlike
+    sequential convex mixing which over-weights the last arrival (see
+    EXPERIMENTS.md §Sim). ``arrivals``: list of (alpha, client_tree)."""
+    if not arrivals:
+        return anchor_tree
+    n = float(len(arrivals))
+
+    def combine(a, *clients):
+        af = a.astype(jnp.float32)
+        delta = sum(alpha * (c.astype(jnp.float32) - af)
+                    for (alpha, _), c in zip(arrivals, clients))
+        return (af + delta / n).astype(a.dtype)
+
+    return jax.tree.map(combine, anchor_tree,
+                        *[c for _, c in arrivals])

@@ -1,0 +1,63 @@
+"""Gradient sign-alignment relevance scoring (paper §IV-C, Algorithm 1
+lines 3–12).
+
+``relevance = (# params whose local-update sign matches the reference
+global-update sign) / (# params)``. Clients with relevance ≥ θ (0.65)
+transmit; others are filtered at the source.
+
+Implementation notes:
+  * operates on flat pytrees; zero entries in the reference count as
+    "matching" only if the local entry is also zero (sign(0)==sign(0)),
+    mirroring the paper's ``sign(W)`` comparison.
+  * ``per_client_alignment`` vectorizes over a leading client axis —
+    this is the production path used by ``fl_step`` (one shot for all C
+    clients, no per-tensor kernel launches: DESIGN.md §7).
+  * an optional Pallas kernel path (repro.kernels.ops.sign_align) is used
+    when ``use_kernel=True``; pure-jnp is the oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_sign(tree):
+    """int8 sign pytree (the ``ref_sign`` carried in FL state)."""
+    return jax.tree.map(lambda x: jnp.sign(x).astype(jnp.int8), tree)
+
+
+def _leaf_counts(local, ref_sign):
+    a = jnp.sign(local.astype(jnp.float32)).astype(jnp.int8)
+    aligned = jnp.sum((a == ref_sign).astype(jnp.float32))
+    return aligned, jnp.float32(local.size)
+
+
+def alignment_ratio(local_tree, ref_sign_tree) -> jnp.ndarray:
+    """Scalar relevance of ONE client's update against the reference sign."""
+    aligned = jnp.float32(0.0)
+    total = jnp.float32(0.0)
+    for loc, ref in zip(jax.tree.leaves(local_tree),
+                        jax.tree.leaves(ref_sign_tree)):
+        a, t = _leaf_counts(loc, ref)
+        aligned += a
+        total += t
+    return aligned / jnp.maximum(total, 1.0)
+
+
+def per_client_alignment(client_trees, ref_sign_tree) -> jnp.ndarray:
+    """client_trees: pytree with leading client dim C. Returns (C,) ratios."""
+    leaves = jax.tree.leaves(client_trees)
+    C = leaves[0].shape[0]
+    aligned = jnp.zeros((C,), jnp.float32)
+    total = jnp.float32(0.0)
+    for loc, ref in zip(leaves, jax.tree.leaves(ref_sign_tree)):
+        a = jnp.sign(loc.astype(jnp.float32)).astype(jnp.int8)
+        eq = (a == ref[None]).astype(jnp.float32)
+        aligned += eq.reshape(C, -1).sum(axis=1)
+        total += jnp.float32(ref.size)
+    return aligned / jnp.maximum(total, 1.0)
+
+
+def selection_mask(ratios: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """(C,) float mask; paper's acceptance rule relevance ≥ θ."""
+    return (ratios >= theta).astype(jnp.float32)

@@ -1,0 +1,409 @@
+"""Event-driven federated simulation engine (paper §IV-B, §V).
+
+Reproduces the paper's experimental apparatus on CPU: N clients with
+heterogeneous speed / network / dropout profiles train REAL models (jitted
+JAX local steps on their non-IID shard); the server runs either
+
+  sync  — barrier aggregation: the round completes when the SLOWEST
+          selected client's update arrives (straggler effect, Fig. 2
+          left); barrier idle time is tracked explicitly;
+  async — continuous aggregation: updates are applied in completion-time
+          order with staleness weighting α(τ)=α₀(1+τ)^-0.5; the round
+          clock advances at a QUORUM of arrivals (default 50%), so fast
+          clients never wait for stragglers (Fig. 2 right). Straggler
+          updates are still applied, discounted by their staleness.
+
+Composable strategy flags mirror the paper's ablations (Table III):
+  theta            — gradient-sign-alignment client-side filter (§IV-C);
+                     the reference direction is the sign of the LAST
+                     GLOBAL UPDATE (w_g^t − w_g^{t−1}), per Algorithm 1
+  selection        — adaptive top-k client selection from reliability EMAs
+  dynamic_batch    — capacity-proportional batch assignment (§IV-A)
+  checkpointing    — Weibull-interval checkpoint/restore on dropout (§IV-C)
+
+Simulated time model (recorded separately from real wall time):
+  train_time  = steps · batch · t_sample / speed
+  comm_time   = latency + bytes/bandwidth   (only if the update is SENT —
+                filtered clients transmit a 1-bit "skip" beacon)
+All stochastic choices draw from a seeded Generator → runs are exactly
+reproducible; with equal speeds, zero latency, no dropout, full quorum and
+theta=None, the async trajectory coincides with sync FedAvg (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation, alignment
+from repro.core.batchsize import BatchSizeController, ClientMetrics
+from repro.core.checkpoint_policy import fit_weibull, optimal_interval
+from repro.core.selection import AdaptiveClientSelector
+from repro.data.loader import ArrayLoader
+from repro.models import api
+from repro.optim import adamw as optim_mod
+
+
+@dataclasses.dataclass
+class CommModel:
+    bandwidth: float = 1e9        # bytes/s client->server
+    latency: float = 0.05         # s per message
+    t_sample: float = 2e-6        # s of compute per training sample (ref speed)
+    t_launch: float = 0.0         # fixed per-step dispatch overhead — the
+                                  # paper's kernel-launch/memcpy cost that
+                                  # large batches amortize (Tables V-VI)
+
+
+@dataclasses.dataclass
+class ClientProfile:
+    speed: float = 1.0            # relative compute throughput
+    net_latency: float = 0.05
+    dropout_p: float = 0.0
+    memory: float = 1.0
+
+
+@dataclasses.dataclass
+class StrategyConfig:
+    mode: str = "async"                   # async | sync
+    theta: Optional[float] = 0.65         # None -> no filtering
+    selection: bool = True
+    select_fraction: float = 1.0          # top-k fraction when selecting
+    dynamic_batch: bool = False
+    checkpointing: bool = True
+    local_epochs: int = 1
+    batch_size: int = 64
+    lr: float = 5e-3
+    alpha0: float = 1.0                   # fresh-update weight in buffered
+                                          # async aggregation: α(τ)=α₀(1+τ)^-½
+                                          # discounts stale arrivals; τ=0 ->
+                                          # exactly FedAvg over the senders.
+                                          # (Sequential convex mixing with
+                                          # α₀>0.2 chased the last arrival
+                                          # and collapsed the θ-filter —
+                                          # kept in EXPERIMENTS §Sim.)
+    quorum: float = 0.5                   # async round advances at this frac
+    per_client_lr: bool = False           # FedL2P-style personalization
+    grad_norm_selection: bool = False     # ACFL-style critical-period proxy
+    quantize_updates: bool = False        # beyond-paper §VI hybrid: int8 +
+                                          # error feedback on the wire (4x
+                                          # fewer bytes, multiplies with θ)
+    max_samples_per_round: int = 4096     # per-round sample cap (NOT a step
+                                          # cap: batch sizes then see equal
+                                          # data, isolating the launch-
+                                          # overhead effect the paper measures)
+
+
+@dataclasses.dataclass
+class RoundMetrics:
+    round: int
+    sim_time: float          # simulated end-to-end wall clock so far
+    comm_time: float         # cumulative transfer seconds
+    idle_time: float         # cumulative barrier-idle seconds (sync only)
+    bytes_sent: float
+    updates_applied: int
+    accept_rate: float
+    accuracy: float
+    loss: float
+
+
+class FederatedSimulation:
+    def __init__(self, cfg, client_arrays: List[dict], eval_arrays: dict,
+                 strategy: StrategyConfig, profiles: List[ClientProfile],
+                 comm: CommModel = None, seed: int = 0,
+                 eval_fn: Callable = None):
+        self.cfg = cfg
+        self.strategy = strategy
+        self.comm = comm or CommModel()
+        self.profiles = profiles
+        self.rng = np.random.default_rng(seed)
+        self.num_clients = len(client_arrays)
+        self.eval_arrays = eval_arrays
+
+        # --- model/optim setup ------------------------------------------
+        self.params = api.init_params(jax.random.PRNGKey(seed), cfg)
+        self.param_bytes = sum(x.size * x.dtype.itemsize
+                               for x in jax.tree.leaves(self.params))
+        self.opt = optim_mod.sgd(lr=strategy.lr)
+        self.ref_sign = None          # sign(w_g^t − w_g^{t−1}); None round 0
+        self._local_run = self._build_local_run()
+        self._eval = eval_fn or self._build_eval()
+
+        # --- per-client state --------------------------------------------
+        self.batch_ctrl = BatchSizeController()
+        self.loaders = []
+        for cid, arrays in enumerate(client_arrays):
+            bs = strategy.batch_size
+            if strategy.dynamic_batch:
+                p = profiles[cid]
+                bs = self.batch_ctrl.initial(cid, ClientMetrics(
+                    compute=p.speed, memory=p.memory, latency=p.net_latency))
+            self.loaders.append(ArrayLoader(arrays, bs, seed=seed + cid))
+        self.selector = AdaptiveClientSelector(self.num_clients, seed=seed)
+        self.client_lr_scale = np.ones(self.num_clients)
+        self.grad_norms = np.ones(self.num_clients)
+
+        # --- fault tolerance ----------------------------------------------
+        self.failure_log: List[float] = []
+        self.checkpoints: Dict[int, bool] = {}
+        self.ckpt_interval = 10.0
+        self.recovery_time = 0.2      # restore from checkpoint
+        self.restart_time = 1.0      # cold restart without one
+
+        # --- compression (beyond-paper) -----------------------------------
+        self._ef_state = {}
+        self._wire_bytes = None
+
+        # --- accounting -----------------------------------------------------
+        self.sim_time = 0.0
+        self.comm_time = 0.0
+        self.idle_time = 0.0
+        self.bytes_sent = 0.0
+        self.server_step = 0
+        self.history: List[RoundMetrics] = []
+
+    # ------------------------------------------------------------------
+    # jitted pieces
+    # ------------------------------------------------------------------
+    def _build_local_run(self):
+        cfg, opt = self.cfg, self.opt
+
+        @jax.jit
+        def run(params, batches, lr_scale):
+            opt_state = opt.init(params)
+
+            def step(carry, batch):
+                p, s = carry
+                loss, grads = jax.value_and_grad(
+                    lambda q: api.loss_fn(q, batch, cfg))(p)
+                grads = jax.tree.map(lambda g: g * lr_scale, grads)
+                p, s = opt.update(grads, s, p)
+                return (p, s), loss
+
+            (params, _), losses = jax.lax.scan(step, (params, opt_state), batches)
+            return params, losses.mean()
+
+        return run
+
+    def _build_eval(self):
+        cfg = self.cfg
+
+        @jax.jit
+        def ev(params, batch):
+            if cfg.family == "mlp":
+                from repro.models import mlp_detector
+                return mlp_detector.accuracy(params, batch, cfg)
+            return -api.loss_fn(params, batch, cfg)   # LM: quality proxy
+
+        return ev
+
+    # ------------------------------------------------------------------
+    # client-local training (simulated timing + real gradients)
+    # ------------------------------------------------------------------
+    def _client_batches(self, cid: int):
+        """Fixed-step resampled batches -> stable jit shapes.
+
+        Step counts are quantized UP to powers of two: heterogeneous client
+        datasets otherwise produce a distinct (steps, batch) shape per
+        client, and every distinct shape re-traces the jitted local scan —
+        the dominant CPU cost at 100 clients. Power-of-two quantization
+        caps the trace count at ~7 per batch size."""
+        loader = self.loaders[cid]
+        st = self.strategy
+        bs = loader.batch_size
+        steps = max(1, math.ceil(st.local_epochs * loader.n / bs))
+        steps = min(steps, max(1, st.max_samples_per_round // bs))
+        steps = 1 << (steps - 1).bit_length()          # next power of two
+        steps = min(steps, max(1, st.max_samples_per_round // bs))
+        batches = [loader.sample() for _ in range(steps)]
+        stacked = {k: np.stack([b[k] for b in batches]) for k in batches[0]}
+        return stacked, steps, steps * bs
+
+    def _train_client(self, cid: int):
+        batches, steps, n_samples = self._client_batches(cid)
+        new_params, loss = self._local_run(
+            self.params, jax.tree.map(jnp.asarray, batches),
+            jnp.float32(self.client_lr_scale[cid]))
+        prof = self.profiles[cid]
+        # per-step dispatch overhead + per-sample compute (paper §IV-A:
+        # larger batches -> fewer steps -> amortized launch cost)
+        train_time = (steps * self.comm.t_launch
+                      + n_samples * self.comm.t_sample) / max(prof.speed, 1e-3)
+        delta = jax.tree.map(lambda n, o: (n - o).astype(jnp.float32),
+                             new_params, self.params)
+        if self.strategy.quantize_updates:
+            # int8 + error feedback on the wire; server dequantizes
+            from repro.core import compression
+            err = self._ef_state.setdefault(
+                cid, compression.init_error_state(delta))
+            q, s, _n, self._ef_state[cid] = compression.compress_update(
+                delta, err)
+            delta = compression.decompress_update(q, s, delta)
+            new_params = jax.tree.map(
+                lambda o, d: (o.astype(jnp.float32) + d).astype(o.dtype),
+                self.params, delta)
+            self._wire_bytes = compression.transport_bytes(q, s)
+        return new_params, delta, float(loss), train_time
+
+    def _filter_update(self, delta) -> tuple:
+        """Client-side sign-alignment filter (Algorithm 1 lines 27-32)."""
+        if self.strategy.theta is None or self.ref_sign is None:
+            return True, 1.0
+        ratio = float(alignment.alignment_ratio(delta, self.ref_sign))
+        return ratio >= self.strategy.theta, ratio
+
+    def _payload_bytes(self) -> float:
+        if self.strategy.quantize_updates and self._wire_bytes:
+            return float(self._wire_bytes)
+        return float(self.param_bytes)
+
+    def _transfer_time(self, sent: bool, prof: ClientProfile) -> float:
+        if sent:
+            return prof.net_latency + self._payload_bytes() / self.comm.bandwidth
+        return prof.net_latency   # 1-bit skip beacon
+
+    # ------------------------------------------------------------------
+    # rounds
+    # ------------------------------------------------------------------
+    def _select_clients(self) -> List[int]:
+        st = self.strategy
+        k = max(1, int(st.select_fraction * self.num_clients))
+        if st.grad_norm_selection:
+            return list(np.argsort(-self.grad_norms)[:k])
+        if st.selection and st.select_fraction < 1.0:
+            return self.selector.select(k)
+        return list(range(self.num_clients))
+
+    def run_round(self, rnd: int) -> RoundMetrics:
+        st = self.strategy
+        selected = self._select_clients()
+        round_start = self.sim_time
+        prev_params = self.params
+        arrivals = []   # (arrive, cid, new_params, sent, transfer)
+        round_times: Dict[int, float] = {}
+        losses = []
+        n_sent = 0
+
+        for cid in selected:
+            prof = self.profiles[cid]
+            delay = 0.0
+            if self.rng.random() < prof.dropout_p:
+                self.failure_log.append(round_start)
+                self.selector.observe(cid, delivered=False)
+                if not st.checkpointing:
+                    continue                      # client lost this round
+                delay = (self.recovery_time if self.checkpoints.get(cid)
+                         else self.restart_time)
+            new_params, delta, loss, t_train = self._train_client(cid)
+            losses.append(loss)
+            sent, ratio = self._filter_update(delta)
+            transfer = self._transfer_time(sent, prof)
+            arrive = round_start + delay + t_train + transfer
+            arrivals.append((arrive, cid, new_params, sent, transfer))
+            round_times[cid] = arrive - round_start
+            self.selector.observe(cid, delivered=True, passed=sent,
+                                  round_time=arrive - round_start)
+            gn = float(np.sqrt(sum(float(jnp.vdot(g, g))
+                                   for g in jax.tree.leaves(delta))))
+            self.grad_norms[cid] = 0.5 * self.grad_norms[cid] + 0.5 * gn
+            if st.per_client_lr:
+                self.client_lr_scale[cid] = float(np.clip(
+                    self.client_lr_scale[cid] * (1.05 if gn < 1.0 else 0.9),
+                    0.25, 2.0))
+            if sent:
+                n_sent += 1
+                self.bytes_sent += self._payload_bytes()
+            self.comm_time += transfer
+            if st.checkpointing:
+                self.checkpoints[cid] = True   # periodic local state save
+
+        arrivals.sort(key=lambda a: a[0])
+        updates_applied = 0
+
+        if st.mode == "sync":
+            sent_params = [p for (_, _, p, sent, _) in arrivals if sent]
+            if sent_params:
+                stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *sent_params)
+                self.params = aggregation.fedavg(stacked)
+                self.server_step += 1
+                updates_applied = 1
+            if arrivals:
+                barrier = arrivals[-1][0]
+                self.idle_time += sum(barrier - a for (a, *_r) in arrivals)
+                self.sim_time = barrier
+        else:
+            # async: clock advances at the quorum arrival; later updates are
+            # stale (they overlap the next round) and are discounted.
+            # Aggregation is FedBuff-style BUFFERED (mean of staleness-
+            # discounted deltas): sequential convex mixing over-weights the
+            # last arrival and destabilizes the θ-filter (EXPERIMENTS §Sim).
+            if arrivals:
+                q_idx = max(0, math.ceil(st.quorum * len(arrivals)) - 1)
+                self.sim_time = arrivals[q_idx][0]
+                buf = []
+                for i, (arrive, cid, new_params, sent, _t) in enumerate(arrivals):
+                    if not sent:
+                        continue
+                    tau = max(0, i - q_idx)
+                    alpha = float(aggregation.staleness_weight(tau, st.alpha0))
+                    buf.append((alpha, new_params))
+                    self.server_step += 1
+                    updates_applied += 1
+                self.params = aggregation.buffered_async_update(
+                    self.params, buf)
+
+        if st.checkpointing and len(self.failure_log) >= 2:
+            lam, k = fit_weibull(np.diff(sorted(self.failure_log)))
+            self.ckpt_interval = optimal_interval(
+                max(self.sim_time, 1.0), self.recovery_time, lam, k)
+        if st.dynamic_batch:
+            for cid, b in self.batch_ctrl.feedback(round_times).items():
+                if cid < len(self.loaders):
+                    self.loaders[cid].set_batch_size(b)
+
+        # reference direction = sign of the global movement this round
+        if updates_applied and st.theta is not None:
+            self.ref_sign = jax.tree.map(
+                lambda n, o: jnp.sign(n.astype(jnp.float32)
+                                      - o.astype(jnp.float32)).astype(jnp.int8),
+                self.params, prev_params)
+
+        acc = float(self._eval(self.params,
+                               jax.tree.map(jnp.asarray, self.eval_arrays)))
+        m = RoundMetrics(
+            round=rnd, sim_time=self.sim_time, comm_time=self.comm_time,
+            idle_time=self.idle_time, bytes_sent=self.bytes_sent,
+            updates_applied=updates_applied,
+            accept_rate=n_sent / max(len(selected), 1), accuracy=acc,
+            loss=float(np.mean(losses)) if losses else float("nan"))
+        self.history.append(m)
+        return m
+
+    def run(self, num_rounds: int) -> List[RoundMetrics]:
+        for r in range(num_rounds):
+            self.run_round(r)
+        return self.history
+
+
+# ---------------------------------------------------------------------------
+# profile factories
+# ---------------------------------------------------------------------------
+
+def heterogeneous_profiles(n: int, seed: int = 0, dropout_p: float = 0.0,
+                           speed_sigma: float = 0.6) -> List[ClientProfile]:
+    """Lognormal speeds (stragglers!), uniform latencies."""
+    rng = np.random.default_rng(seed)
+    speeds = rng.lognormal(0.0, speed_sigma, size=n)
+    lats = rng.uniform(0.01, 0.2, size=n)
+    mems = rng.uniform(0.4, 1.0, size=n)
+    return [ClientProfile(speed=float(s), net_latency=float(l),
+                          dropout_p=dropout_p, memory=float(m))
+            for s, l, m in zip(speeds, lats, mems)]
+
+
+def uniform_profiles(n: int, dropout_p: float = 0.0) -> List[ClientProfile]:
+    return [ClientProfile(speed=1.0, net_latency=0.0, dropout_p=dropout_p,
+                          memory=1.0) for _ in range(n)]

@@ -1,0 +1,57 @@
+"""Quantized update aggregation with error feedback (beyond-paper §VI:
+"compression (e.g., gradient quantization) remains a complementary option
+for bandwidth-constrained scenarios").
+
+Client→server updates are per-row int8-quantized (kernels/quantize.py, 4×
+fewer bytes on the wire — multiplicative with the θ-filter's savings).
+Quantization residuals are carried in per-client ERROR-FEEDBACK buffers
+(Seide et al. / EF-SGD) so the compression bias vanishes over rounds:
+
+    q_t   = Q(g_t + e_{t-1})
+    e_t   = (g_t + e_{t-1}) − deQ(q_t)
+
+The aggregation itself then operates on dequantized updates — drop-in with
+``masked_mean``. ``quantize_for_transport`` / ``dequantize_from_transport``
+are the wire format used by the async simulator's bandwidth accounting.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def init_error_state(params):
+    """Per-client error-feedback buffers (fp32, zero)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_update(update, error, interpret=None):
+    """(update, error) -> (q, scales, n_true, new_error).
+
+    q/scales are the transport payload: bytes = n_lanes + 4·rows vs 4·n.
+    """
+    corrected = jax.tree.map(
+        lambda g, e: g.astype(jnp.float32) + e, update, error)
+    q, s, n = ops.quantize_tree(corrected, interpret=interpret)
+    restored = ops.dequantize_tree(q, s, corrected, interpret=interpret)
+    new_error = jax.tree.map(lambda c, r: c - r.astype(jnp.float32),
+                             corrected, restored)
+    return q, s, n, new_error
+
+
+def decompress_update(q, s, like, interpret=None):
+    return ops.dequantize_tree(q, s, like, interpret=interpret)
+
+
+def transport_bytes(q, s) -> int:
+    """Actual wire bytes of a compressed update."""
+    return int(q.size * q.dtype.itemsize + s.size * s.dtype.itemsize)
+
+
+def compression_ratio(params) -> float:
+    """fp32-update bytes / compressed bytes (≈4 for int8+row scales)."""
+    n = sum(x.size for x in jax.tree.leaves(params))
+    rows = (n + ops.LANE - 1) // ops.LANE
+    return (4.0 * n) / (rows * ops.LANE + 4.0 * rows)

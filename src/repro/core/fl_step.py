@@ -1,0 +1,152 @@
+"""Production federated train step — the paper's technique as a single
+SPMD program on the production mesh (DESIGN.md §4).
+
+One FL "round" = one compiled step:
+  1. the global batch arrives client-batched: leading dim C (one FL client
+     cohort per (pod×data) mesh shard);
+  2. ``vmap(grad)`` produces per-client gradient pytrees (C, ...) — each
+     mesh shard materializes exactly one client's gradients;
+  3. per-client sign-alignment ratios vs the sign of the previous global
+     update (Algorithm 1, CALCULATE-RELEVANCE);
+  4. the mask ``ratio ≥ θ`` gates a weighted mean over C — GSPMD lowers
+     this to a masked all-reduce (the paper's selective update as a
+     collective);
+  5. optimizer update + new reference sign.
+
+``theta=None`` (or mask forced to ones) gives the synchronous FedAvg
+baseline the paper compares against. If no client passes, parameters and
+ref_sign are kept unchanged (server keeps w_g — §IV-C).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation, alignment
+from repro.models import api
+from repro.optim import adamw as optim_mod
+
+
+class FLState(NamedTuple):
+    params: dict
+    opt_state: dict
+    ref_sign: dict          # int8 sign of last accepted global update
+    step: jnp.ndarray       # i32
+    metrics: dict           # running counters (accept rate, bytes saved)
+
+
+def init_state(rng, cfg, optimizer=None) -> FLState:
+    params = api.init_params(rng, cfg)
+    optimizer = optimizer or optim_mod.for_config(cfg)
+    opt_state = optimizer.init(params)
+    ref_sign = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.int8), params)
+    return FLState(params, opt_state, ref_sign, jnp.zeros((), jnp.int32),
+                   {"accepted": jnp.zeros((), jnp.float32),
+                    "rounds": jnp.zeros((), jnp.float32)})
+
+
+def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
+                  lr_schedule=None, agg_dtype=jnp.bfloat16):
+    """Un-jitted step(state, batch) -> (state, metrics) — the dry-run wraps
+    this with explicit in/out shardings; trainers use build_fl_train_step.
+
+    batch leaves have leading dims (C, per_client_batch, ...).
+    theta=None -> synchronous FedAvg baseline (mask == ones).
+    agg_dtype: cross-client reduction precision (§Perf iteration E —
+    bf16 halves the aggregation all-reduce; optimizer math stays fp32).
+    """
+    optimizer = optimizer or optim_mod.for_config(cfg)
+
+    def loss_for_client(params, client_batch):
+        return api.loss_fn(params, client_batch, cfg)
+
+    def step(state: FLState, batch):
+        # (2) per-client gradients — one client per mesh shard
+        loss, grads = jax.vmap(
+            jax.value_and_grad(loss_for_client), in_axes=(None, 0)
+        )(state.params, batch)                                 # loss: (C,)
+        C = loss.shape[0]
+
+        # (3)+(4) selective aggregation (the paper's contribution)
+        if theta is None:
+            mask = jnp.ones((C,), jnp.float32)
+            ratios = jnp.ones((C,), jnp.float32)
+            passed = mask
+        else:
+            ratios = alignment.per_client_alignment(grads, state.ref_sign)
+            passed = alignment.selection_mask(ratios, theta)
+            # bootstrap: round 0 has no reference direction yet -> accept all
+            passed = jnp.where(state.step == 0, jnp.ones_like(passed), passed)
+            # production fallback (deviation from the paper's "server keeps
+            # w_g", which deadlocks a per-step trainer): if NO client passes
+            # θ this round, accept all rather than stall. The faithful
+            # keep-w_g semantics live in the async simulator path.
+            mask = jnp.where(passed.sum() > 0, passed, jnp.ones_like(passed))
+        agg = aggregation.masked_mean(grads, mask, reduce_dtype=agg_dtype)
+        any_accepted = mask.sum() > 0
+
+        # (5) optimizer update; hold position if nothing was accepted
+        lr_now = lr_schedule(state.step) if lr_schedule else None
+        new_params, new_opt = optimizer.update(agg, state.opt_state,
+                                               state.params, lr_now=lr_now)
+        keep = lambda new, old: jax.tree.map(
+            lambda n, o: jnp.where(any_accepted, n, o), new, old)
+        new_params = keep(new_params, state.params)
+        new_opt = keep(new_opt, state.opt_state)
+        new_ref = jax.tree.map(
+            lambda a, r: jnp.where(any_accepted,
+                                   jnp.sign(a).astype(jnp.int8), r),
+            agg, state.ref_sign)
+
+        metrics = {
+            "loss": loss.mean(),
+            "accept_rate": passed.mean(),
+            "alignment_mean": ratios.mean(),
+            # client->server bytes actually transmitted this round (the
+            # paper's communication-overhead metric, §V-D)
+            "bytes_sent": mask.sum() * _update_bytes(state.params),
+            "bytes_baseline": jnp.float32(C) * _update_bytes(state.params),
+        }
+        run = {"accepted": state.metrics["accepted"] + mask.sum(),
+               "rounds": state.metrics["rounds"] + 1.0}
+        return FLState(new_params, new_opt, new_ref, state.step + 1, run), metrics
+
+    return step
+
+
+def build_fl_train_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
+                        lr_schedule=None, donate: bool = True):
+    """jit'd step(state, batch) -> (state, metrics)."""
+    step = make_raw_step(cfg, optimizer, theta, lr_schedule)
+    if donate:
+        return jax.jit(step, donate_argnums=(0,))
+    return jax.jit(step)
+
+
+@functools.lru_cache(maxsize=None)
+def _bytes_cache(key):
+    return key
+
+
+def _update_bytes(params) -> jnp.ndarray:
+    n = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    return jnp.float32(n)
+
+
+# ---------------------------------------------------------------------------
+# serving / prefill steps (used by the dry-run for the inference shapes)
+# ---------------------------------------------------------------------------
+
+def build_prefill_step(cfg):
+    def step(params, batch):
+        return api.prefill(params, batch, cfg)
+    return step
+
+
+def build_serve_step(cfg):
+    def step(params, cache, batch):
+        return api.decode_step(params, cache, batch, cfg)
+    return step

@@ -1,0 +1,60 @@
+"""Adaptive client selection (paper §V-C: "efficient client selection
+mechanisms identify reliable clients based on historical performance").
+
+Tracks per-client EMAs of (i) availability (did the client deliver an
+update, i.e. not drop out), (ii) alignment pass rate (did its update pass
+the θ filter), (iii) round time. The selector scores clients as
+``reliability × timeliness`` and picks the top-k for the next round; an
+ε-greedy floor keeps exploring unreliable clients so slow-but-unique data
+is not permanently excluded (the bias concern in §II-A).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ClientRecord:
+    availability: float = 1.0
+    pass_rate: float = 1.0
+    round_time: float = 1.0
+
+
+class AdaptiveClientSelector:
+    def __init__(self, num_clients: int, ema: float = 0.8,
+                 epsilon: float = 0.1, seed: int = 0):
+        self.records: Dict[int, ClientRecord] = {
+            c: ClientRecord() for c in range(num_clients)}
+        self.ema = ema
+        self.epsilon = epsilon
+        self.rng = np.random.default_rng(seed)
+
+    def observe(self, cid: int, *, delivered: bool, passed: bool = True,
+                round_time: float = 1.0):
+        r = self.records[cid]
+        e = self.ema
+        r.availability = e * r.availability + (1 - e) * float(delivered)
+        if delivered:
+            r.pass_rate = e * r.pass_rate + (1 - e) * float(passed)
+            r.round_time = e * r.round_time + (1 - e) * float(round_time)
+
+    def score(self, cid: int) -> float:
+        r = self.records[cid]
+        timeliness = 1.0 / (1.0 + r.round_time)
+        return r.availability * (0.5 + 0.5 * r.pass_rate) * timeliness
+
+    def select(self, k: int) -> List[int]:
+        cids = list(self.records)
+        scores = np.array([self.score(c) for c in cids])
+        order = list(np.argsort(-scores))
+        chosen = [cids[i] for i in order[:k]]
+        # ε-greedy exploration: swap in random unchosen clients
+        pool = [c for c in cids if c not in chosen]
+        for i in range(len(chosen)):
+            if pool and self.rng.random() < self.epsilon:
+                j = self.rng.integers(len(pool))
+                chosen[i] = pool.pop(int(j))
+        return chosen

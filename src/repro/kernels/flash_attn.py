@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: flash attention with VMEM-resident accumulators
+(§Perf iteration C — the fix XLA-level blockwise attention cannot give,
+see models/layers.py iteration-B note).
+
+Grid: (B·K·G, nq). Each instance owns one (BQ, hd) query tile and loops
+the KV blocks with ``jax.lax.fori_loop``; the online-softmax statistics
+(m, l) and the (BQ, hd) output accumulator live in VMEM for the whole
+loop — HBM traffic is exactly q+k+v reads + o writes, O(S·hd) instead of
+O(S²). Causal masking per tile; MXU-aligned tiles (BQ=BK=128, hd≥64).
+
+HBM-traffic model for the roofline (per device, per layer, fwd):
+    bytes = (q + k + v + o) = 4·B·S·H·hd·itemsize       [vs  B·H·S²·4  naive]
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQ = 128
+BK = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, causal: bool, scale: float,
+                  nk: int, block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale            # (BQ, hd)
+    hd = q.shape[-1]
+
+    def body(kj, carry):
+        m, l, acc = carry
+        k = k_ref[kj].astype(jnp.float32)                  # (BK, hd)
+        v = v_ref[kj].astype(jnp.float32)
+        s = q @ k.T                                        # (BQ, BK)
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = kj * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(k_pos <= q_pos, s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), -1e30, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    a0 = jnp.zeros((block_q, hd), jnp.float32)
+    upper = (qi + 1) * block_q // block_k if causal else nk
+    m, l, acc = jax.lax.fori_loop(0, upper, body, (m0, l0, a0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, interpret: bool = True,
+                    block_q: int = BQ, block_k: int = BK):
+    """q: (BH, S, hd); k/v: (BH, Sk, hd) — heads pre-flattened (GQA groups
+    expanded by the ops.py wrapper). Returns (BH, S, hd) in q.dtype."""
+    BH, S, hd = q.shape
+    Sk = k.shape[1]
+    nq, nk = S // block_q, Sk // block_k
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(_flash_kernel, causal=causal, scale=scale,
+                               nk=nk, block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq),
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, Sk // block_k, block_k, hd),
+                         lambda b, i: (b, 0, 0, 0)),
+            pl.BlockSpec((None, Sk // block_k, block_k, hd),
+                         lambda b, i: (b, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        interpret=interpret,
+    )(q, k.reshape(BH, nk, block_k, hd), v.reshape(BH, nk, block_k, hd))
+
+
+def flash_bytes(batch: int, seq: int, heads: int, hd: int,
+                itemsize: int = 2) -> int:
+    """Kernel HBM-traffic model: q+k+v reads + o write."""
+    return 4 * batch * seq * heads * hd * itemsize

@@ -1,0 +1,126 @@
+"""jit'd public wrappers over the Pallas kernels: pytree <-> (R, LANE)
+layout management, padding, and ratio/aggregation conveniences.
+
+``interpret`` defaults to True off-TPU (this container) and False on TPU.
+Padding uses value 0 for updates and a -2 sentinel for reference signs so
+padded positions can never count as aligned (sign() ∈ {-1,0,1}).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import masked_agg as _agg
+from repro.kernels import quantize as _q
+from repro.kernels import sign_align as _sa
+
+LANE = _sa.LANE
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flatten_to_lanes(tree, lane: int = LANE):
+    """Concatenate a pytree into a (R, lane) f32 matrix (zero-padded).
+    Returns (mat, total_size) — total_size = true element count."""
+    leaves = [l.reshape(-1).astype(jnp.float32) for l in jax.tree.leaves(tree)]
+    flat = jnp.concatenate(leaves) if leaves else jnp.zeros((0,), jnp.float32)
+    n = flat.size
+    rows = max((n + lane - 1) // lane, 1)
+    pad = rows * lane - n
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows, lane), n
+
+
+def unflatten_from_lanes(mat, like):
+    """Inverse of flatten_to_lanes into the structure/dtypes of ``like``."""
+    flat = mat.reshape(-1)
+    leaves, treedef = jax.tree.flatten(like)
+    out, off = [], 0
+    for ref in leaves:
+        out.append(flat[off:off + ref.size].reshape(ref.shape).astype(ref.dtype))
+        off += ref.size
+    return jax.tree.unflatten(treedef, out)
+
+
+def ref_sign_lanes(ref_sign_tree, lane: int = LANE):
+    """Flatten an int8 sign pytree to (R, lane) with -2 padding sentinel."""
+    leaves = [l.reshape(-1) for l in jax.tree.leaves(ref_sign_tree)]
+    flat = jnp.concatenate(leaves).astype(jnp.int8)
+    n = flat.size
+    rows = max((n + lane - 1) // lane, 1)
+    flat = jnp.pad(flat, (0, rows * lane - n), constant_values=-2)
+    return flat.reshape(rows, lane)
+
+
+# ---------------------------------------------------------------------------
+# public ops
+# ---------------------------------------------------------------------------
+
+def sign_align_ratio(update_tree, ref_sign_tree, interpret=None) -> jnp.ndarray:
+    """Kernel-backed Algorithm-1 relevance for one client's update."""
+    interpret = default_interpret() if interpret is None else interpret
+    g, n = flatten_to_lanes(update_tree)
+    r = ref_sign_lanes(ref_sign_tree)
+    count = _sa.sign_align_counts(g, r, interpret=interpret)
+    return count / jnp.maximum(jnp.float32(n), 1.0)
+
+
+def per_client_sign_align_ratio(stacked_updates, ref_sign_tree,
+                                interpret=None) -> jnp.ndarray:
+    """stacked_updates: pytree with leading client dim C -> (C,) ratios."""
+    interpret = default_interpret() if interpret is None else interpret
+    C = jax.tree.leaves(stacked_updates)[0].shape[0]
+    per_client = [jax.tree.map(lambda x, i=i: x[i], stacked_updates)
+                  for i in range(C)]
+    mats = [flatten_to_lanes(t)[0] for t in per_client]
+    n = flatten_to_lanes(per_client[0])[1]
+    u = jnp.stack(mats)                                  # (C, R, LANE)
+    r = ref_sign_lanes(ref_sign_tree)
+    counts = _sa.per_client_sign_align(u, r, interpret=interpret)
+    return counts / jnp.maximum(jnp.float32(n), 1.0)
+
+
+def masked_aggregate(stacked_updates, mask, weights=None, interpret=None):
+    """Kernel-backed masked mean over the client axis. Returns a pytree
+    shaped like one client's update (f32 leaves cast back to input dtype)."""
+    interpret = default_interpret() if interpret is None else interpret
+    C = jax.tree.leaves(stacked_updates)[0].shape[0]
+    w = mask if weights is None else mask * weights
+    w = w / jnp.maximum(w.sum(), 1e-9)
+    per_client = [jax.tree.map(lambda x, i=i: x[i], stacked_updates)
+                  for i in range(C)]
+    u = jnp.stack([flatten_to_lanes(t)[0] for t in per_client])
+    out = _agg.masked_agg(u, w, interpret=interpret)
+    like = per_client[0]
+    return unflatten_from_lanes(out, like)
+
+
+def fused_selective_update(params, stacked_updates, mask, lr,
+                           weights=None, interpret=None):
+    """Beyond-paper fused kernel: params − lr · masked_mean(updates)."""
+    interpret = default_interpret() if interpret is None else interpret
+    C = jax.tree.leaves(stacked_updates)[0].shape[0]
+    w = mask if weights is None else mask * weights
+    w_lr = lr * w / jnp.maximum(w.sum(), 1e-9)
+    p_mat, _ = flatten_to_lanes(params)
+    per_client = [jax.tree.map(lambda x, i=i: x[i], stacked_updates)
+                  for i in range(C)]
+    u = jnp.stack([flatten_to_lanes(t)[0] for t in per_client])
+    out = _agg.fused_update(p_mat, u, w_lr, interpret=interpret)
+    return unflatten_from_lanes(out, params)
+
+
+def quantize_tree(tree, interpret=None):
+    """Compress a pytree update to (int8 mat, scales, n). ~4x fewer bytes."""
+    interpret = default_interpret() if interpret is None else interpret
+    mat, n = flatten_to_lanes(tree)
+    q, s = _q.quantize_q8(mat, interpret=interpret)
+    return q, s, n
+
+
+def dequantize_tree(q, s, like, interpret=None):
+    interpret = default_interpret() if interpret is None else interpret
+    mat = _q.dequantize_q8(q, s, interpret=interpret)
+    return unflatten_from_lanes(mat, like)

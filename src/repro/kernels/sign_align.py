@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: gradient sign-alignment counting (paper Alg. 1,
+CALCULATE-RELEVANCE — the O(C·M) hot spot of the technique).
+
+TPU adaptation (DESIGN.md §7): where the paper's PyTorch loop issues one
+tiny CUDA kernel per tensor per client (2.13M launches in its Table VI),
+we flatten the parameter pytree ONCE into a (R, 1024) layout and sweep it
+with a 1-D grid of VMEM-resident (BR, 1024) tiles; each grid step
+accumulates its partial count into a per-tile output that is summed by the
+jit'd wrapper. Elementwise compare + reduce → VPU-bound, fully vectorized.
+
+Also provides the per-client variant: u (C, R, LANE) against a shared
+reference sign tile — one pass produces all C counts (grid over R only;
+the client dim stays resident in VMEM, C ≤ 64 for any realistic mesh).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 1024          # 8 sublanes × 128 lanes
+BLOCK_R = 8          # rows per tile -> (8, 1024) f32 = 32 KiB VMEM per ref
+
+
+def _count_kernel(g_ref, r_ref, out_ref):
+    s = jnp.sign(g_ref[...].astype(jnp.float32)).astype(jnp.int8)
+    eq = (s == r_ref[...]).astype(jnp.float32)
+    out_ref[0, 0] = jnp.sum(eq)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_r"))
+def sign_align_counts(g, r, *, interpret: bool = True, block_r: int = BLOCK_R):
+    """g: (R, LANE) float; r: (R, LANE) int8. Returns scalar f32 count."""
+    R = g.shape[0]
+    grid = (pl.cdiv(R, block_r),)
+    partial = pl.pallas_call(
+        _count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], 1), jnp.float32),
+        interpret=interpret,
+    )(g, r)
+    return partial.sum()
+
+
+def _per_client_kernel(u_ref, r_ref, out_ref):
+    s = jnp.sign(u_ref[...].astype(jnp.float32)).astype(jnp.int8)
+    eq = (s == r_ref[...][None]).astype(jnp.float32)       # (C, BR, LANE)
+    out_ref[:, 0] = jnp.sum(eq, axis=(1, 2))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_r"))
+def per_client_sign_align(u, r, *, interpret: bool = True,
+                          block_r: int = BLOCK_R):
+    """u: (C, R, LANE); r: (R, LANE) int8 -> (C,) aligned counts (f32)."""
+    C, R, _ = u.shape
+    grid = (pl.cdiv(R, block_r),)
+    partial = pl.pallas_call(
+        _per_client_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((C, block_r, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((block_r, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((C, 1), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((C, grid[0]), jnp.float32),
+        interpret=interpret,
+    )(u, r)
+    return partial.sum(axis=1)

@@ -1,0 +1,58 @@
+"""Production mesh construction (deliverable e, MULTI-POD DRY-RUN §1).
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state. The dry-run launcher sets
+``--xla_force_host_platform_device_count=512`` BEFORE importing jax;
+smoke tests and benchmarks see the single real CPU device.
+
+Hardware model (TPU v5e, used by the roofline analysis):
+  197 TFLOP/s bf16 per chip · 819 GB/s HBM · ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link
+
+
+def _auto(axes):
+    return (jax.sharding.AxisType.Auto,) * len(axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes, axis_types=_auto(axes))
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            f"launch via repro.launch.dryrun (forces 512 host devices)")
+    # more devices than needed (e.g. 512 forced, single-pod 256): subset
+    return jax.make_mesh(shape, axes, axis_types=_auto(axes),
+                         devices=devices[:n])
+
+
+def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
+    """Single-device mesh for smoke tests of the sharded code path."""
+    return jax.make_mesh(shape, axes, axis_types=_auto(axes),
+                         devices=jax.devices()[:1])
+
+
+def client_axes_in_mesh(cfg, mesh) -> tuple:
+    """The subset of cfg.client_axes present in this mesh."""
+    return tuple(a for a in cfg.client_axes if a in mesh.axis_names)
+
+
+def num_clients(cfg, mesh) -> int:
+    axes = client_axes_in_mesh(cfg, mesh)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return max(n, 1)

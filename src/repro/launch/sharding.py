@@ -1,0 +1,246 @@
+"""PartitionSpec rules for every parameter / batch / cache pytree.
+
+Strategy (DESIGN.md §4):
+  * weights: tensor-parallel over "model" on their widest eligible dim,
+    replicated over client axes ("pod","data") — every FL client needs
+    full weights;
+  * MoE expert tensors with cfg.expert_parallel: expert dim over "data"
+    (expert parallelism) + ff dim over "model";
+  * optimizer state mirrors its parameter's spec (adafactor's factored
+    row/col vectors drop the corresponding spec entry);
+  * training batch: leading client dim over cfg.client_axes; per-client
+    batch dim over "data" when "data" is not a client axis (arctic);
+  * decode caches: batch over "data" (when divisible), sequence/window
+    over "model" (KV heads are often < 16, so head-sharding would split
+    head_dim — sequence sharding is the uniform, always-divisible rule);
+    SSM states shard heads/channels over "model".
+
+Dims are only sharded when evenly divisible by the mesh axis size —
+``_maybe`` falls back to replication otherwise (e.g. vocab 32001).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import api
+
+_STACK_KEYS = {"layers", "enc_layers", "dec_layers"}
+
+
+def _axis_size(mesh, name):
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _maybe(mesh, axis, dim):
+    """axis name if dim divides evenly, else None (replicated)."""
+    n = _axis_size(mesh, axis)
+    return axis if (n > 1 and dim % n == 0) else None
+
+
+def _path_names(path):
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+    return names
+
+
+# --------------------------------------------------------------------------
+# parameter rules
+# --------------------------------------------------------------------------
+
+# column-parallel (shard LAST dim over model): input projections
+_COL = {"wq", "wk", "wv", "wg", "wu", "w1", "Wr", "Wk", "Wv", "Wg", "Win",
+        "Wdt2", "conv_w", "lm_head", "patch_proj"}
+# row-parallel (shard SECOND-TO-LAST dim over model): output projections
+_ROW = {"wo", "wd", "w2", "Wo", "Wout", "Wdt1", "WB", "WC", "A_log"}
+# last-dim sharded vectors
+_VEC = {"bq", "bk", "bv", "b1", "dt_bias", "D", "conv_b"}
+# always replicated (norms, scalar-ish, small loras, router)
+_REP = {"w", "b", "mus", "mu_base", "mu_k", "mu_r", "w0", "u", "gn_w",
+        "gn_b", "W1", "W2", "dw1", "dw2", "router", "b2", "count", "scale",
+        "good_steps", "step"}
+
+
+def _param_rule(cfg, names, shape, mesh, mode="train"):
+    name = names[-1] if names else ""
+    stacked = any(n in _STACK_KEYS for n in names)
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+    nd = len(body)
+
+    def spec(*entries):
+        return P(*(lead + tuple(entries)))
+
+    # --- MoE expert tensors: (E, d, ff) / (E, ff, d) -----------------------
+    if "moe" in names and name in {"wg", "wu", "wd"} and nd == 3:
+        if not cfg.expert_parallel and mode == "train":
+            # §Perf iteration D2: REPLICATE small expert banks for TRAINING.
+            # TP-sharding the ff dim makes GSPMD replicate the client dim
+            # around the backward contraction psum (~1 TB/device on
+            # granite-moe); replication cuts the train-step all-reduce 32x.
+            # Serving re-shards (mode="serve" keeps ff-sharded TP, which
+            # measured 3x better on prefill where there is no backward).
+            return spec(None, None, None)
+        e_axis = (_maybe(mesh, "data", body[0])
+                  if cfg.expert_parallel else None)
+        if name in {"wg", "wu"}:
+            return spec(e_axis, None, _maybe(mesh, "model", body[2]))
+        return spec(e_axis, _maybe(mesh, "model", body[1]), None)
+
+    if name == "embed":
+        # NEVER vocab-shard the embedding table: the token lookup is a
+        # batched gather, and GSPMD rewrites gathers over a sharded dim as
+        # one-hot matmuls (+3x compute measured on granite-moe). d-sharding
+        # keeps the lookup local. (§Perf iteration D, refinement)
+        v, d = body
+        return spec(None, _maybe(mesh, "model", d))
+    if name == "lm_head":
+        # vocab-shard the head: a plain matmul — no gather — so vocab
+        # sharding here is pure win (kills the (B,S,V) fp32 logits
+        # all-reduce); the xent consumes sharded-V logits via one-hot
+        # contraction (layers.softmax_xent).
+        d, v = body
+        if _maybe(mesh, "model", v):
+            return spec(None, "model")
+        return spec(_maybe(mesh, "model", d), None)
+    if name in _REP:
+        return spec(*([None] * nd))
+    if name in _COL and nd >= 2:
+        return spec(*([None] * (nd - 1) + [_maybe(mesh, "model", body[-1])]))
+    if name in _ROW and nd >= 2:
+        return spec(*([None] * (nd - 2)
+                      + [_maybe(mesh, "model", body[-2]), None]))
+    if name in _VEC and nd == 1:
+        return spec(_maybe(mesh, "model", body[-1]))
+    # mlp detector leaves (w0,b0,...) and anything unknown: replicate
+    return spec(*([None] * nd))
+
+
+def param_pspecs(cfg, mesh, mode: str = "train"):
+    """Pytree of PartitionSpec matching api.init_params(cfg) structure.
+    mode: "train" | "serve" — non-EP MoE expert banks are replicated for
+    training but TP-sharded for serving (see _param_rule)."""
+    shapes = jax.eval_shape(
+        lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_rule(cfg, _path_names(path), leaf.shape,
+                                       mesh, mode),
+        shapes)
+
+
+def state_pspecs(cfg, mesh, optimizer):
+    """FLState spec: params/opt/ref_sign sharded, counters replicated.
+
+    The optimizer state is mapped STRUCTURALLY: adamw's m/v/master and
+    sgd's mom mirror the param tree exactly; adafactor's factored stats
+    drop the corresponding spec entry (row stat: last dim; col stat:
+    second-to-last dim)."""
+    from repro.core import fl_step
+    pspecs = param_pspecs(cfg, mesh)
+    pshapes = jax.eval_shape(
+        lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+    oshapes = jax.eval_shape(optimizer.init, pshapes)
+
+    def factored_stat_spec(spec, sds, stat):
+        entries = tuple(spec)
+        if "r" in stat:   # factored: r drops last dim, c drops dim -2
+            return {"r": P(*entries[:-1]),
+                    "c": P(*(entries[:-2] + entries[-1:]))}
+        return {"v": spec}
+
+    ospecs = {}
+    for key, sub in oshapes.items():
+        if key == "count":
+            ospecs[key] = P()
+        elif key == "stats":   # adafactor
+            ospecs[key] = jax.tree.map(
+                factored_stat_spec, pspecs, pshapes, sub,
+                is_leaf=lambda x: isinstance(x, P))
+        else:                  # m / v / master / mom mirror params
+            ospecs[key] = pspecs
+    metrics_spec = {"accepted": P(), "rounds": P()}
+    return fl_step.FLState(pspecs, ospecs, pspecs, P(), metrics_spec)
+
+
+# --------------------------------------------------------------------------
+# batch / cache rules
+# --------------------------------------------------------------------------
+
+def train_batch_pspecs(cfg, mesh, batch_shapes):
+    """Leading dim = clients over cfg.client_axes; dim1 over spare axis."""
+    client_axes = tuple(a for a in cfg.client_axes if a in mesh.axis_names)
+    lead = client_axes if client_axes else None
+    spare = "data" if "data" not in (client_axes or ()) else None
+
+    def rule(path, leaf):
+        nd = leaf.ndim
+        entries = [lead] + [None] * (nd - 1)
+        if spare and nd >= 2 and leaf.shape[1] % _axis_size(mesh, spare) == 0:
+            entries[1] = spare
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def _batch_axes(mesh, dim):
+    """Largest prefix of ('pod','data') that divides ``dim`` (§Perf
+    iteration F: leaving the pod axis idle on decode shapes made GSPMD
+    replicate-and-reduce the whole cache across pods)."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if n > 1 and dim % n == 0:
+        return tuple(axes) if len(axes) > 1 else axes[0]
+    return _maybe(mesh, "data", dim)
+
+
+def infer_batch_pspecs(mesh, batch_shapes):
+    """Prefill/decode token batches: batch dim over ('pod','data')."""
+    def rule(path, leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = _batch_axes(mesh, leaf.shape[0])
+        return P(*([b] + [None] * (leaf.ndim - 1)))
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def cache_pspecs(cfg, mesh, cache_shapes):
+    """Decode caches: (L, B, S, ...) KV -> batch over data, seq over model;
+    SSM states -> heads/channels over model."""
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if name == "step" or leaf.ndim <= 1:
+            return P()
+        if name in {"k", "v", "xk", "xv"}:      # (L, B, S, K, hd)
+            _, b, s = leaf.shape[:3]
+            return P(None, _batch_axes(mesh, b),
+                     _maybe(mesh, "model", s), None, None)
+        if name == "S":                          # rwkv (L, B, H, hd, hd)
+            _, b, h = leaf.shape[:3]
+            return P(None, _batch_axes(mesh, b),
+                     _maybe(mesh, "model", h), None, None)
+        if name in {"tshift", "cshift"}:         # (L, B, d)
+            _, b, d = leaf.shape
+            return P(None, _batch_axes(mesh, b), _maybe(mesh, "model", d))
+        if name == "h":                          # hybrid (L, B, di, n)
+            _, b, di, _n = leaf.shape
+            return P(None, _batch_axes(mesh, b),
+                     _maybe(mesh, "model", di), None)
+        if name == "conv":                       # (L, B, taps, di)
+            _, b, _t, di = leaf.shape
+            return P(None, _batch_axes(mesh, b), None,
+                     _maybe(mesh, "model", di))
+        return P(*([None] * leaf.ndim))
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def to_named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,164 @@
+"""Top-k mixture-of-experts FFN with capacity-based dispatch.
+
+Dispatch uses scatter/gather into a fixed (E, C, d) buffer (Switch/Mixtral
+style) so compiled FLOPs are proportional to *active* experts — the einsum
+one-hot dispatch tensor (T, E, C) is never materialized. Expert tensors are
+laid out (E, d, ff) so the expert dim can be sharded for expert parallelism
+(arctic-480b: E over the "data" axis, ff over "model").
+
+Aux loss is the standard Switch load-balance term
+``E * sum_e f_e * p_e`` (f_e = fraction of tokens routed to e, p_e = mean
+router prob of e).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def moe_params(cfg, key, dtype):
+    E, d, ff = cfg.num_experts, cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.dense_init(ks[0], (d, E), jnp.float32),
+        "wg": L.dense_init(ks[1], (E, d, ff), dtype),
+        "wu": L.dense_init(ks[2], (E, d, ff), dtype),
+        "wd": L.dense_init(ks[3], (E, ff, d), dtype),
+    }
+    if cfg.moe_dense_residual:
+        p["dense"] = L.ffn_params(cfg, ks[4], dtype)
+    return p
+
+
+def capacity(cfg, tokens: int) -> int:
+    c = int(cfg.capacity_factor * tokens * cfg.top_k / cfg.num_experts)
+    return max(4, min(c, tokens))
+
+
+# --------------------------------------------------------------------------
+# token<->slot permutations with custom VJPs: the BACKWARD of each gather
+# is ALSO a gather through the inverse permutation. Plain AD of a gather
+# emits a scatter into an unsharded zeros buffer, which GSPMD replicates
+# and all-reduces (43 GB per layer on granite-moe before this).
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _dispatch(k, xt, tok_for_slot, valid, slot_c, keep):
+    """xt: (T, d) -> slot-major (E*C, d); bwd gathers via slot_c."""
+    return xt[tok_for_slot] * valid[:, None].astype(xt.dtype)
+
+
+def _dispatch_fwd(k, xt, tok_for_slot, valid, slot_c, keep):
+    out = _dispatch(k, xt, tok_for_slot, valid, slot_c, keep)
+    return out, (slot_c, keep)
+
+
+def _dispatch_bwd(k, res, dxe):
+    slot_c, keep = res
+    d = dxe.shape[-1]
+    dxt = dxe[slot_c] * keep[:, None].astype(dxe.dtype)        # (Tk, d)
+    return (dxt.reshape(-1, k, d).sum(axis=1), None, None, None, None)
+
+
+_dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _combine(k, ye, w, slot_c, choice_for_slot, valid):
+    """ye: (E*C, d), w: (Tk,) -> (T, d); bwd gathers via choice_for_slot."""
+    yt = ye[slot_c] * w[:, None].astype(ye.dtype)
+    return yt.reshape(-1, k, ye.shape[-1]).sum(axis=1)
+
+
+def _combine_fwd(k, ye, w, slot_c, choice_for_slot, valid):
+    return _combine(k, ye, w, slot_c, choice_for_slot, valid), \
+        (ye, w, slot_c, choice_for_slot, valid)
+
+
+def _combine_bwd(k, res, dout):
+    ye, w, slot_c, choice_for_slot, valid = res
+    dyt = jnp.repeat(dout, k, axis=0)                           # (Tk, d)
+    vmask = valid[:, None].astype(dyt.dtype)
+    dye = (dyt[choice_for_slot] * vmask
+           * w[choice_for_slot][:, None].astype(dyt.dtype))
+    dw = jnp.sum(dyt.astype(jnp.float32)
+                 * ye[slot_c].astype(jnp.float32), axis=-1)
+    return dye.astype(ye.dtype), dw.astype(w.dtype), None, None, None
+
+
+_combine.defvjp(_combine_fwd, _combine_bwd)
+
+
+def moe_ffn(cfg, p, x):
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar fp32).
+
+    §Perf iteration D (EXPERIMENTS.md): dispatch is GATHER-based. The
+    original scatter of (E·C, d) token buffers had no sharding provenance
+    (jnp.zeros) so GSPMD replicated it and ALL-REDUCED 43 GB per layer.
+    Here only an int32/bool inverse-permutation of size E·C+1 is ever
+    scattered; token payloads move through gathers (sharding follows the
+    source), and the combine is a reshape-sum (tok_idx = repeat(arange)),
+    no scatter at all.
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+    T = B * S
+    C = capacity(cfg, T)
+    xt = x.reshape(T, d)
+
+    gates = jax.nn.softmax(xt.astype(jnp.float32) @ p["router"], axis=-1)  # (T,E)
+    topv, topi = jax.lax.top_k(gates, k)                                   # (T,k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) inside its expert's capacity buffer
+    flat_e = topi.reshape(T * k)                                # (Tk,)
+    mask = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)           # (Tk, E)
+    pos = jnp.cumsum(mask, axis=0) - mask                       # (Tk, E)
+    flat_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = flat_pos < C
+    # overflow routes to a dump slot (index E*C) so it never collides
+    slot = jnp.where(keep, flat_e * C + flat_pos, E * C)        # (Tk,)
+
+    # inverse permutation: which token (choice) fills each capacity slot
+    tok_idx = jnp.repeat(jnp.arange(T), k)
+    tok_for_slot = jnp.zeros((E * C + 1,), jnp.int32).at[slot].set(
+        tok_idx, mode="drop")
+    choice_for_slot = jnp.zeros((E * C + 1,), jnp.int32).at[slot].set(
+        jnp.arange(T * k), mode="drop")
+    valid = jnp.zeros((E * C + 1,), jnp.bool_).at[slot].set(
+        keep, mode="drop")
+    slot_c = jnp.minimum(slot, E * C - 1)
+
+    w = (topv.reshape(T * k) * keep).astype(x.dtype)            # (Tk,)
+    if cfg.moe_dispatch == "gather":
+        xe = _dispatch(k, xt, tok_for_slot[:E * C], valid[:E * C],
+                       slot_c, keep).reshape(E, C, d)
+    else:  # scatter path (measured alternative; see EXPERIMENTS §Perf D)
+        tok_all = jnp.repeat(jnp.arange(T), k)
+        xd = xt[tok_all] * keep[:, None].astype(x.dtype)
+        xe = jnp.zeros((E * C, d), x.dtype).at[
+            jnp.minimum(slot, E * C - 1)].add(
+            xd * keep[:, None].astype(x.dtype)).reshape(E, C, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["wu"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wd"]).reshape(E * C, d)
+
+    if cfg.moe_dispatch == "gather":
+        out = _combine(k, ye, w, slot_c, choice_for_slot[:E * C],
+                       valid[:E * C])
+    else:
+        yt = ye[jnp.minimum(slot, E * C - 1)] * w[:, None]
+        out = yt.reshape(T, k, d).sum(axis=1)
+
+    if cfg.moe_dense_residual:
+        out = out + L.ffn(cfg, p["dense"], xt)
+
+    # load-balance aux
+    f_e = jnp.mean(jax.nn.one_hot(topi, E, dtype=jnp.float32).sum(1), axis=0)  # (E,)
+    p_e = jnp.mean(gates, axis=0)
+    aux = E * jnp.sum(f_e / k * p_e)
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,151 @@
+"""Decoder-only transformer (dense, MoE, VLM families).
+
+Per-layer parameters are stacked on a leading layer axis and consumed via
+``jax.lax.scan``; the layer body is optionally wrapped in ``jax.checkpoint``
+(remat) for training. The same stack serves:
+
+  dense — llama-style (granite-34b, qwen2, stablelm, phi3)
+  moe   — FFN replaced by top-k mixture of experts (granite-moe, arctic)
+  vlm   — InternVL2: stubbed patch embeddings are projected and prepended
+          to the token embeddings (internvl2-2b)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _layer_init(cfg, key, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": L.norm_params(cfg, ks[0], cfg.d_model, dtype),
+        "attn": L.attn_params(cfg, ks[1], dtype),
+        "ln2": L.norm_params(cfg, ks[2], cfg.d_model, dtype),
+    }
+    if cfg.num_experts:
+        p["moe"] = moe_mod.moe_params(cfg, ks[3], dtype)
+    else:
+        p["ffn"] = L.ffn_params(cfg, ks[3], dtype)
+    return p
+
+
+def init_params(rng, cfg):
+    dtype = cfg.compute_dtype
+    k_emb, k_layers, k_head, k_proj = jax.random.split(rng, 4)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    params = {
+        "embed": L.embed_init(k_emb, (cfg.padded_vocab, cfg.d_model), dtype),
+        "layers": jax.vmap(lambda k: _layer_init(cfg, k, dtype))(layer_keys),
+        "final_norm": L.norm_params(cfg, k_head, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.padded_vocab), dtype)
+    if cfg.family == "vlm":
+        params["patch_proj"] = L.dense_init(k_proj, (cfg.d_model, cfg.d_model), dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# forward (training / prefill)
+# --------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg, batch):
+    x = params["embed"][batch["tokens"]]
+    if cfg.family == "vlm":
+        patches = batch["patch_embeds"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def forward(params, batch, cfg, *, return_cache: bool = False):
+    """Returns (logits, cache_or_None, aux_loss)."""
+    x = _embed_inputs(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+
+    def body(carry, lp):
+        h, aux = carry
+        a_in = L.apply_norm(cfg, h, lp["ln1"])
+        a_out, (k, v) = L.full_attention(
+            cfg, lp["attn"], a_in, positions=positions, causal=True,
+            sliding_window=cfg.sliding_window)
+        h = h + a_out
+        f_in = L.apply_norm(cfg, h, lp["ln2"])
+        if cfg.num_experts:
+            f_out, moe_aux = moe_mod.moe_ffn(cfg, lp["moe"], f_in)
+            aux = aux + moe_aux
+        else:
+            f_out = L.ffn(cfg, lp["ffn"], f_in)
+        h = h + f_out
+        ys = (k, v) if return_cache else None
+        return (h, aux), ys
+
+    if cfg.remat and not return_cache:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.float32(0.0)), params["layers"])
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    cache = None
+    if return_cache:
+        cache = {"k": caches[0], "v": caches[1],
+                 "step": jnp.asarray(S, jnp.int32)}
+    return logits, cache, aux
+
+
+def loss_fn(params, batch, cfg):
+    logits, _, aux = forward(params, batch, cfg)
+    if cfg.family == "vlm":  # drop patch positions from the LM loss
+        logits = logits[:, cfg.num_patches:]
+    xent = L.softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
+    return xent + cfg.router_aux_weight * aux
+
+
+def prefill(params, batch, cfg):
+    logits, cache, _ = forward(params, batch, cfg, return_cache=True)
+    return logits, cache
+
+
+# --------------------------------------------------------------------------
+# decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg, batch_size: int, seq_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    Sc = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    shape = (cfg.num_layers, batch_size, Sc, cfg.num_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "step": jnp.asarray(0, jnp.int32)}
+
+
+def decode_step(params, cache, batch, cfg):
+    """batch: {"tokens": (B,1)}. Returns (logits (B,1,V), new_cache)."""
+    x = params["embed"][batch["tokens"]]
+    step = cache["step"]
+
+    def body(h, lp_and_cache):
+        lp, ck, cv = lp_and_cache
+        a_in = L.apply_norm(cfg, h, lp["ln1"])
+        a_out, nk, nv = L.decode_attention(
+            cfg, lp["attn"], a_in, ck, cv, step,
+            sliding_window=cfg.sliding_window)
+        h = h + a_out
+        f_in = L.apply_norm(cfg, h, lp["ln2"])
+        if cfg.num_experts:
+            f_out, _ = moe_mod.moe_ffn(cfg, lp["moe"], f_in)
+        else:
+            f_out = L.ffn(cfg, lp["ffn"], f_in)
+        return h + f_out, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, {"k": nk, "v": nv, "step": step + 1}

@@ -1,0 +1,168 @@
+"""Whisper-tiny encoder-decoder BACKBONE (audio family).
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor
+is a STUB: ``input_specs()`` supplies precomputed frame embeddings of shape
+(B, encoder_seq, d_model). This module implements the transformer backbone
+that consumes them: a bidirectional encoder (sinusoidal positions, GELU
+MLP, LayerNorm) and a causal decoder with cross-attention (tied embeddings,
+as in Whisper [arXiv:2212.04356]).
+
+Decode carries a self-attention KV cache plus the PRE-PROJECTED encoder
+cross-attention KV (computed once at prefill, reused every step).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+def _enc_layer_init(cfg, key, dtype):
+    ks = jax.random.split(key, 4)
+    return {
+        "ln1": L.norm_params(cfg, ks[0], cfg.d_model, dtype),
+        "attn": L.attn_params(cfg, ks[1], dtype),
+        "ln2": L.norm_params(cfg, ks[2], cfg.d_model, dtype),
+        "ffn": L.ffn_params(cfg, ks[3], dtype),
+    }
+
+
+def _dec_layer_init(cfg, key, dtype):
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": L.norm_params(cfg, ks[0], cfg.d_model, dtype),
+        "self_attn": L.attn_params(cfg, ks[1], dtype),
+        "lnx": L.norm_params(cfg, ks[2], cfg.d_model, dtype),
+        "cross_attn": L.attn_params(cfg, ks[3], dtype),
+        "ln2": L.norm_params(cfg, ks[4], cfg.d_model, dtype),
+        "ffn": L.ffn_params(cfg, ks[5], dtype),
+    }
+
+
+def init_params(rng, cfg):
+    dtype = cfg.compute_dtype
+    k_emb, k_enc, k_dec, k_n = jax.random.split(rng, 4)
+    enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+    dec_keys = jax.random.split(k_dec, cfg.num_layers)
+    return {
+        "embed": L.embed_init(k_emb, (cfg.padded_vocab, cfg.d_model), dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(cfg, k, dtype))(enc_keys),
+        "enc_norm": L.norm_params(cfg, k_n, cfg.d_model, dtype),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(cfg, k, dtype))(dec_keys),
+        "final_norm": L.norm_params(cfg, k_n, cfg.d_model, dtype),
+    }
+
+
+def encode(params, enc_embeds, cfg):
+    """enc_embeds: (B, Se, d) stubbed conv-frontend output."""
+    Se = enc_embeds.shape[1]
+    x = enc_embeds.astype(cfg.compute_dtype) \
+        + L.sinusoidal_positions(Se, cfg.d_model).astype(cfg.compute_dtype)
+
+    def body(h, lp):
+        z = L.apply_norm(cfg, h, lp["ln1"])
+        a, _ = L.full_attention(cfg, lp["attn"], z, causal=False, use_rope=False)
+        h = h + a
+        z = L.apply_norm(cfg, h, lp["ln2"])
+        return h + L.ffn(cfg, lp["ffn"], z), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.apply_norm(cfg, x, params["enc_norm"])
+
+
+def _cross_kv(lp, enc_out, cfg):
+    """Pre-project encoder output to cross-attention K/V: (B,Se,K,hd)."""
+    B, Se, _ = enc_out.shape
+    K, hd = cfg.num_kv_heads, cfg.hd
+    k = enc_out @ lp["cross_attn"]["wk"]
+    v = enc_out @ lp["cross_attn"]["wv"]
+    if "bk" in lp["cross_attn"]:
+        k, v = k + lp["cross_attn"]["bk"], v + lp["cross_attn"]["bv"]
+    return k.reshape(B, Se, K, hd), v.reshape(B, Se, K, hd)
+
+
+def forward(params, batch, cfg, *, return_cache: bool = False):
+    enc_out = encode(params, batch["enc_embeds"], cfg)
+    x = params["embed"][batch["tokens"]]
+    T = x.shape[1]
+    x = x + L.sinusoidal_positions(T, cfg.d_model).astype(x.dtype)
+
+    def body(h, lp):
+        z = L.apply_norm(cfg, h, lp["ln1"])
+        a, (k, v) = L.full_attention(cfg, lp["self_attn"], z,
+                                     causal=True, use_rope=False)
+        h = h + a
+        z = L.apply_norm(cfg, h, lp["lnx"])
+        c, _ = L.full_attention(cfg, lp["cross_attn"], z, xkv=enc_out,
+                                causal=False, use_rope=False)
+        h = h + c
+        z = L.apply_norm(cfg, h, lp["ln2"])
+        h = h + L.ffn(cfg, lp["ffn"], z)
+        ys = None
+        if return_cache:
+            xk, xv = _cross_kv(lp, enc_out, cfg)
+            ys = (k, v, xk, xv)
+        return h, ys
+
+    if cfg.remat and not return_cache:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, caches = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = x @ params["embed"].T
+    cache = None
+    if return_cache:
+        cache = {"k": caches[0], "v": caches[1], "xk": caches[2],
+                 "xv": caches[3], "step": jnp.asarray(T, jnp.int32)}
+    return logits, cache, jnp.float32(0.0)
+
+
+def loss_fn(params, batch, cfg):
+    logits, _, _ = forward(params, batch, cfg)
+    return L.softmax_xent(logits[:, :-1], batch["labels"][:, 1:])
+
+
+def prefill(params, batch, cfg):
+    logits, cache, _ = forward(params, batch, cfg, return_cache=True)
+    return logits, cache
+
+
+def init_cache(cfg, batch_size: int, seq_len: int, dtype=None):
+    dtype = dtype or cfg.compute_dtype
+    Lyr, K, hd = cfg.num_layers, cfg.num_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((Lyr, batch_size, seq_len, K, hd), dtype),
+        "v": jnp.zeros((Lyr, batch_size, seq_len, K, hd), dtype),
+        "xk": jnp.zeros((Lyr, batch_size, cfg.encoder_seq, K, hd), dtype),
+        "xv": jnp.zeros((Lyr, batch_size, cfg.encoder_seq, K, hd), dtype),
+        "step": jnp.asarray(0, jnp.int32),
+    }
+
+
+def decode_step(params, cache, batch, cfg):
+    x = params["embed"][batch["tokens"]]
+    step = cache["step"]
+    x = x + L.sinusoidal_position_at(step, cfg.d_model).astype(x.dtype)
+
+    def body(h, lp_state):
+        lp, ck, cv, xk, xv = lp_state
+        z = L.apply_norm(cfg, h, lp["ln1"])
+        a, nk, nv = L.decode_attention(cfg, lp["self_attn"], z, ck, cv, step,
+                                       use_rope=False)
+        h = h + a
+        z = L.apply_norm(cfg, h, lp["lnx"])
+        c, _, _ = L.decode_attention(cfg, lp["cross_attn"], z, xk, xv, step,
+                                     cross=True)
+        h = h + c
+        z = L.apply_norm(cfg, h, lp["ln2"])
+        return h + L.ffn(cfg, lp["ffn"], z), (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = L.apply_norm(cfg, x, params["final_norm"])
+    logits = x @ params["embed"].T
+    return logits, {"k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"],
+                    "step": step + 1}

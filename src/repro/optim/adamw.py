@@ -1,0 +1,157 @@
+"""Optimizers (optax-like (init, update) pairs, implemented from scratch).
+
+``adamw``     — fp32 moments + fp32 master weights (mixed precision: the
+                param pytree may be bf16; master copies live in opt state).
+``adafactor`` — factored second moments, no first moment, no master copy;
+                used by the large archs (granite-34b, arctic-480b, rwkv6-7b)
+                where Adam's fp32 state would not fit v5e HBM.
+``sgd``       — momentum SGD (paper's local-training baseline).
+
+update(grads, state, params) -> (new_params, new_state). All arithmetic in
+fp32; returned params are cast back to the input param dtype.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: callable
+    update: callable
+
+
+def _cast_like(new, old):
+    return jax.tree.map(lambda n, o: n.astype(o.dtype), new, old)
+
+
+# --------------------------------------------------------------------------
+# AdamW (with master weights)
+# --------------------------------------------------------------------------
+
+def adamw(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+          keep_master=True):
+    def init(params):
+        f32 = lambda p: jnp.zeros_like(p, jnp.float32)
+        state = {
+            "m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+        if keep_master:
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update(grads, state, params, lr_now=None):
+        step_lr = lr if lr_now is None else lr_now
+        c = state["count"] + 1
+        bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+        ref = state.get("master", params)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            pf = p.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = step_lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            pf = pf - step - step_lr * weight_decay * pf
+            return m, v, pf
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], ref)
+        m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        pf = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_state = {"m": m, "v": v, "count": c}
+        if keep_master:
+            new_state["master"] = pf
+        return _cast_like(pf, params), new_state
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moment)
+# --------------------------------------------------------------------------
+
+def adafactor(lr=1e-3, decay=0.8, eps=1e-30, clip_threshold=1.0):
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def per_leaf(p):
+            if _factored(p.shape):
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+        return {"stats": jax.tree.map(per_leaf, params,
+                                      is_leaf=lambda x: hasattr(x, "shape")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr_now=None):
+        step_lr = lr if lr_now is None else lr_now
+        c = state["count"] + 1
+        beta = 1.0 - c.astype(jnp.float32) ** (-decay)
+
+        def upd(g, st, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if _factored(p.shape):
+                r = beta * st["r"] + (1 - beta) * g2.mean(-1)
+                cc = beta * st["c"] + (1 - beta) * g2.mean(-2)
+                denom = (r[..., None] * cc[..., None, :]
+                         / jnp.maximum(r.mean(-1)[..., None, None], eps))
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+                new_st = {"r": r, "c": cc}
+            else:
+                v = beta * st["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_st = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            pf = p.astype(jnp.float32) - step_lr * u
+            return new_st, pf
+
+        out = jax.tree.map(upd, grads, state["stats"], params,
+                           is_leaf=lambda x: isinstance(x, dict) and
+                           ("r" in x or "v" in x))
+        stats = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        pf = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        return _cast_like(pf, params), {"stats": stats, "count": c}
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------
+# SGD (momentum)
+# --------------------------------------------------------------------------
+
+def sgd(lr=1e-2, momentum=0.9):
+    def init(params):
+        return {"mom": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                    params)}
+
+    def update(grads, state, params, lr_now=None):
+        step_lr = lr if lr_now is None else lr_now
+
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return m, p.astype(jnp.float32) - step_lr * m
+
+        out = jax.tree.map(upd, grads, state["mom"], params)
+        mom = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        pf = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        return _cast_like(pf, params), {"mom": mom}
+
+    return Optimizer(init, update)
+
+
+def for_config(cfg, lr=1e-3):
+    if cfg.optimizer == "adafactor":
+        return adafactor(lr)
+    return adamw(lr, keep_master=(cfg.dtype != "float32"))

@@ -1,0 +1,60 @@
+"""Dynamic loss scaler — JAX analogue of torch.cuda.amp.GradScaler (§IV-A).
+
+The paper trains clients with autocast(float16) + GradScaler. On TPU we
+default to bf16 (no scaler needed), but the scaler is implemented and
+tested for fp16 parity: loss is multiplied by ``scale`` before grad;
+gradients are unscaled; if any gradient is non-finite the update is
+SKIPPED and the scale halves; after ``growth_interval`` consecutive good
+steps the scale doubles. Pure pytree state — safe inside jit.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ScalerState(NamedTuple):
+    scale: jnp.ndarray        # f32 scalar
+    good_steps: jnp.ndarray   # i32 scalar
+
+
+def init_scaler(init_scale: float = 2.0 ** 15) -> ScalerState:
+    return ScalerState(jnp.float32(init_scale), jnp.int32(0))
+
+
+def scale_loss(loss, state: ScalerState):
+    return loss * state.scale
+
+
+def unscale_grads(grads, state: ScalerState):
+    return jax.tree.map(lambda g: g.astype(jnp.float32) / state.scale, grads)
+
+
+def grads_finite(grads) -> jnp.ndarray:
+    leaves = jax.tree.leaves(grads)
+    ok = jnp.bool_(True)
+    for leaf in leaves:
+        ok &= jnp.all(jnp.isfinite(leaf))
+    return ok
+
+
+def next_state(state: ScalerState, finite: jnp.ndarray,
+               growth_interval: int = 200, growth: float = 2.0,
+               backoff: float = 0.5, max_scale: float = 2.0 ** 24) -> ScalerState:
+    good = jnp.where(finite, state.good_steps + 1, 0)
+    grow = good >= growth_interval
+    scale = jnp.where(
+        finite,
+        jnp.where(grow, jnp.minimum(state.scale * growth, max_scale), state.scale),
+        jnp.maximum(state.scale * backoff, 1.0))
+    good = jnp.where(grow, 0, good)
+    return ScalerState(scale, good)
+
+
+def apply_or_skip(finite, new_params, params, new_opt, opt_state):
+    """Keep old (params, opt_state) when grads were non-finite."""
+    sel = lambda a, b: jax.tree.map(
+        lambda x, y: jnp.where(finite, x, y), a, b)
+    return sel(new_params, params), sel(new_opt, opt_state)

@@ -1,0 +1,27 @@
+"""LR schedules (pure functions of step). Paper: "Adjust learning rate
+with scheduler" (Algorithm 1 line 25)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine(lr, warmup_steps, total_steps, final_frac=0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) /
+                     jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def step_decay(lr, decay_every, gamma=0.5):
+    def fn(step):
+        k = jnp.asarray(step, jnp.float32) // decay_every
+        return jnp.float32(lr) * gamma ** k
+    return fn

@@ -1,0 +1,106 @@
+"""Three-term roofline analysis from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / (chips × 197 TFLOP/s bf16)
+  memory term     = HLO_bytes / (chips × 819 GB/s HBM)
+  collective term = collective_bytes / (chips × 50 GB/s ICI)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (whole-module
+totals across all devices on this backend); collective_bytes from the HLO
+census. MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) — the ratio
+MODEL_FLOPS/HLO_FLOPs flags remat/redundancy waste. The dominant term is
+the bottleneck the §Perf loop iterates on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    useful_ratio: float          # MODEL_FLOPS / HLO_FLOPs
+    bytes_per_device: Optional[float] = None
+    op_counts: Optional[dict] = None
+
+    def as_row(self) -> str:
+        return (f"{self.arch:22s} {self.shape:11s} {self.mesh:9s} "
+                f"c={self.t_compute:.3e}s m={self.t_memory:.3e}s "
+                f"x={self.t_collective:.3e}s -> {self.dominant:10s} "
+                f"useful={self.useful_ratio:.2f}")
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D with N = active params, D = processed tokens (or samples)."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        d_tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * d_tokens
+    if shape.kind == "prefill":
+        d_tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * d_tokens       # forward only
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze(arch: str, shape, mesh_name: str, chips: int,
+            cost: dict, census: dict, cfg, memory_stats=None) -> Roofline:
+    # Quantities come from the loop-aware HLO analyzer (hlo_census.analyze)
+    # because XLA's cost_analysis counts while-loop bodies ONCE — a ~L×
+    # undercount for scanned layers and ~seq× for SSM time-scans. Both the
+    # analyzer and cost_analysis describe the PER-DEVICE partitioned
+    # program (verified: a (1024,1024)² matmul over 16 devices reports
+    # 2·1024³/16 flops), so roofline terms divide by a single chip's peak.
+    flops_dev = float(census.get("flops", 0.0) or 0.0)
+    bytes_dev = float(census.get("traffic_bytes", 0.0) or 0.0)
+    # fall back to cost_analysis if the text analyzer found nothing
+    if flops_dev == 0.0:
+        flops_dev = float(cost.get("flops", 0.0) or 0.0)
+    if bytes_dev == 0.0:
+        bytes_dev = float(cost.get("bytes accessed", 0.0) or 0.0)
+    coll_dev = float(census.get("collective_bytes", 0))
+    t_c = flops_dev / PEAK_FLOPS_BF16
+    t_m = bytes_dev / HBM_BW
+    t_x = coll_dev / ICI_BW
+    mf = model_flops(cfg, shape)
+    dominant = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                   key=lambda kv: kv[1])[0]
+    total_flops = flops_dev * chips
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=total_flops, hlo_bytes=bytes_dev * chips,
+        collective_bytes=coll_dev * chips,
+        model_flops=mf, t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        dominant=dominant,
+        useful_ratio=(mf / total_flops) if total_flops else 0.0,
+        bytes_per_device=memory_stats,
+        op_counts=census.get("op_counts"))
+
+
+def save_jsonl(path: str, rows):
+    with open(path, "a") as f:
+        for r in rows:
+            f.write(json.dumps(dataclasses.asdict(r)) + "\n")
+
+
+def load_jsonl(path: str):
+    rows = []
+    with open(path) as f:
+        for line in f:
+            if line.strip():
+                rows.append(json.loads(line))
+    return rows

@@ -1,0 +1,13 @@
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _jax_cpu_determinism():
+    # smoke tests and benches must see the single real CPU device
+    # (the dry-run forces 512 host devices in its own process only)
+    assert jax.default_backend() == "cpu"
+    np.random.seed(0)
+    yield

@@ -1,0 +1,76 @@
+"""Abstract tracing of every FULL-SIZE (arch × shape) step via
+jax.eval_shape — no device allocation, no XLA compile. This is the fast
+CI guard in front of the multi-pod dry-run: it catches shape/dtype bugs at
+production scale in seconds. The actual lowering+compile proof lives in
+repro.launch.dryrun (deliverable e)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.configs.shapes import SHAPES
+from repro.core import fl_step
+from repro.models import api
+from repro.optim import adamw as optim_mod
+
+COMBOS = [(a, s) for a in registry.ASSIGNED_ARCHS for s in SHAPES
+          if not (s == "long_500k" and a in registry.LONG_CTX_SKIP)]
+
+
+@pytest.mark.parametrize("arch,shape_name", COMBOS,
+                         ids=[f"{a}-{s}" for a, s in COMBOS])
+def test_full_config_step_traces(arch, shape_name):
+    cfg = registry.config_for_shape(arch, shape_name)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        opt = optim_mod.for_config(cfg)
+        specs = api.input_specs(cfg, shape, num_clients=16)
+        state = jax.eval_shape(
+            lambda: fl_step.init_state(jax.random.PRNGKey(0), cfg, opt))
+        step = fl_step.make_raw_step(cfg, opt, theta=0.65)
+        out_state, metrics = jax.eval_shape(step, state, specs["batch"])
+        assert metrics["loss"].dtype == jnp.float32
+        # state structure is preserved round-trip (donation-compatible)
+        assert jax.tree_util.tree_structure(out_state) \
+            == jax.tree_util.tree_structure(state)
+        for a, b in zip(jax.tree.leaves(out_state), jax.tree.leaves(state)):
+            assert a.shape == b.shape and a.dtype == b.dtype
+    elif shape.kind == "prefill":
+        specs = api.input_specs(cfg, shape)
+        params = jax.eval_shape(
+            lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+        logits, cache = jax.eval_shape(
+            lambda p, b: api.prefill(p, b, cfg), params, specs["batch"])
+        toks = specs["batch"]["tokens"].shape[-1]
+        expect = toks + (cfg.num_patches if cfg.family == "vlm" else 0)
+        assert logits.shape[:2] == (shape.global_batch, expect)
+        assert logits.shape[-1] == cfg.padded_vocab
+    else:
+        specs = api.input_specs(cfg, shape)
+        params = jax.eval_shape(
+            lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+        logits, new_cache = jax.eval_shape(
+            lambda p, c, b: api.decode_step(p, c, b, cfg),
+            params, specs["cache"], specs["batch"])
+        assert logits.shape == (shape.global_batch, 1, cfg.padded_vocab)
+        # steady-state serving: cache shapes must be invariant
+        for a, b in zip(jax.tree.leaves(new_cache),
+                        jax.tree.leaves(specs["cache"])):
+            assert a.shape == b.shape, (a.shape, b.shape)
+
+
+def test_long_500k_caches_are_subquadratic():
+    """No cache leaf may scale with the 512k context for windowed archs."""
+    for arch in registry.ASSIGNED_ARCHS:
+        if arch in registry.LONG_CTX_SKIP:
+            continue
+        cfg = registry.config_for_shape(arch, "long_500k")
+        shape = SHAPES["long_500k"]
+        specs = api.input_specs(cfg, shape)
+        total = sum(l.size * jnp.dtype(l.dtype).itemsize
+                    for l in jax.tree.leaves(specs["cache"])
+                    if hasattr(l, "size"))
+        # must be far below a full 512k KV cache for the same arch
+        full_kv = (cfg.num_layers * shape.global_batch * shape.seq_len
+                   * max(cfg.num_kv_heads, 1) * max(cfg.hd, 64) * 2 * 2)
+        assert total < full_kv / 10 or cfg.family in ("ssm", "hybrid"), arch

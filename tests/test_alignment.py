@@ -1,0 +1,111 @@
+"""Property tests for the paper's core mechanism (Algorithm 1):
+sign-alignment relevance + selective aggregation invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation, alignment
+
+
+def _tree(key, sizes):
+    return {f"w{i}": jax.random.normal(jax.random.fold_in(key, i), (s,))
+            for i, s in enumerate(sizes)}
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.lists(st.integers(1, 64),
+                                             min_size=1, max_size=5))
+def test_ratio_bounds(seed, sizes):
+    key = jax.random.PRNGKey(seed)
+    t = _tree(key, sizes)
+    ref = alignment.tree_sign(_tree(jax.random.fold_in(key, 99), sizes))
+    r = float(alignment.alignment_ratio(t, ref))
+    assert 0.0 <= r <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_self_alignment_is_one(seed):
+    key = jax.random.PRNGKey(seed)
+    t = _tree(key, [33, 17])
+    # exclude exact zeros (measure-zero for continuous draws anyway)
+    r = float(alignment.alignment_ratio(t, alignment.tree_sign(t)))
+    assert r == 1.0
+
+
+def test_negated_alignment_is_zero():
+    t = {"w": jnp.array([1.0, -2.0, 3.0])}
+    ref = alignment.tree_sign({"w": jnp.array([-1.0, 2.0, -3.0])})
+    assert float(alignment.alignment_ratio(t, ref)) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 8))
+def test_mask_monotone_in_theta(seed, C):
+    key = jax.random.PRNGKey(seed)
+    ratios = jax.random.uniform(key, (C,))
+    prev = None
+    for theta in (0.1, 0.3, 0.5, 0.7, 0.9):
+        m = alignment.selection_mask(ratios, theta)
+        if prev is not None:
+            assert float((m <= prev).all()), "mask must shrink as theta grows"
+        prev = m
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 6))
+def test_all_ones_mask_equals_fedavg(seed, C):
+    key = jax.random.PRNGKey(seed)
+    stacked = {"w": jax.random.normal(key, (C, 13)),
+               "b": jax.random.normal(jax.random.fold_in(key, 1), (C, 4, 3))}
+    ones = jnp.ones((C,), jnp.float32)
+    a = aggregation.masked_mean(stacked, ones)
+    b = aggregation.fedavg(stacked)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)
+
+
+def test_masked_mean_excludes_filtered_clients():
+    stacked = {"w": jnp.array([[1.0], [100.0], [3.0]])}
+    mask = jnp.array([1.0, 0.0, 1.0])
+    out = aggregation.masked_mean(stacked, mask)
+    np.testing.assert_allclose(np.asarray(out["w"]), [2.0], rtol=1e-6)
+
+
+def test_empty_mask_returns_zero_update():
+    stacked = {"w": jnp.ones((3, 5))}
+    out = aggregation.masked_mean(stacked, jnp.zeros((3,)))
+    assert float(jnp.abs(out["w"]).max()) < 1e-5
+
+
+def test_per_client_matches_scalar_path():
+    key = jax.random.PRNGKey(7)
+    C = 5
+    stacked = {"a": jax.random.normal(key, (C, 21)),
+               "b": jax.random.normal(jax.random.fold_in(key, 1), (C, 3, 9))}
+    ref = alignment.tree_sign(
+        {"a": jax.random.normal(jax.random.fold_in(key, 2), (21,)),
+         "b": jax.random.normal(jax.random.fold_in(key, 3), (3, 9))})
+    vec = alignment.per_client_alignment(stacked, ref)
+    for i in range(C):
+        one = jax.tree.map(lambda x, i=i: x[i], stacked)
+        np.testing.assert_allclose(
+            float(vec[i]), float(alignment.alignment_ratio(one, ref)),
+            rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.0, 50.0))
+def test_staleness_weight_decreasing(tau):
+    a0 = float(aggregation.staleness_weight(tau))
+    a1 = float(aggregation.staleness_weight(tau + 1.0))
+    assert a1 < a0 <= 0.6 + 1e-6
+    assert a1 > 0.0
+
+
+def test_async_update_convex_combination():
+    g = {"w": jnp.zeros((4,))}
+    c = {"w": jnp.ones((4,))}
+    out = aggregation.apply_async_update(g, c, 0.25)
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.25, rtol=1e-6)

@@ -1,0 +1,98 @@
+"""Checkpoint I/O roundtrips + Weibull adaptive-interval policy (§IV-C)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import io
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import checkpoint_policy as cp
+
+
+def test_io_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16),
+                  "d": jnp.asarray(7, jnp.int32)}}
+    path = str(tmp_path / "ckpt.msgpack")
+    io.save(path, tree)
+    back = io.restore(path, jax.tree.map(jnp.zeros_like, tree))
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_io_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "c.msgpack")
+    io.save(path, {"a": jnp.ones((3,))})
+    with pytest.raises(ValueError):
+        io.restore(path, {"a": jnp.ones((4,))})
+
+
+def test_weibull_cdf_properties():
+    assert cp.weibull_cdf(0.0, 10.0, 1.5) == 0.0
+    assert 0.999 < cp.weibull_cdf(1e6, 10.0, 1.5) <= 1.0
+    t = np.linspace(0.1, 50, 100)
+    f = cp.weibull_cdf(t, 10.0, 1.5)
+    assert np.all(np.diff(f) >= 0), "CDF must be monotone"
+
+
+def test_interval_shrinks_with_failure_rate():
+    """Higher failure rate (smaller λ) -> checkpoint more often."""
+    t_stable = cp.optimal_interval(1000.0, 5.0, lam=10000.0, k=1.2)
+    t_flaky = cp.optimal_interval(1000.0, 5.0, lam=20.0, k=1.2)
+    assert t_flaky < t_stable
+
+
+def test_interval_grows_with_write_cost():
+    """Expensive checkpoint writes -> amortize over longer intervals."""
+    t_cheap = cp.optimal_interval(1000.0, 5.0, lam=50.0, k=1.2,
+                                  write_cost=0.1)
+    t_costly = cp.optimal_interval(1000.0, 5.0, lam=50.0, k=1.2,
+                                   write_cost=10.0)
+    assert t_costly > t_cheap
+
+
+def test_interval_young_daly_form():
+    """With exponential failures the optimum ~ sqrt(2·t_w·MTBF)."""
+    lam, tw = 100.0, 0.5
+    t = cp.optimal_interval(10000.0, 5.0, lam=lam, k=1.0, write_cost=tw)
+    expected = (2 * tw * lam) ** 0.5
+    assert 0.7 * expected < t < 1.4 * expected
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.floats(1.0, 200.0), st.floats(0.5, 3.0), st.integers(5, 60),
+       st.integers(0, 2 ** 31 - 1))
+def test_weibull_fit_recovers_scale(lam, k, n, seed):
+    rng = np.random.default_rng(seed)
+    samples = lam * rng.weibull(k, size=n * 10)
+    lam_hat, k_hat = cp.fit_weibull(samples)
+    # loose recovery bounds (MLE over a grid of k)
+    assert 0.4 * lam < lam_hat < 2.5 * lam
+    assert 0.3 * k < k_hat < 3.0 * k
+
+
+def test_fit_weibull_degenerate_inputs():
+    lam, k = cp.fit_weibull([])
+    assert lam > 1e8          # "no failures" -> effectively never checkpoint
+    lam1, _ = cp.fit_weibull([5.0])
+    assert lam1 == 5.0
+
+
+def test_manager_adapts_interval(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), total_time=1000.0,
+                            recovery_time=5.0)
+    before = mgr.interval
+    for t in np.cumsum(np.full(20, 3.0)):   # failures every 3s
+        mgr.record_failure(float(t))
+    assert mgr.interval < before
+    tree = {"w": jnp.ones((3,))}
+    assert mgr.maybe_save(tree, now=0.0)
+    assert not mgr.maybe_save(tree, now=mgr.interval * 0.1)
+    assert mgr.maybe_save(tree, now=mgr.interval * 1.1)
+    back = mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_array_equal(np.asarray(back["w"]), 1.0)
+    assert os.path.exists(mgr.path())

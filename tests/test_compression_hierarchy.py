@@ -1,0 +1,114 @@
+"""Beyond-paper extensions: error-feedback quantized updates + hierarchical
+cross-pod selective sync."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression, hierarchy
+
+
+def _tree(key):
+    return {"w": jax.random.normal(key, (5, 37)) * 0.01,
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (11,)) * 0.01}
+
+
+class TestCompression:
+    def test_roundtrip_error_bounded(self):
+        key = jax.random.PRNGKey(0)
+        upd = _tree(key)
+        err = compression.init_error_state(upd)
+        q, s, n, new_err = compression.compress_update(upd, err)
+        back = compression.decompress_update(q, s, upd)
+        for a, b, e in zip(jax.tree.leaves(upd), jax.tree.leaves(back),
+                           jax.tree.leaves(new_err)):
+            np.testing.assert_allclose(np.asarray(a),
+                                       np.asarray(b) + np.asarray(e),
+                                       rtol=1e-5, atol=1e-7)
+
+    def test_error_feedback_removes_bias(self):
+        """Mean of EF-compressed updates converges to the true mean."""
+        key = jax.random.PRNGKey(1)
+        g = _tree(key)                       # constant update every round
+        err = compression.init_error_state(g)
+        acc = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), g)
+        R = 50
+        for _ in range(R):
+            q, s, n, err = compression.compress_update(g, err)
+            back = compression.decompress_update(q, s, g)
+            acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                               acc, back)
+        for a, x in zip(jax.tree.leaves(acc), jax.tree.leaves(g)):
+            # accumulated dequantized sum ~ R * g (bias killed by EF)
+            np.testing.assert_allclose(np.asarray(a) / R, np.asarray(x),
+                                       rtol=0.02, atol=5e-5)
+
+    def test_transport_is_4x_smaller(self):
+        key = jax.random.PRNGKey(2)
+        upd = {"w": jax.random.normal(key, (4096,))}
+        err = compression.init_error_state(upd)
+        q, s, n, _ = compression.compress_update(upd, err)
+        assert compression.transport_bytes(q, s) < 4096 * 4 / 3.5
+        assert compression.compression_ratio(upd) > 3.5
+
+
+class TestHierarchy:
+    def _pods(self, P=4, seed=0, spread=0.01):
+        key = jax.random.PRNGKey(seed)
+        base = _tree(key)
+        return jax.tree.map(
+            lambda x: x[None] + spread * jax.random.normal(
+                jax.random.fold_in(key, 7), (P,) + x.shape), base), base
+
+    def test_no_sync_until_due(self):
+        pods, base = self._pods()
+        st = hierarchy.init_pod_sync(base)
+        new_pods, st2, m = hierarchy.maybe_pod_sync(pods, st, sync_every=5)
+        assert float(m["synced"]) == 0.0
+        for a, b in zip(jax.tree.leaves(new_pods), jax.tree.leaves(pods)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(st2.rounds_since_sync) == 1
+
+    def test_sync_broadcasts_consensus(self):
+        pods, base = self._pods()
+        st = hierarchy.init_pod_sync(base)
+        new_pods, st2, m = hierarchy.maybe_pod_sync(pods, st, sync_every=1)
+        assert float(m["synced"]) == 1.0
+        for leaf in jax.tree.leaves(new_pods):
+            # all pods identical after sync
+            ref = np.asarray(leaf[0], np.float32)
+            for p in range(leaf.shape[0]):
+                np.testing.assert_allclose(np.asarray(leaf[p], np.float32),
+                                           ref, rtol=1e-5, atol=1e-6)
+        assert int(st2.rounds_since_sync) == 0
+
+    def test_sync_mean_when_bootstrap(self):
+        """First sync (no reference) = plain mean of pod deltas."""
+        pods, base = self._pods(P=2, spread=0.5)
+        st = hierarchy.init_pod_sync(base)
+        new_pods, _, m = hierarchy.maybe_pod_sync(pods, st, sync_every=1)
+        want = jax.tree.map(lambda x: x.mean(0), pods)
+        for a, b in zip(jax.tree.leaves(new_pods), jax.tree.leaves(want)):
+            np.testing.assert_allclose(np.asarray(a[0], np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_divergent_pod_filtered_after_reference(self):
+        pods, base = self._pods(P=4, spread=0.01)
+        st = hierarchy.init_pod_sync(base)
+        pods1, st, _ = hierarchy.maybe_pod_sync(pods, st, sync_every=1)
+        # move 3 pods along +delta, 1 pod opposite
+        delta = jax.tree.map(lambda x: 0.05 * jnp.sign(
+            jax.random.normal(jax.random.PRNGKey(9), x.shape[1:])), pods1)
+        moved = jax.tree.map(
+            lambda p, d: p + d[None] * jnp.where(
+                jnp.arange(p.shape[0]).reshape((-1,) + (1,) * (p.ndim - 1))
+                == 3, -1.0, 1.0), pods1, delta)
+        # set the reference to the +delta direction
+        st = st._replace(
+            global_ref_sign=jax.tree.map(
+                lambda d: jnp.sign(d).astype(jnp.int8), delta),
+            rounds_since_sync=jnp.asarray(3, jnp.int32))
+        _, _, m = hierarchy.maybe_pod_sync(moved, st, sync_every=1,
+                                           theta=0.65)
+        assert float(m["synced"]) == 1.0
+        assert float(m["pod_accept"]) == 0.75, "the divergent pod must be cut"

@@ -1,0 +1,82 @@
+"""Production mesh-mapped FL step invariants (core/fl_step.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import anomaly_mlp
+from repro.core import fl_step
+from repro.optim import adamw as optim_mod
+
+CFG = anomaly_mlp.CONFIG.replace(mlp_hidden=(16, 8), num_features=10,
+                                 num_classes=3)
+
+
+def _batch(C=4, B=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"x": jnp.asarray(rng.normal(size=(C, B, CFG.num_features)),
+                             jnp.float32),
+            "y": jnp.asarray(rng.integers(0, CFG.num_classes, size=(C, B)))}
+
+
+def test_theta_none_is_fedavg():
+    """mask forced to ones must equal the no-filter baseline exactly."""
+    opt = optim_mod.sgd(1e-2)
+    s0 = fl_step.init_state(jax.random.PRNGKey(0), CFG, opt)
+    step_f = fl_step.build_fl_train_step(CFG, opt, theta=None, donate=False)
+    step_t = fl_step.build_fl_train_step(CFG, opt, theta=0.0, donate=False)
+    b = _batch()
+    s1, m1 = step_f(s0, b)
+    s2, m2 = step_t(s0, b)
+    for a, c in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c), rtol=1e-6)
+
+
+def test_filtering_changes_aggregate_when_masked():
+    opt = optim_mod.sgd(1e-2)
+    s0 = fl_step.init_state(jax.random.PRNGKey(0), CFG, opt)
+    step = fl_step.build_fl_train_step(CFG, opt, theta=0.65, donate=False)
+    b = _batch()
+    s1, m1 = step(s0, b)          # bootstrap round accepts all
+    assert float(m1["accept_rate"]) == 1.0
+    s2, m2 = step(s1, b)
+    assert 0.0 <= float(m2["accept_rate"]) <= 1.0
+    assert np.isfinite(float(m2["loss"]))
+    # bytes metric: sent <= baseline
+    assert float(m2["bytes_sent"]) <= float(m2["bytes_baseline"]) + 1e-6
+
+
+def test_no_pass_fallback_keeps_training():
+    """If no client passes theta, the fallback accepts all (no stall)."""
+    opt = optim_mod.sgd(1e-2)
+    s0 = fl_step.init_state(jax.random.PRNGKey(0), CFG, opt)
+    step = fl_step.build_fl_train_step(CFG, opt, theta=1.01, donate=False)
+    b = _batch()
+    s1, _ = step(s0, b)
+    s2, m2 = step(s1, b)
+    assert float(m2["accept_rate"]) == 0.0       # nobody passes theta>1
+    moved = any(not np.allclose(np.asarray(x), np.asarray(y))
+                for x, y in zip(jax.tree.leaves(s1.params),
+                                jax.tree.leaves(s2.params)))
+    assert moved, "fallback must keep the global model moving"
+
+
+def test_loss_decreases_over_rounds():
+    opt = optim_mod.sgd(5e-2)
+    s = fl_step.init_state(jax.random.PRNGKey(0), CFG, opt)
+    step = fl_step.build_fl_train_step(CFG, opt, theta=0.55, donate=False)
+    losses = []
+    for i in range(15):
+        s, m = step(s, _batch(seed=i % 3))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-3:]) < np.mean(losses[:3])
+
+
+def test_ref_sign_updates():
+    opt = optim_mod.sgd(1e-2)
+    s0 = fl_step.init_state(jax.random.PRNGKey(0), CFG, opt)
+    assert all(int(jnp.abs(l).max()) == 0
+               for l in jax.tree.leaves(s0.ref_sign))
+    step = fl_step.build_fl_train_step(CFG, opt, theta=0.65, donate=False)
+    s1, _ = step(s0, _batch())
+    nonzero = sum(int(jnp.abs(l).sum()) for l in jax.tree.leaves(s1.ref_sign))
+    assert nonzero > 0

@@ -1,0 +1,93 @@
+"""Flash-attention Pallas kernel vs oracles + the §Perf backend findings
+kept as executable documentation."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attn import flash_attention, flash_bytes
+from repro.models import layers as L
+
+
+def _naive(q, k, v, causal):
+    S = q.shape[1]
+    hd = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(S)[None, :]
+        s = jnp.where(j <= i, s, -1e30)
+    return jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(s, -1),
+                      v.astype(jnp.float32))
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("S", [256, 512])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_matches_naive(causal, S, dtype):
+    key = jax.random.PRNGKey(0)
+    BH, hd = 4, 64
+    q = jax.random.normal(key, (BH, S, hd)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (BH, S, hd)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (BH, S, hd)).astype(dtype)
+    got = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128)
+    want = _naive(q, k, v, causal)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_blockwise_oracle_matches_naive_gqa():
+    """The XLA blockwise path is the kernel's GQA oracle (sliding window)."""
+    key = jax.random.PRNGKey(1)
+    B, S, K, G, hd = 2, 1024, 2, 3, 32
+    q = jax.random.normal(key, (B, S, K * G, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, hd))
+
+    def naive(sw):
+        s = L._gqa_scores(q, k)
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(S)[None, :]
+        mask = j <= i
+        if sw:
+            mask &= (i - j) < sw
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        return L._gqa_out(jax.nn.softmax(s, -1), v, jnp.float32)
+
+    for sw in (None, 200):
+        got = L.blockwise_attention(q, k, v, causal=True, sliding_window=sw,
+                                    out_dtype=jnp.float32, block=256)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(naive(sw)),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_blockwise_grad_flows():
+    key = jax.random.PRNGKey(2)
+    B, S, H, hd = 1, 512, 2, 32
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    g = jax.grad(lambda q: L.blockwise_attention(
+        q, k, v, causal=True, out_dtype=jnp.float32).sum())(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_flash_traffic_model_beats_naive():
+    """The kernel's HBM model must beat naive S² scores for real shapes."""
+    B, S, H, hd = 16, 4096, 25, 64          # hymba train, per device
+    naive_scores = B * H * S * S * 4        # fp32 scores, one materialization
+    assert flash_bytes(B, S, H, hd) < naive_scores / 30
+
+
+def test_backend_gather_limitation_microrepro():
+    """§Perf P-D finding: batched gathers are not partitioned along batch
+    dims by this backend's SPMD — executable documentation. If this test
+    ever FAILS (no all-gather emitted), the MoE dispatch note in
+    EXPERIMENTS.md should be revisited."""
+    if jax.device_count() < 2:
+        pytest.skip("needs multi-device SPMD (dry-run process only)")

@@ -1,0 +1,127 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs the
+ref.py pure-jnp oracles (interpret mode executes kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation, alignment
+from repro.kernels import masked_agg as ma
+from repro.kernels import ops, ref
+from repro.kernels import quantize as qz
+from repro.kernels import sign_align as sa
+
+SHAPES = [(8, ops.LANE), (16, ops.LANE), (40, ops.LANE)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_sign_align_counts(shape, dtype):
+    key = jax.random.PRNGKey(0)
+    g = _rand(key, shape, dtype)
+    r = jnp.sign(_rand(jax.random.fold_in(key, 1), shape, jnp.float32)) \
+        .astype(jnp.int8)
+    np.testing.assert_allclose(
+        np.asarray(sa.sign_align_counts(g, r)),
+        np.asarray(ref.sign_align_counts(g, r)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("C", [1, 4, 16])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_per_client_sign_align(C, dtype):
+    key = jax.random.PRNGKey(1)
+    u = _rand(key, (C, 16, ops.LANE), dtype)
+    r = jnp.sign(_rand(jax.random.fold_in(key, 2), (16, ops.LANE),
+                       jnp.float32)).astype(jnp.int8)
+    np.testing.assert_allclose(
+        np.asarray(sa.per_client_sign_align(u, r)),
+        np.asarray(ref.per_client_sign_align(u, r)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("C", [2, 8])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_masked_agg(C, shape):
+    key = jax.random.PRNGKey(2)
+    u = _rand(key, (C,) + shape, jnp.float32)
+    w = jax.nn.softmax(_rand(jax.random.fold_in(key, 3), (C,), jnp.float32))
+    np.testing.assert_allclose(np.asarray(ma.masked_agg(u, w)),
+                               np.asarray(ref.masked_agg(u, w)),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_update(dtype):
+    key = jax.random.PRNGKey(3)
+    p = _rand(key, (16, ops.LANE), dtype)
+    u = _rand(jax.random.fold_in(key, 4), (4, 16, ops.LANE), jnp.float32)
+    w = jnp.array([0.3, 0.0, 0.5, 0.2]) * 0.01
+    got = ma.fused_update(p, u, w)
+    want = ref.fused_update(p, u, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-6)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_quantize_roundtrip(shape):
+    key = jax.random.PRNGKey(4)
+    x = _rand(key, shape, jnp.float32) * 3.0
+    q, s = qz.quantize_q8(x)
+    q2, s2 = ref.quantize_q8(x)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s2), rtol=1e-6)
+    back = qz.dequantize_q8(q, s)
+    # quantization error bounded by scale/2 per element
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    assert np.all(err <= np.asarray(s) * 0.51 + 1e-9)
+
+
+def test_quantize_zero_row_safe():
+    x = jnp.zeros((8, ops.LANE), jnp.float32)
+    q, s = qz.quantize_q8(x)
+    assert np.all(np.asarray(q) == 0)
+    assert np.all(np.isfinite(np.asarray(s)))
+
+
+# ---------------------------------------------------------------------------
+# tree-level ops vs the pure-jnp core (hypothesis property sweeps)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 400), st.integers(0, 2 ** 31 - 1))
+def test_ops_ratio_matches_core(n_leaves, leaf_size, seed):
+    key = jax.random.PRNGKey(seed)
+    tree = {f"p{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                       (leaf_size + i,))
+            for i in range(n_leaves)}
+    refsign = alignment.tree_sign(
+        jax.tree.map(lambda x: x * 0.7 + 0.05, tree))
+    np.testing.assert_allclose(
+        np.asarray(ops.sign_align_ratio(tree, refsign)),
+        np.asarray(alignment.alignment_ratio(tree, refsign)), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+def test_ops_masked_agg_matches_core(C, seed):
+    key = jax.random.PRNGKey(seed)
+    tree = {"a": jax.random.normal(key, (37,)),
+            "b": jax.random.normal(jax.random.fold_in(key, 1), (5, 11))}
+    stacked = jax.tree.map(
+        lambda x: jnp.stack([x * (i + 1) for i in range(C)]), tree)
+    mask = (jax.random.uniform(jax.random.fold_in(key, 2), (C,)) > 0.4) \
+        .astype(jnp.float32)
+    if float(mask.sum()) == 0:
+        mask = mask.at[0].set(1.0)
+    got = ops.masked_aggregate(stacked, mask)
+    want = aggregation.masked_mean(stacked, mask)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)

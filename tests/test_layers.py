@@ -1,0 +1,149 @@
+"""Layer-primitive properties: RoPE, norms, GQA, sliding windows, xent."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+
+class _Cfg:
+    rope_fraction = 1.0
+    rope_theta = 10000.0
+    num_heads = 4
+    num_kv_heads = 2
+    hd = 16
+    num_layers = 2
+    d_model = 32
+    qkv_bias = False
+    mlp_act = "swiglu"
+    d_ff = 64
+
+
+def test_rope_preserves_norm():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (2, 8, 4, 16))
+    pos = jnp.arange(8)[None, :]
+    out = L.apply_rope(x, pos, 1.0, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(out), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_position_invariance():
+    """q·k after RoPE depends only on relative distance."""
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 32))
+
+    def dot_at(pq, pk):
+        qr = L.apply_rope(q, jnp.array([[pq]]), 1.0, 1e4)
+        kr = L.apply_rope(k, jnp.array([[pk]]), 1.0, 1e4)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(dot_at(3, 1) - dot_at(103, 101)) < 1e-3
+    assert abs(dot_at(0, 0) - dot_at(50, 50)) < 1e-3
+
+
+def test_partial_rope_leaves_tail_untouched():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (1, 4, 2, 16))
+    out = L.apply_rope(x, jnp.arange(4)[None], 0.25, 1e4)
+    np.testing.assert_array_equal(np.asarray(out[..., 4:]),
+                                  np.asarray(x[..., 4:]))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_rmsnorm_unit_rms(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, 17)) * 7.0
+    out = L.rmsnorm(x, jnp.ones((17,)))
+    rms = np.sqrt(np.mean(np.asarray(out, np.float32) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_layernorm_moments():
+    x = jax.random.normal(jax.random.PRNGKey(3), (5, 33)) * 4 + 2
+    out = np.asarray(L.layernorm(x, jnp.ones((33,)), jnp.zeros((33,))),
+                     np.float32)
+    np.testing.assert_allclose(out.mean(-1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(out.std(-1), 1.0, rtol=2e-2)
+
+
+def test_gqa_equals_repeated_kv_mha():
+    """Grouped einsum must equal repeating KV heads into full MHA."""
+    cfg = _Cfg()
+    key = jax.random.PRNGKey(4)
+    B, S = 2, 10
+    q = jax.random.normal(key, (B, S, cfg.num_heads, cfg.hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, S, cfg.num_kv_heads, cfg.hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (B, S, cfg.num_kv_heads, cfg.hd))
+    s_grouped = L._gqa_scores(q, k)                      # (B,K,G,S,S)
+    G = cfg.num_heads // cfg.num_kv_heads
+    k_rep = jnp.repeat(k, G, axis=2)
+    s_full = jnp.einsum("bqhd,bshd->bhqs", q, k_rep) / math.sqrt(cfg.hd)
+    np.testing.assert_allclose(
+        np.asarray(s_grouped.reshape(B, cfg.num_heads, S, S)),
+        np.asarray(s_full), rtol=1e-5, atol=1e-6)
+
+
+def test_causal_mask_blocks_future():
+    """Changing a future token must not change past logits."""
+    cfg = _Cfg()
+    key = jax.random.PRNGKey(5)
+    p = L.attn_params(cfg, key, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 9), (1, 6, 32))
+    out1, _ = L.full_attention(cfg, p, x)
+    x2 = x.at[0, 5].set(99.0)
+    out2, _ = L.full_attention(cfg, p, x2)
+    np.testing.assert_allclose(np.asarray(out1[0, :5]),
+                               np.asarray(out2[0, :5]), rtol=1e-4, atol=1e-5)
+
+
+def test_sliding_window_blocks_distant_past():
+    cfg = _Cfg()
+    key = jax.random.PRNGKey(6)
+    p = L.attn_params(cfg, key, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 8), (1, 12, 32))
+    out1, _ = L.full_attention(cfg, p, x, sliding_window=3)
+    x2 = x.at[0, 0].set(50.0)                # outside window of position 11
+    out2, _ = L.full_attention(cfg, p, x2, sliding_window=3)
+    np.testing.assert_allclose(np.asarray(out1[0, -1]),
+                               np.asarray(out2[0, -1]), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 40))
+def test_xent_matches_gather_reference(seed, V):
+    key = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(key, (3, 7, V))
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (3, 7), 0, V)
+    got = float(L.softmax_xent(logits, labels))
+    lf = np.asarray(logits, np.float64)
+    lse = np.log(np.exp(lf - lf.max(-1, keepdims=True)).sum(-1)) \
+        + lf.max(-1)
+    gold = np.take_along_axis(lf, np.asarray(labels)[..., None], -1)[..., 0]
+    want = float((lse - gold).mean())
+    assert abs(got - want) < 1e-4
+
+
+def test_xent_mask():
+    logits = jnp.zeros((1, 4, 5))
+    labels = jnp.zeros((1, 4), jnp.int32)
+    mask = jnp.array([[1.0, 1.0, 0.0, 0.0]])
+    full = float(L.softmax_xent(logits, labels))
+    masked = float(L.softmax_xent(logits, labels, mask))
+    np.testing.assert_allclose(full, masked, rtol=1e-6)  # uniform logits
+
+
+def test_sinusoidal_position_at_matches_table():
+    table = L.sinusoidal_positions(16, 32)
+    for pos in (0, 3, 15):
+        np.testing.assert_allclose(
+            np.asarray(L.sinusoidal_position_at(pos, 32)),
+            np.asarray(table[pos]), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,110 @@
+"""Optimizers, schedules, dynamic loss scaler (paper's GradScaler analog)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw as optim_mod
+from repro.optim import scaler as sc
+from repro.optim import schedule
+
+
+@pytest.mark.parametrize("make", [
+    lambda: optim_mod.adamw(1e-1),
+    lambda: optim_mod.adafactor(5e-1),
+    lambda: optim_mod.sgd(1e-1),
+])
+def test_optimizer_descends_quadratic(make):
+    opt = make()
+    params = {"w": jnp.array([3.0, -2.0, 1.5])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        grads = jax.grad(loss)(params)
+        params, state = opt.update(grads, state, params)
+    assert float(loss(params)) < 0.1 * l0
+
+
+def test_adamw_master_weights_bf16():
+    opt = optim_mod.adamw(1e-2, keep_master=True)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["master"]["w"].dtype == jnp.float32
+    grads = {"w": jnp.full((4,), 1e-4, jnp.float32)}
+    p2, s2 = opt.update(grads, state, params)
+    assert p2["w"].dtype == jnp.bfloat16
+    # master accumulates sub-bf16 steps even when bf16 params round
+    assert float(jnp.abs(s2["master"]["w"] - 1.0).max()) > 0
+
+
+def test_adafactor_memory_shapes():
+    opt = optim_mod.adafactor(1e-2)
+    params = {"m": jnp.ones((8, 16)), "v": jnp.ones((5,))}
+    state = opt.init(params)
+    assert state["stats"]["m"]["r"].shape == (8,)
+    assert state["stats"]["m"]["c"].shape == (16,)
+    assert state["stats"]["v"]["v"].shape == (5,)
+
+
+def test_schedules():
+    fn = schedule.cosine(1.0, warmup_steps=10, total_steps=100)
+    assert float(fn(0)) == 0.0
+    assert abs(float(fn(10)) - 1.0) < 0.11
+    assert float(fn(100)) <= 0.11
+    sd = schedule.step_decay(1.0, decay_every=10, gamma=0.5)
+    assert float(sd(25)) == 0.25
+
+
+class TestScaler:
+    def test_overflow_skips_and_halves(self):
+        state = sc.init_scaler(1024.0)
+        grads = {"w": jnp.array([jnp.inf, 1.0])}
+        finite = sc.grads_finite(grads)
+        assert not bool(finite)
+        ns = sc.next_state(state, finite)
+        assert float(ns.scale) == 512.0
+        params = {"w": jnp.zeros(2)}
+        new_params = {"w": jnp.ones(2)}
+        kept, _ = sc.apply_or_skip(finite, new_params, params, {}, {})
+        np.testing.assert_allclose(np.asarray(kept["w"]), 0.0)
+
+    def test_growth_after_interval(self):
+        state = sc.init_scaler(8.0)
+        fin = jnp.bool_(True)
+        for _ in range(200):
+            state = sc.next_state(state, fin, growth_interval=200)
+        assert float(state.scale) == 16.0
+        assert int(state.good_steps) == 0
+
+    def test_scale_unscale_roundtrip(self):
+        state = sc.init_scaler(2.0 ** 10)
+        loss = jnp.float32(3.5)
+        grads = {"w": jnp.array([2.0 ** 10 * 4.0])}
+        assert float(sc.scale_loss(loss, state)) == 3.5 * 2 ** 10
+        un = sc.unscale_grads(grads, state)
+        np.testing.assert_allclose(np.asarray(un["w"]), 4.0)
+
+
+def test_fp16_training_with_scaler_end_to_end():
+    """fp16-parity path: scaled loss, unscale, skip-on-overflow."""
+    opt = optim_mod.sgd(1e-1)
+    params = {"w": jnp.array([2.0, -1.0], jnp.float16)}
+    state = opt.init(params)
+    s = sc.init_scaler(2.0 ** 8)
+
+    def loss(p):
+        w = p["w"].astype(jnp.float32)
+        return jnp.sum(w * w)
+
+    for _ in range(30):
+        g = jax.grad(lambda p: sc.scale_loss(loss(p), s))(params)
+        g = sc.unscale_grads(g, s)
+        fin = sc.grads_finite(g)
+        new_p, new_st = opt.update(g, state, params)
+        params, state = sc.apply_or_skip(fin, new_p, params, new_st, state)
+        s = sc.next_state(s, fin)
+    assert float(loss(params)) < 0.5

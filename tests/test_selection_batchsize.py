@@ -1,0 +1,75 @@
+"""Adaptive client selection + dynamic batch-size controller (§IV-A, §V-C)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.batchsize import (BatchSizeController, ClientMetrics,
+                                  assign_batch_size, capacity_score)
+from repro.core.selection import AdaptiveClientSelector
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.05, 8.0), st.floats(0.05, 8.0), st.floats(0.0, 1.0),
+       st.floats(0.0, 0.5))
+def test_batch_monotone_in_compute(c1, c2, mem, lat):
+    lo, hi = sorted((c1, c2))
+    b_lo = assign_batch_size(ClientMetrics(lo, mem, lat))
+    b_hi = assign_batch_size(ClientMetrics(hi, mem, lat))
+    assert b_lo <= b_hi
+
+
+def test_batch_bounds_and_examples():
+    # paper §IV-A: high-capacity -> 512+; low-capacity -> 64
+    big = assign_batch_size(ClientMetrics(6.0, 1.0, 0.0))
+    small = assign_batch_size(ClientMetrics(0.05, 0.2, 0.3))
+    assert big >= 512
+    assert small == 64
+    for m in [ClientMetrics(x, 0.5, 0.1) for x in (0.01, 1.0, 100.0)]:
+        assert 64 <= assign_batch_size(m) <= 1024
+
+
+def test_latency_penalizes_capacity():
+    fast = capacity_score(ClientMetrics(1.0, 1.0, 0.0))
+    slow = capacity_score(ClientMetrics(1.0, 1.0, 0.5))
+    assert slow < fast
+
+
+def test_controller_demotes_stragglers():
+    ctrl = BatchSizeController()
+    for cid in range(4):
+        ctrl.initial(cid, ClientMetrics(1.0, 1.0, 0.0))
+    base = dict(ctrl.assignment)
+    ctrl.feedback({0: 10.0, 1: 1.0, 2: 1.0, 3: 1.0})
+    assert ctrl.assignment[0] == max(base[0] // 2, 64)
+
+
+def test_selector_prefers_reliable_clients():
+    sel = AdaptiveClientSelector(6, epsilon=0.0, seed=0)
+    for _ in range(20):
+        sel.observe(0, delivered=False)                 # flaky
+        sel.observe(1, delivered=True, round_time=10.0)  # slow
+        for c in (2, 3, 4, 5):
+            sel.observe(c, delivered=True, round_time=0.5)
+    top = sel.select(4)
+    assert 0 not in top
+    assert 1 not in top
+
+
+def test_selector_epsilon_explores():
+    sel = AdaptiveClientSelector(10, epsilon=1.0, seed=0)
+    for _ in range(5):
+        sel.observe(0, delivered=False)
+    picks = set()
+    for _ in range(20):
+        picks.update(sel.select(3))
+    assert len(picks) > 3, "epsilon-greedy must explore beyond the top-k"
+
+
+def test_selector_scores_bounded():
+    sel = AdaptiveClientSelector(3)
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        sel.observe(int(rng.integers(3)), delivered=bool(rng.random() < 0.7),
+                    passed=bool(rng.random() < 0.8),
+                    round_time=float(rng.uniform(0.1, 5.0)))
+    for c in range(3):
+        assert 0.0 <= sel.score(c) <= 1.0

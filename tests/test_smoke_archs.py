@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For every assigned architecture: instantiate the REDUCED variant (2
+layers, d_model <= 512, <= 4 experts) and run one federated train step and
+one decode step on CPU, asserting output shapes and no NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.shapes import SMOKE_SHAPES
+from repro.core import fl_step
+from repro.models import api
+
+ARCHS = registry.ASSIGNED_ARCHS
+
+
+def _smoke_batch(cfg, clients=2, per_client=2, seq=32, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = seq - (cfg.num_patches if cfg.family == "vlm" else 0)
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(clients, per_client, toks))),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, size=(clients, per_client, toks))),
+    }
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(clients, per_client, cfg.num_patches,
+                             cfg.d_model)), cfg.compute_dtype)
+    if cfg.family == "audio":
+        batch["enc_embeds"] = jnp.asarray(
+            rng.normal(size=(clients, per_client, cfg.encoder_seq,
+                             cfg.d_model)), cfg.compute_dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_reduced_config(arch):
+    cfg = registry.get_config(arch, smoke=True)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = registry.get_config(arch, smoke=True)
+    state = fl_step.init_state(jax.random.PRNGKey(0), cfg)
+    step = fl_step.build_fl_train_step(cfg, theta=0.65, donate=False)
+    batch = _smoke_batch(cfg)
+    state2, metrics = step(state, batch)
+    loss0 = float(metrics["loss"])
+    assert np.isfinite(loss0), f"{arch}: non-finite loss"
+    assert 0.0 <= float(metrics["accept_rate"]) <= 1.0
+    # a second step must also be finite and params must have moved
+    state3, metrics2 = step(state2, batch)
+    assert np.isfinite(float(metrics2["loss"]))
+    moved = any(
+        not np.allclose(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(state.params),
+                        jax.tree.leaves(state3.params)))
+    assert moved, f"{arch}: params did not move"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    sh = SMOKE_SHAPES["decode_32k"]
+    cfg = registry.config_for_shape(arch, "decode_32k", smoke=True)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    cache = api.init_cache(cfg, sh.global_batch, sh.seq_len)
+    cache["step"] = jnp.asarray(sh.seq_len // 2, jnp.int32)
+    batch = {"tokens": jnp.zeros((sh.global_batch, 1), jnp.int32)}
+    logits, cache2 = api.decode_step(params, cache, batch, cfg)
+    assert logits.shape == (sh.global_batch, 1, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert int(cache2["step"]) == sh.seq_len // 2 + 1
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if a not in registry.LONG_CTX_SKIP])
+def test_smoke_long_context_decode(arch):
+    sh = SMOKE_SHAPES["long_500k"]
+    cfg = registry.config_for_shape(arch, "long_500k", smoke=True)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    cache = api.init_cache(cfg, sh.global_batch, sh.seq_len)
+    if cfg.sliding_window:
+        kv = [l for l in jax.tree.leaves(cache) if getattr(l, "ndim", 0) == 5]
+        for leaf in kv:
+            assert leaf.shape[2] <= cfg.sliding_window, \
+                "long-context cache must be windowed, not full-length"
+    cache["step"] = jnp.asarray(sh.seq_len - 1, jnp.int32)
+    batch = {"tokens": jnp.zeros((sh.global_batch, 1), jnp.int32)}
+    logits, _ = api.decode_step(params, cache, batch, cfg)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+def test_whisper_skips_long_context():
+    with pytest.raises(ValueError):
+        registry.config_for_shape("whisper-tiny", "long_500k", smoke=True)
+
+
+def test_anomaly_mlp_smoke():
+    from repro.configs import anomaly_mlp
+    from repro.models import mlp_detector
+    cfg = anomaly_mlp.SMOKE
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(0).normal(
+        size=(16, cfg.num_features)), jnp.float32)
+    y = jnp.zeros((16,), jnp.int32)
+    loss = api.loss_fn(params, {"x": x, "y": y}, cfg)
+    assert np.isfinite(float(loss))
+    acc = mlp_detector.accuracy(params, {"x": x, "y": y}, cfg)
+    assert 0.0 <= float(acc) <= 1.0
