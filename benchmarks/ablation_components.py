@@ -6,7 +6,7 @@ techniques", §V-D). One factor at a time vs all-on vs all-off.
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core.async_engine import StrategyConfig
+from repro.api import StrategyConfig
 
 
 def _cfg(async_=False, theta=None, selection=False, ckpt=False,
@@ -41,9 +41,9 @@ CASES = [
 def run(rounds=6, dropout=0.2):
     rows = []
     for name, strat in CASES:
-        sim, hist, _ = common.run_sim(common.UNSW, strat, num_clients=10,
-                                      rounds=rounds, dropout=dropout)
-        m = hist[-1]
+        res = common.run(common.UNSW, strat, num_clients=10,
+                         rounds=rounds, dropout=dropout)
+        m = res.final
         rows.append([name, round(m.accuracy, 3), round(m.sim_time, 1),
                      round(m.idle_time, 1), round(m.bytes_sent / 1e6, 1)])
     combined = next(r for r in rows if r[0] == "all combined")

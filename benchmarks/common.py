@@ -1,76 +1,58 @@
-"""Shared benchmark scaffolding.
+"""Shared benchmark scaffolding over ``repro.api``.
 
-All paper-table benchmarks run the SAME simulation engine with the same
-synthetic UNSW-NB15 / ROAD surrogates (DESIGN.md §10), differing only in
-strategy/profile/scale knobs — mirroring how the paper varies one factor
-per table. Timing columns are SIMULATED cluster seconds (the engine's
-communication model), not container wall time; the container also reports
-real wall time per run for transparency.
+All paper-table benchmarks run the SAME engines with the same synthetic
+UNSW-NB15 / ROAD surrogates (DESIGN.md §10), differing only in spec
+knobs — mirroring how the paper varies one factor per table. Timing
+columns are SIMULATED cluster seconds (the CommModel), not container
+wall time; each run also reports real wall time for transparency.
+
+``make_world`` / ``run_sim`` are DEPRECATED shims kept for external
+callers; benchmark scripts now build ``ExperimentSpec``s directly.
 """
 from __future__ import annotations
 
-import time
-
-import numpy as np
-
+from repro.api import (CommModel, DataSpec, ExperimentSpec, WorldSpec,
+                       build_world, run_experiment)
+from repro.api.strategies import PRESETS
 from repro.configs import anomaly_mlp
-from repro.core import async_engine as ae
-from repro.core import baselines
-from repro.data import partition, synthetic
 
 # communication model scaled so the sync 10-client baseline lands in the
 # paper's hundreds-of-seconds regime (Table I: 450-950 s). t_launch is the
 # per-step dispatch overhead that large batches amortize (Tables V-VI).
-COMM = ae.CommModel(bandwidth=5e6, latency=0.5, t_sample=2e-3,
-                    t_launch=0.25)
+COMM = CommModel(bandwidth=5e6, latency=0.5, t_sample=2e-3, t_launch=0.25)
 
 UNSW = anomaly_mlp.CONFIG           # 49 features, 10 classes
 ROAD = anomaly_mlp.ROAD_CONFIG      # 32-sample CAN windows, binary
 
 
-def make_world(cfg, num_clients: int, n: int = 20000, seed: int = 0,
-               alpha: float = 0.5):
-    if cfg.name.endswith("road"):
-        X, y = synthetic.make_road_like(seed, n, window=cfg.num_features)
-    else:
-        X, y = synthetic.make_unsw_like(seed, n, cfg.num_features,
-                                        cfg.num_classes)
-    parts = partition.dirichlet_partition(y, num_clients, alpha=alpha,
-                                          seed=seed)
-    clients = [{"x": X[p], "y": y[p]} for p in parts]
-    if cfg.name.endswith("road"):
-        Xe, ye = synthetic.make_road_like(seed + 1, 4000,
-                                          window=cfg.num_features)
-    else:
-        Xe, ye = synthetic.make_unsw_like(seed + 1, 4000, cfg.num_features,
-                                          cfg.num_classes)
-    return clients, {"x": Xe, "y": ye}
+def spec_for(cfg, strategy, num_clients=10, rounds=6, dropout=0.0, seed=0,
+             speed_sigma=0.6, comm=None, n=20000, alpha=0.5,
+             strategy_kwargs=None, engine="sim") -> ExperimentSpec:
+    """The benchmarks' shared spec shape (UNSW/ROAD surrogate world,
+    heterogeneous profiles, paper-scaled CommModel)."""
+    return ExperimentSpec(
+        model=cfg,
+        data=DataSpec(n_samples=n, eval_samples=4000, alpha=alpha),
+        world=WorldSpec(num_clients=num_clients, dropout_p=dropout,
+                        speed_sigma=speed_sigma),
+        comm=comm or COMM, strategy=strategy,
+        strategy_kwargs=strategy_kwargs or {}, engine=engine,
+        rounds=rounds, seed=seed)
 
 
-def run_sim(cfg, strategy, num_clients=10, rounds=6, dropout=0.0, seed=0,
-            speed_sigma=0.6, comm=None, n=20000):
-    clients, ev = make_world(cfg, num_clients, n=n, seed=seed)
-    profiles = ae.heterogeneous_profiles(num_clients, seed=seed + 1,
-                                         dropout_p=dropout,
-                                         speed_sigma=speed_sigma)
-    t0 = time.time()
-    sim = ae.FederatedSimulation(cfg, clients, ev, strategy, profiles,
-                                 comm=comm or COMM, seed=seed)
-    hist = sim.run(rounds)
-    wall = time.time() - t0
-    return sim, hist, wall
+def run(cfg, strategy, **kw):
+    """run_experiment over the shared benchmark spec shape."""
+    return run_experiment(spec_for(cfg, strategy, **kw))
 
 
-def auc_of(sim) -> float:
-    """Binary-ised AUC-ROC on the eval split (attack vs Normal)."""
-    import jax
-    import jax.numpy as jnp
-    from repro.models import mlp_detector
-    ev = jax.tree.map(jnp.asarray, sim.eval_arrays)
-    probs = mlp_detector.predict(sim.params, ev["x"], sim.cfg)
-    scores = 1.0 - probs[:, 0]                     # P(not Normal)
-    labels = (ev["y"] != 0).astype(jnp.float32)
-    return float(mlp_detector.auc_roc(scores, labels))
+def auc_of(result) -> float:
+    """Binary-ised AUC-ROC on the eval split (attack vs Normal).
+
+    Accepts an ``ExperimentResult`` (or any object with .params /
+    .eval_arrays / .cfg, e.g. a legacy FederatedSimulation)."""
+    from repro.api.result import ExperimentResult
+
+    return ExperimentResult.auc_roc(result)
 
 
 def emit(rows, header):
@@ -80,4 +62,26 @@ def emit(rows, header):
     return rows
 
 
-STRATS = baselines.PRESETS
+# ---------------------------------------------------------------------------
+# DEPRECATED shims (pre-repro.api call signatures)
+# ---------------------------------------------------------------------------
+
+def make_world(cfg, num_clients: int, n: int = 20000, seed: int = 0,
+               alpha: float = 0.5):
+    """DEPRECATED: use ``ExperimentSpec(...).build_world()``."""
+    world = build_world(spec_for(cfg, "fedavg", num_clients=num_clients,
+                                 n=n, seed=seed, alpha=alpha))
+    return world.client_arrays, world.eval_arrays
+
+
+def run_sim(cfg, strategy, num_clients=10, rounds=6, dropout=0.0, seed=0,
+            speed_sigma=0.6, comm=None, n=20000):
+    """DEPRECATED: use ``repro.api.run_experiment``. Returns the legacy
+    (sim-like result, history, wall_time) tuple."""
+    result = run(cfg, strategy, num_clients=num_clients, rounds=rounds,
+                 dropout=dropout, seed=seed, speed_sigma=speed_sigma,
+                 comm=comm, n=n)
+    return result, result.records, result.wall_time
+
+
+STRATS = PRESETS

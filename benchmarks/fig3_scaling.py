@@ -3,25 +3,24 @@ time scaling with client count — sync baseline vs optimized framework."""
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core import baselines
 
 
 def run(client_counts=(10, 25, 50, 100), rounds=3):
     rows = []
     for nc in client_counts:
-        sync_sim, sync_hist, _ = common.run_sim(
-            common.UNSW, baselines.fedavg(batch_size=64, lr=3e-2),
-            num_clients=nc, rounds=rounds, n=3000 + 300 * nc)
-        ours_sim, ours_hist, _ = common.run_sim(
-            common.UNSW, baselines.ours(batch_size=64, lr=3e-2,
-                                        dynamic_batch=False),
-            num_clients=nc, rounds=rounds, n=3000 + 300 * nc)
-        sync_updates = sum(h.updates_applied for h in sync_hist) / rounds
-        ours_updates = sum(h.updates_applied for h in ours_hist) / rounds
+        sync = common.run(common.UNSW, "fedavg",
+                          strategy_kwargs=dict(batch_size=64, lr=3e-2),
+                          num_clients=nc, rounds=rounds, n=3000 + 300 * nc)
+        ours = common.run(common.UNSW, "ours",
+                          strategy_kwargs=dict(batch_size=64, lr=3e-2,
+                                               dynamic_batch=False),
+                          num_clients=nc, rounds=rounds, n=3000 + 300 * nc)
+        sync_updates = sum(sync.series("updates_applied")) / rounds
+        ours_updates = sum(ours.series("updates_applied")) / rounds
         rows.append([nc,
                      round(sync_updates, 1), round(ours_updates, 1),
-                     round(sync_hist[-1].sim_time, 1),
-                     round(ours_hist[-1].sim_time, 1)])
+                     round(sync.final.sim_time, 1),
+                     round(ours.final.sim_time, 1)])
     print("# ours: updates/round must GROW with clients; sync stays at 1."
           " time scaling must stay flat-ish for ours (paper Fig. 3)")
     return common.emit(rows, ["clients", "sync_updates_per_round",

@@ -6,7 +6,6 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
-from repro.core import baselines
 
 
 def run(dropouts=(0.1, 0.3, 0.5), runs=3, rounds=8):
@@ -16,12 +15,13 @@ def run(dropouts=(0.1, 0.3, 0.5), runs=3, rounds=8):
         for name in ["ours", "cmfl", "acfl", "fedl2p"]:
             vals = []
             for r in range(runs):
-                strat = baselines.PRESETS[name](batch_size=64, lr=3e-2,
-                                                local_epochs=2)
-                _, hist, _ = common.run_sim(common.UNSW, strat,
-                                            num_clients=10, rounds=rounds,
-                                            dropout=p, seed=100 + r)
-                vals.append(np.mean([h.accuracy for h in hist[-2:]]))
+                res = common.run(common.UNSW, name,
+                                 strategy_kwargs=dict(batch_size=64,
+                                                      lr=3e-2,
+                                                      local_epochs=2),
+                                 num_clients=10, rounds=rounds,
+                                 dropout=p, seed=100 + r)
+                vals.append(np.mean(res.series("accuracy")[-2:]))
             accs[name] = float(np.mean(vals))
         rows.append([p] + [round(accs[n] * 100, 2)
                            for n in ["ours", "cmfl", "acfl", "fedl2p"]])

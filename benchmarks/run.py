@@ -3,10 +3,12 @@
   PYTHONPATH=src python -m benchmarks.run            # everything (quick)
   PYTHONPATH=src python -m benchmarks.run --only table3_comm_opt
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale repeats
+  PYTHONPATH=src python -m benchmarks.run --list     # strategy smoke mode
 
 Each module prints a CSV block headed by its paper-table provenance; the
 roofline table (deliverable g) is rendered from the dry-run JSONL by
-``roofline_report``.
+``roofline_report``. ``--list`` instantiates every registered strategy
+(no training) — a cheap registry/CI smoke check.
 """
 from __future__ import annotations
 
@@ -30,12 +32,36 @@ MODULES = [
 ]
 
 
+def list_strategies() -> None:
+    """Smoke mode: build every registered strategy without training."""
+    import csv
+    import sys
+
+    from repro.api import STRATEGY_REGISTRY
+
+    w = csv.writer(sys.stdout)
+    w.writerow(["name", "mode", "theta", "selection", "dynamic_batch",
+                "checkpointing", "description"])
+    for name in sorted(STRATEGY_REGISTRY):
+        strat = STRATEGY_REGISTRY[name]
+        cfg = strat.build()                    # must not raise
+        w.writerow([name, cfg.mode, cfg.theta, cfg.selection,
+                    cfg.dynamic_batch, cfg.checkpointing,
+                    (strat.description or "").split("\n")[0]])
+    print(f"# {len(STRATEGY_REGISTRY)} strategies instantiated OK")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale repeat counts (slow on CPU)")
+    ap.add_argument("--list", action="store_true",
+                    help="instantiate every registered strategy and exit")
     args = ap.parse_args(argv)
+    if args.list:
+        list_strategies()
+        return
     mods = [args.only] if args.only else MODULES
     failures = []
     for name in mods:

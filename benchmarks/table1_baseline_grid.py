@@ -8,21 +8,21 @@ accuracy degrades at (many clients × large batch).
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core import baselines
 
 
 def run(clients_list=(10, 50, 100), batches=(32, 64, 128, 256), rounds=3):
     rows = []
     for nc in clients_list:
         for bs in batches:
-            strat = baselines.fedavg(batch_size=bs, lr=3e-2, local_epochs=1)
-            sim, hist, wall = common.run_sim(common.UNSW, strat,
-                                             num_clients=nc, rounds=rounds,
-                                             n=4000 * (1 + nc // 25))
-            m = hist[-1]
+            res = common.run(common.UNSW, "fedavg",
+                             strategy_kwargs=dict(batch_size=bs, lr=3e-2,
+                                                  local_epochs=1),
+                             num_clients=nc, rounds=rounds,
+                             n=4000 * (1 + nc // 25))
+            m = res.final
             rows.append([nc, bs, round(m.accuracy, 4),
-                         round(common.auc_of(sim), 4),
-                         round(m.sim_time, 1), round(wall, 1)])
+                         round(common.auc_of(res), 4),
+                         round(m.sim_time, 1), round(res.wall_time, 1)])
     return common.emit(rows, ["clients", "batch", "accuracy", "auc_roc",
                               "sim_time_s", "container_wall_s"])
 

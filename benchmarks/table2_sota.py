@@ -9,28 +9,27 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
-from repro.core import baselines
+
+KW = dict(batch_size=64, lr=3e-2, local_epochs=2)
 
 
 def run(rounds=5):
     rows = []
     for name in ["ours", "cmfl", "fedl2p", "acfl", "fedavg"]:
-        strat = baselines.PRESETS[name](batch_size=64, lr=3e-2, local_epochs=2)
-        sim, hist, wall = common.run_sim(common.UNSW, strat, num_clients=10,
-                                         rounds=rounds)
-        m = hist[-1]
+        res = common.run(common.UNSW, name, strategy_kwargs=KW,
+                         num_clients=10, rounds=rounds)
+        m = res.final
         # scalability: relative accuracy at 100 clients vs 10
-        _, hist100, _ = common.run_sim(
-            common.UNSW, baselines.PRESETS[name](batch_size=64, lr=3e-2, local_epochs=2),
-            num_clients=100, rounds=3, n=30000)
-        scale = hist100[-1].accuracy / max(m.accuracy, 1e-9)
+        res100 = common.run(common.UNSW, name, strategy_kwargs=KW,
+                            num_clients=100, rounds=3, n=30000)
+        scale = res100.final.accuracy / max(m.accuracy, 1e-9)
         # fault tolerance: accuracy at 0.5 dropout
-        _, hist_ft, _ = common.run_sim(
-            common.UNSW, baselines.PRESETS[name](batch_size=64, lr=3e-2, local_epochs=2),
-            num_clients=10, rounds=rounds, dropout=0.5, seed=2)
-        ft = np.mean([h.accuracy for h in hist_ft[-2:]])
+        res_ft = common.run(common.UNSW, name, strategy_kwargs=KW,
+                            num_clients=10, rounds=rounds, dropout=0.5,
+                            seed=2)
+        ft = np.mean([h.accuracy for h in res_ft.records[-2:]])
         rows.append([name, round(m.sim_time, 1), round(m.accuracy * 100, 2),
-                     round(common.auc_of(sim), 3),
+                     round(common.auc_of(res), 3),
                      "Stable" if scale > 0.9 else "Deg.",
                      round(ft * 100, 1)])
     return common.emit(rows, ["method", "time_s", "acc_pct", "auc",

@@ -10,10 +10,10 @@ training (19 rounds in the paper).
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core.async_engine import StrategyConfig
+from repro.api import StrategyConfig
 
 
-def _strat(mode, theta, selection, bs, rounds_scale=1, lr=3e-2):
+def _strat(mode, theta, selection, bs, lr=3e-2):
     return StrategyConfig(mode=mode, theta=theta, selection=selection,
                           select_fraction=0.8 if selection else 1.0,
                           dynamic_batch=False, checkpointing=False,
@@ -34,10 +34,9 @@ def run():
         ("async+sel(19rnd)", "async", 0.65, True, 1024, 19),
     ]
     for name, mode, theta, sel, bs, rounds in cases:
-        strat = _strat(mode, theta, sel, bs)
-        sim, hist, wall = common.run_sim(common.UNSW, strat, num_clients=10,
-                                         rounds=rounds)
-        m = hist[-1]
+        res = common.run(common.UNSW, _strat(mode, theta, sel, bs),
+                         num_clients=10, rounds=rounds)
+        m = res.final
         rows.append([name, bs, rounds, round(m.accuracy, 4),
                      round(m.sim_time, 1), round(m.comm_time, 1),
                      round(m.idle_time, 1),

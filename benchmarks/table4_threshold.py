@@ -7,18 +7,18 @@ overhead), high θ rejects too much (accuracy dips); 0.65 balances.
 from __future__ import annotations
 
 from benchmarks import common
-from repro.core import baselines
 
 
 def run(thetas=(0.50, 0.60, 0.65, 0.70, 0.75), rounds=8):
     rows = []
     for theta in thetas:
-        strat = baselines.ours(batch_size=64, lr=3e-2, theta=theta,
-                               dynamic_batch=False)
-        sim, hist, _ = common.run_sim(common.UNSW, strat, num_clients=10,
-                                      rounds=rounds)
-        m = hist[-1]
-        accept = sum(h.accept_rate for h in hist) / len(hist)
+        res = common.run(common.UNSW, "ours",
+                         strategy_kwargs=dict(batch_size=64, lr=3e-2,
+                                              theta=theta,
+                                              dynamic_batch=False),
+                         num_clients=10, rounds=rounds)
+        m = res.final
+        accept = sum(res.series("accept_rate")) / rounds
         rows.append([theta, round(m.accuracy * 100, 2),
                      round(m.comm_time, 1), round(m.bytes_sent / 1e6, 1),
                      round(accept, 3)])

@@ -10,17 +10,17 @@ import numpy as np
 from scipy.stats import mannwhitneyu
 
 from benchmarks import common
-from repro.core import baselines
 
 
 def _auc_samples(cfg, name, runs, rounds=4):
     vals = []
     for r in range(runs):
-        strat = baselines.PRESETS[name](batch_size=64, lr=3e-2,
-                                        local_epochs=2)
-        sim, _, _ = common.run_sim(cfg, strat, num_clients=8, rounds=rounds,
-                                   dropout=0.3, seed=300 + r, n=8000)
-        vals.append(common.auc_of(sim))
+        res = common.run(cfg, name,
+                         strategy_kwargs=dict(batch_size=64, lr=3e-2,
+                                              local_epochs=2),
+                         num_clients=8, rounds=rounds, dropout=0.3,
+                         seed=300 + r, n=8000)
+        vals.append(common.auc_of(res))
     return np.array(vals)
 
 

@@ -1,7 +1,8 @@
 """Serving example: batched network-flow scoring with the trained global
 model + ROAD-style automotive CAN masquerade detection.
 
-Trains briefly (federated), then serves two request streams:
+Trains briefly (federated, via one ``ExperimentSpec`` per dataset), then
+serves two request streams:
   1. UNSW-like flow batches -> per-class probabilities + binary AUC;
   2. ROAD-like CAN windows -> masquerade alarm rate.
 
@@ -12,33 +13,30 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api import DataSpec, ExperimentSpec, WorldSpec, run_experiment
 from repro.configs import anomaly_mlp
-from repro.core import async_engine as ae
-from repro.core import baselines
-from repro.data import partition, synthetic
+from repro.data import synthetic
 from repro.models import mlp_detector
 
 
-def train(cfg, make_data, rounds=8, clients=8, seed=0, alpha=0.7):
-    X, y = make_data(seed, 16000)
-    parts = partition.dirichlet_partition(y, clients, alpha=alpha, seed=seed)
-    cl = [{"x": X[p], "y": y[p]} for p in parts]
-    Xe, ye = make_data(seed + 1, 3000)
-    sim = ae.FederatedSimulation(
-        cfg, cl, {"x": Xe, "y": ye},
-        baselines.ours(batch_size=128, lr=3e-2, local_epochs=2),
-        ae.heterogeneous_profiles(clients, seed=seed), seed=seed)
-    hist = sim.run(rounds)
-    print(f"  trained: acc={hist[-1].accuracy:.3f} "
-          f"(sim {hist[-1].sim_time:.1f}s)")
-    return sim.params
+def train(cfg, rounds=8, clients=8, seed=0, alpha=0.7):
+    res = run_experiment(ExperimentSpec(
+        model=cfg,
+        data=DataSpec(n_samples=16000, eval_samples=3000, alpha=alpha),
+        world=WorldSpec(num_clients=clients, profile="heterogeneous",
+                        profile_seed_offset=0),
+        strategy="ours",
+        strategy_kwargs=dict(batch_size=128, lr=3e-2, local_epochs=2),
+        rounds=rounds, seed=seed))
+    print(f"  trained: acc={res.final.accuracy:.3f} "
+          f"(sim {res.final.sim_time:.1f}s)")
+    return res.params
 
 
 def main():
     print("== UNSW-like flow scoring ==")
     cfg = anomaly_mlp.CONFIG
-    params = train(cfg, lambda s, n: synthetic.make_unsw_like(
-        s, n, cfg.num_features, cfg.num_classes))
+    params = train(cfg)
     serve = jax.jit(lambda p, x: mlp_detector.predict(p, x, cfg))
     Xq, yq = synthetic.make_unsw_like(99, 4096, cfg.num_features,
                                       cfg.num_classes)
@@ -56,8 +54,7 @@ def main():
     rcfg = anomaly_mlp.ROAD_CONFIG
     # binary labels + strong Dirichlet skew give degenerate all-one-class
     # clients; use a milder split for the 2-class CAN task (alpha=5)
-    rparams = train(rcfg, lambda s, n: synthetic.make_road_like(
-        s, n, window=rcfg.num_features), rounds=12, alpha=5.0)
+    rparams = train(rcfg, rounds=12, alpha=5.0)
     rserve = jax.jit(lambda p, x: mlp_detector.predict(p, x, rcfg))
     Xr, yr = synthetic.make_road_like(7, 4096, window=rcfg.num_features)
     pr = rserve(rparams, jnp.asarray(Xr))

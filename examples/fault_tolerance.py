@@ -7,37 +7,30 @@ adaptive checkpoint interval reacting to the observed failure regime.
 """
 import numpy as np
 
+from repro.api import DataSpec, ExperimentSpec, WorldSpec, run_experiment
 from repro.configs import anomaly_mlp
-from repro.core import async_engine as ae
-from repro.core import baselines
 from repro.core.checkpoint_policy import fit_weibull, optimal_interval
-from repro.data import partition, synthetic
 
 
 def main():
     cfg = anomaly_mlp.CONFIG.replace(mlp_hidden=(128, 64), num_classes=10)
-    X, y = synthetic.make_unsw_like(0, 12000, cfg.num_features,
-                                    cfg.num_classes)
-    parts = partition.dirichlet_partition(y, 10, alpha=0.5)
-    clients = [{"x": X[p], "y": y[p]} for p in parts]
-    Xe, ye = synthetic.make_unsw_like(1, 3000, cfg.num_features,
-                                      cfg.num_classes)
-    ev = {"x": Xe, "y": ye}
-
     print(f"{'dropout':>8} {'ours_acc':>9} {'fedavg_acc':>11} "
           f"{'ours_deliver':>13} {'fedavg_deliver':>14}")
     for p in (0.1, 0.3, 0.5):
         accs, deliver = {}, {}
         for name in ["ours", "fedavg"]:
-            profiles = ae.uniform_profiles(10, dropout_p=p)
-            sim = ae.FederatedSimulation(
-                cfg, clients, ev,
-                baselines.PRESETS[name](batch_size=64, lr=3e-2,
-                                        local_epochs=2),
-                profiles, seed=42)
-            hist = sim.run(6)
-            accs[name] = np.mean([h.accuracy for h in hist[-3:]])
-            deliver[name] = np.mean([h.accept_rate for h in hist])
+            res = run_experiment(ExperimentSpec(
+                model=cfg,
+                data=DataSpec(n_samples=12000, eval_samples=3000,
+                              alpha=0.5),
+                world=WorldSpec(num_clients=10, profile="uniform",
+                                dropout_p=p),
+                strategy=name,
+                strategy_kwargs=dict(batch_size=64, lr=3e-2,
+                                     local_epochs=2),
+                rounds=6, seed=42))
+            accs[name] = np.mean(res.series("accuracy")[-3:])
+            deliver[name] = np.mean(res.series("accept_rate"))
         print(f"{p:8.1f} {accs['ours']:9.3f} {accs['fedavg']:11.3f} "
               f"{deliver['ours']:13.2f} {deliver['fedavg']:14.2f}")
 

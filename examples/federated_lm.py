@@ -1,11 +1,11 @@
 """End-to-end driver: federated training of a ~100M-parameter LM with the
-paper's selective-update aggregation, for a few hundred rounds.
+paper's selective-update aggregation via the compiled SPMD engine.
 
 The model is a 6-layer, d_model=768 qwen2-style decoder (~109M params
 with embeddings) trained on a synthetic token stream, 4 FL clients, using
 the SAME production fl_train_step that the multi-pod dry-run lowers —
-just on the CPU device. Logs loss / accept-rate / bytes saved; writes
-Weibull-managed checkpoints.
+just on the CPU device, driven through one ``ExperimentSpec`` with
+``engine="spmd"``. Logs loss / accept-rate / bytes saved by the θ-filter.
 
   PYTHONPATH=src python examples/federated_lm.py --steps 300
 (defaults to a CI-friendly 30; --steps 300 is the full run)
@@ -13,15 +13,8 @@ Weibull-managed checkpoints.
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint.manager import CheckpointManager
+from repro.api import (DataSpec, ExperimentSpec, WorldSpec, run_experiment)
 from repro.configs import registry
-from repro.core import fl_step
-from repro.data import synthetic
-from repro.optim import adamw as optim_mod
 from repro.optim import schedule
 
 
@@ -32,47 +25,43 @@ def main():
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--per-client-batch", type=int, default=4)
     ap.add_argument("--theta", type=float, default=0.55)
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_fedlm_ckpt")
     args = ap.parse_args()
 
     cfg = registry.get_config("qwen2-1.5b").replace(
         num_layers=6, d_model=768, num_heads=12, num_kv_heads=4,
         head_dim=64, d_ff=2048, vocab_size=50304, remat=False)
-    n_params = cfg.param_count()
-    print(f"model: 6L d768 qwen2-style, {n_params/1e6:.1f}M params "
+    print(f"model: 6L d768 qwen2-style, {cfg.param_count()/1e6:.1f}M params "
           f"(~100M target)")
 
-    opt = optim_mod.adamw(3e-4)
-    sched = schedule.cosine(3e-4, warmup_steps=20, total_steps=args.steps)
-    state = fl_step.init_state(jax.random.PRNGKey(0), cfg, opt)
-    step = fl_step.build_fl_train_step(cfg, opt, theta=args.theta,
-                                       lr_schedule=sched)
-    ckpt = CheckpointManager(args.ckpt_dir, total_time=3600.0)
-
-    rng = np.random.default_rng(0)
-    C, B, S = args.clients, args.per_client_batch, args.seq
-
-    def next_batch():
-        t, l = synthetic.make_lm_tokens(int(rng.integers(1 << 30)),
-                                        C * B, S, cfg.vocab_size)
-        return {"tokens": jnp.asarray(t.reshape(C, B, S)),
-                "labels": jnp.asarray(l.reshape(C, B, S))}
+    bs = args.per_client_batch
+    spec = ExperimentSpec(
+        model=cfg,
+        data=DataSpec(dataset="lm", partition="iid", seq_len=args.seq,
+                      n_samples=args.clients * bs * 64, eval_samples=16),
+        world=WorldSpec(num_clients=args.clients, profile="uniform"),
+        strategy="cmfl",                    # sync + θ-filter (the spmd path)
+        strategy_kwargs=dict(batch_size=bs, lr=3e-4, theta=args.theta,
+                             local_epochs=1,
+                             # one (C, B, seq) cohort batch per round
+                             max_samples_per_round=bs),
+        engine="spmd", rounds=args.steps, seed=0,
+        optimizer="adamw",
+        lr_schedule=schedule.cosine(3e-4, warmup_steps=20,
+                                    total_steps=args.steps))
 
     t0 = time.time()
-    saved_bytes = 0.0
-    for i in range(args.steps):
-        state, m = step(state, next_batch())
-        saved_bytes += float(m["bytes_baseline"] - m["bytes_sent"])
-        if i % 10 == 0 or i == args.steps - 1:
-            print(f"round {i:4d} loss={float(m['loss']):.4f} "
-                  f"accept={float(m['accept_rate']):.2f} "
-                  f"align={float(m['alignment_mean']):.3f} "
-                  f"saved={saved_bytes/1e9:.2f}GB "
-                  f"[{time.time()-t0:.0f}s]")
-        ckpt.maybe_save(state.params, now=time.time() - t0)
+    res = run_experiment(spec)
+    shown = res.records[:: max(1, args.steps // 10)]
+    if shown[-1] is not res.final:
+        shown.append(res.final)
+    for r in shown:
+        print(f"round {r.round:4d} loss={r.loss:.4f} "
+              f"accept={r.accept_rate:.2f} "
+              f"sent={r.bytes_sent/1e9:.2f}GB")
+    saved = res.bytes_baseline - res.final.bytes_sent
     print(f"\n{args.steps} federated rounds in {time.time()-t0:.0f}s; "
-          f"upload bytes saved by θ-filter: {saved_bytes/1e9:.2f} GB; "
-          f"checkpoints written: {ckpt.saves}")
+          f"upload bytes saved by θ-filter: {saved/1e9:.2f} GB "
+          f"(quality proxy -loss: {res.final.accuracy:.3f})")
 
 
 if __name__ == "__main__":

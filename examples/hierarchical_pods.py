@@ -4,7 +4,9 @@ Two "pods" (datacenters) each run the paper's masked selective aggregation
 over their own clients EVERY round; across pods, models synchronize only
 every ``--sync-every`` rounds, and the cross-pod exchange is itself gated
 by the sign-alignment test (core/hierarchy.py) — the paper's async +
-selective idea applied recursively at datacenter scale.
+selective idea applied recursively at datacenter scale. The per-pod
+compiled step comes from the experiment API
+(``repro.api.build_spmd_components``).
 
   PYTHONPATH=src python examples/hierarchical_pods.py
 """
@@ -14,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import ExperimentSpec, WorldSpec, build_spmd_components
 from repro.configs import anomaly_mlp
 from repro.core import fl_step, hierarchy
 from repro.data import partition, synthetic
@@ -40,10 +43,17 @@ def main():
                                       cfg.num_classes)
     ev = {"x": jnp.asarray(Xe), "y": jnp.asarray(ye)}
 
-    opt = optim_mod.sgd(3e-2)
-    step = fl_step.build_fl_train_step(cfg, opt, theta=0.6, donate=False)
-    states = [fl_step.init_state(jax.random.PRNGKey(7), cfg, opt)
-              for _ in range(P)]
+    spec = ExperimentSpec(
+        model=cfg, world=WorldSpec(num_clients=C, profile="uniform"),
+        strategy="cmfl",                       # sync + θ-filter per pod
+        strategy_kwargs=dict(theta=0.6, lr=3e-2, batch_size=32),
+        engine="spmd", seed=7,
+        # persistent per-pod state across rounds -> momentum helps here
+        # (the spec default resets it for per-round sim parity)
+        optimizer=optim_mod.sgd(3e-2, momentum=0.9))
+    _, _, opt, state0, step = build_spmd_components(spec)
+    states = [state0] + [fl_step.init_state(jax.random.PRNGKey(7), cfg, opt)
+                         for _ in range(P - 1)]
     sync = hierarchy.init_pod_sync(states[0].params)
     rng = np.random.default_rng(0)
 

@@ -6,41 +6,35 @@ FedAvg baseline against the paper's combined framework (async + θ-filter
 + adaptive selection + Weibull checkpointing), then prints the headline
 deltas: end-to-end time, transmitted bytes, accuracy.
 
+Everything is one declarative ``ExperimentSpec`` per run:
+
   PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
+import dataclasses
 
-from repro.configs import anomaly_mlp
-from repro.core import async_engine as ae
-from repro.core import baselines
-from repro.data import partition, synthetic
+from repro.api import (CommModel, DataSpec, ExperimentSpec, WorldSpec,
+                       run_experiment)
 
 
 def main():
-    cfg = anomaly_mlp.CONFIG
-    X, y = synthetic.make_unsw_like(0, 20000, cfg.num_features,
-                                    cfg.num_classes)
-    parts = partition.dirichlet_partition(y, 10, alpha=0.5, seed=0)
-    clients = [{"x": X[p], "y": y[p]} for p in parts]
-    Xe, ye = synthetic.make_unsw_like(1, 4000, cfg.num_features,
-                                      cfg.num_classes)
-    eval_set = {"x": Xe, "y": ye}
-    profiles = ae.heterogeneous_profiles(10, seed=1, dropout_p=0.1)
-    comm = ae.CommModel(bandwidth=5e6, latency=0.5, t_sample=2e-3,
-                        t_launch=0.25)
+    spec = ExperimentSpec(
+        model="anomaly-mlp",
+        data=DataSpec(n_samples=20000, eval_samples=4000, alpha=0.5),
+        world=WorldSpec(num_clients=10, dropout_p=0.1),
+        comm=CommModel(bandwidth=5e6, latency=0.5, t_sample=2e-3,
+                       t_launch=0.25),
+        strategy="fedavg",
+        strategy_kwargs=dict(batch_size=64, lr=3e-2, local_epochs=2),
+        rounds=8, seed=0)
 
     results = {}
     for name in ["fedavg", "ours"]:
-        strat = baselines.PRESETS[name](batch_size=64, lr=3e-2,
-                                        local_epochs=2)
-        sim = ae.FederatedSimulation(cfg, clients, eval_set, strat,
-                                     profiles, comm=comm, seed=0)
-        hist = sim.run(8)
-        results[name] = hist[-1]
-        print(f"[{name:7s}] acc={hist[-1].accuracy:.3f} "
-              f"time={hist[-1].sim_time:7.1f}s "
-              f"sent={hist[-1].bytes_sent/1e6:6.1f}MB "
-              f"idle={hist[-1].idle_time:7.1f}s")
+        res = run_experiment(dataclasses.replace(spec, strategy=name))
+        results[name] = res.final
+        print(f"[{name:7s}] acc={res.final.accuracy:.3f} "
+              f"time={res.final.sim_time:7.1f}s "
+              f"sent={res.final.bytes_sent/1e6:6.1f}MB "
+              f"idle={res.final.idle_time:7.1f}s")
 
     base, ours = results["fedavg"], results["ours"]
     print(f"\nend-to-end time reduction : "

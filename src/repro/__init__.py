@@ -1,0 +1,25 @@
+"""Reproduction of "Reducing Communication Overhead in Federated Learning
+for Network Anomaly Detection with Adaptive Client Selection".
+
+The supported entry point is the declarative experiment layer::
+
+    import repro
+
+    result = repro.run_experiment(repro.ExperimentSpec(
+        strategy="ours", rounds=8,
+        world=repro.WorldSpec(num_clients=10, dropout_p=0.1)))
+
+Lower layers (``repro.core``, ``repro.kernels``, ``repro.launch``, ...)
+remain importable for engine-level work.
+"""
+from repro.api import (ClientProfile, CommModel, DataSpec, ExperimentResult,
+                       ExperimentSpec, RoundRecord, STRATEGY_REGISTRY,
+                       Strategy, StrategyConfig, WorldSpec, get_strategy,
+                       list_strategies, register_strategy, run_experiment)
+
+__all__ = [
+    "ClientProfile", "CommModel", "DataSpec", "ExperimentResult",
+    "ExperimentSpec", "RoundRecord", "STRATEGY_REGISTRY", "Strategy",
+    "StrategyConfig", "WorldSpec", "get_strategy", "list_strategies",
+    "register_strategy", "run_experiment",
+]

@@ -1,0 +1,26 @@
+"""Public experiment API: declarative specs, pluggable strategies, one
+facade over both engines.
+
+    from repro.api import ExperimentSpec, run_experiment
+
+    result = run_experiment(ExperimentSpec(strategy="ours", rounds=8))
+    print(result.final.accuracy, result.final.bytes_sent)
+"""
+from repro.api.result import (ROUND_FIELDS, ExperimentResult, RoundRecord)
+from repro.api.runner import build_spmd_components, run_experiment
+from repro.api.spec import DataSpec, ExperimentSpec, WorldSpec
+from repro.api.strategies import (PRESETS, STRATEGY_REGISTRY, Strategy,
+                                  get_strategy, list_strategies,
+                                  register_strategy, resolve_strategy)
+from repro.api.world import World, build_world
+from repro.core.async_engine import (ClientProfile, CommModel,
+                                     StrategyConfig)
+
+__all__ = [
+    "ClientProfile", "CommModel", "DataSpec", "ExperimentResult",
+    "ExperimentSpec", "PRESETS", "ROUND_FIELDS", "RoundRecord",
+    "STRATEGY_REGISTRY", "Strategy", "StrategyConfig", "World",
+    "WorldSpec", "build_spmd_components", "build_world", "get_strategy",
+    "list_strategies", "register_strategy", "resolve_strategy",
+    "run_experiment",
+]

@@ -1,0 +1,183 @@
+"""``run_experiment(spec)`` — one facade over both engines.
+
+engine="sim"   builds the client world and drives the event-driven
+               ``FederatedSimulation`` (heterogeneous timing, dropout,
+               async quorum, checkpointing — the paper's apparatus).
+
+engine="spmd"  drives the compiled ``fl_step`` path: one jitted step per
+               round over a (C, B, ...) cohort batch, with the SAME
+               CommModel applied analytically for sync-barrier timing and
+               byte accounting, so both engines emit the normalized
+               ``RoundRecord`` schema.
+
+Degenerate parity: with uniform profiles, zero latency, theta=None and
+one local step (``max_samples_per_round == batch_size``), the two engines
+produce identical round records — the sim runs one SGD step per client
+and FedAvg-averages the resulting parameters, which equals the spmd
+path's SGD step on the client-mean gradient (momentum is reset per round
+in the sim's local runs, so the spmd engine uses momentum=0).
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.result import ExperimentResult, RoundRecord
+from repro.api.spec import ExperimentSpec
+from repro.core import async_engine as ae
+from repro.core import fl_step
+from repro.data.loader import ArrayLoader
+from repro.models import api as model_api
+from repro.optim import adamw as optim_mod
+
+
+def run_experiment(spec: ExperimentSpec) -> ExperimentResult:
+    spec.validate()
+    t0 = time.time()
+    if spec.engine == "sim":
+        result = _run_sim(spec)
+    else:
+        result = _run_spmd(spec)
+    result.wall_time = time.time() - t0
+    return result
+
+
+# ---------------------------------------------------------------------------
+# engine="sim"
+# ---------------------------------------------------------------------------
+
+def _run_sim(spec: ExperimentSpec) -> ExperimentResult:
+    cfg = spec.resolve_model()
+    strategy = spec.resolve_strategy()
+    world = spec.build_world()
+    sim = ae.FederatedSimulation(cfg, world.client_arrays, world.eval_arrays,
+                                 strategy, world.profiles,
+                                 comm=spec.resolve_comm(), seed=spec.seed,
+                                 eval_fn=spec.eval_fn)
+    hist = sim.run(spec.rounds)
+    records = [RoundRecord(round=m.round, sim_time=m.sim_time,
+                           comm_time=m.comm_time, idle_time=m.idle_time,
+                           bytes_sent=m.bytes_sent,
+                           updates_applied=m.updates_applied,
+                           accept_rate=m.accept_rate, accuracy=m.accuracy,
+                           loss=m.loss)
+               for m in hist]
+    return ExperimentResult(engine="sim", strategy=spec.strategy_name(),
+                            rounds=spec.rounds, seed=spec.seed,
+                            records=records, cfg=cfg, params=sim.params,
+                            eval_arrays=world.eval_arrays,
+                            num_clients=world.num_clients,
+                            param_bytes=sim.param_bytes)
+
+
+# ---------------------------------------------------------------------------
+# engine="spmd"
+# ---------------------------------------------------------------------------
+
+def _resolve_optimizer(spec: ExperimentSpec, st):
+    opt = spec.optimizer
+    if opt is None or opt == "sgd":
+        # momentum=0 mirrors the simulator's per-round optimizer reset,
+        # which is what makes the degenerate sim/spmd parity exact
+        return optim_mod.sgd(st.lr, momentum=0.0)
+    if isinstance(opt, str):
+        if opt == "adamw":
+            return optim_mod.adamw(st.lr)
+        if opt == "adafactor":
+            return optim_mod.adafactor(st.lr)
+        raise ValueError(f"unknown optimizer {opt!r}; expected "
+                         "'sgd', 'adamw', 'adafactor' or an Optimizer")
+    return opt
+
+
+def build_spmd_components(spec: ExperimentSpec):
+    """(cfg, strategy, optimizer, state, jitted step) for custom loops —
+    the supported way to reach the compiled path from user code (used by
+    examples/hierarchical_pods.py)."""
+    cfg = spec.resolve_model()
+    st = spec.resolve_strategy()
+    comm = spec.resolve_comm()
+    opt = _resolve_optimizer(spec, st)
+    state = fl_step.init_state(jax.random.PRNGKey(spec.seed), cfg, opt)
+    step = fl_step.build_fl_train_step(cfg, opt, theta=st.theta,
+                                       lr_schedule=spec.lr_schedule,
+                                       donate=False,
+                                       beacon_bytes=comm.beacon_bytes)
+    return cfg, st, opt, state, step
+
+
+def _build_eval(cfg, eval_fn):
+    if eval_fn is not None:
+        return jax.jit(eval_fn)
+    return model_api.build_default_eval(cfg)
+
+
+def _run_spmd(spec: ExperimentSpec) -> ExperimentResult:
+    cfg, st, _opt, state, step = build_spmd_components(spec)
+    comm = spec.resolve_comm()
+    world = spec.build_world()
+    C = world.num_clients
+
+    loaders = [ArrayLoader(arrays, st.batch_size, seed=spec.seed + cid)
+               for cid, arrays in enumerate(world.client_arrays)]
+    sizes = {l.batch_size for l in loaders}
+    if len(sizes) > 1:
+        raise ValueError(
+            f"engine='spmd' needs one cohort batch shape, but client shard "
+            f"sizes clamp batch_size to {sorted(sizes)}; lower "
+            f"strategy batch_size or raise data.n_samples")
+    bs = loaders[0].batch_size
+    # union of the simulator's local steps as ONE cohort gradient step;
+    # min across clients keeps the (C, steps*bs, ...) batch rectangular
+    steps = min(ae.local_step_count(l.n, bs, st) for l in loaders)
+    n_samples = steps * bs
+
+    evaluate = _build_eval(cfg, spec.eval_fn)
+    eval_dev = jax.tree.map(jnp.asarray, world.eval_arrays)
+    param_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(state.params))
+
+    sim_time = comm_time = idle_time = bytes_sent = 0.0
+    records: List[RoundRecord] = []
+    for rnd in range(spec.rounds):
+        per_client = []
+        for loader in loaders:
+            draws = [loader.sample() for _ in range(steps)]
+            per_client.append({k: np.concatenate([d[k] for d in draws])
+                               for k in draws[0]})
+        batch = {k: jnp.asarray(np.stack([c[k] for c in per_client]))
+                 for k in per_client[0]}
+        state, m = step(state, batch)
+
+        mask = np.asarray(m["mask"])
+        arrivals = []
+        for cid in range(C):
+            prof = world.profiles[cid]
+            t_train = (steps * comm.t_launch
+                       + n_samples * comm.t_sample) / max(prof.speed, 1e-3)
+            payload = param_bytes if mask[cid] > 0 else comm.beacon_bytes
+            transfer = prof.net_latency + payload / comm.bandwidth
+            comm_time += transfer
+            arrivals.append(t_train + transfer)
+        barrier = max(arrivals)
+        sim_time += barrier
+        idle_time += sum(barrier - a for a in arrivals)
+        bytes_sent += float(m["bytes_sent"])
+
+        acc = float(evaluate(state.params, eval_dev))
+        records.append(RoundRecord(
+            round=rnd, sim_time=sim_time, comm_time=comm_time,
+            idle_time=idle_time, bytes_sent=bytes_sent,
+            updates_applied=int(mask.sum() > 0),
+            accept_rate=float(m["accept_rate"]), accuracy=acc,
+            loss=float(m["loss"])))
+
+    return ExperimentResult(engine="spmd", strategy=spec.strategy_name(),
+                            rounds=spec.rounds, seed=spec.seed,
+                            records=records, cfg=cfg, params=state.params,
+                            eval_arrays=world.eval_arrays, num_clients=C,
+                            param_bytes=param_bytes)

@@ -1,0 +1,147 @@
+"""Declarative experiment specification — the single public entry point.
+
+An ``ExperimentSpec`` names everything a paper experiment varies (model,
+data/partition, client world, communication model, strategy, engine,
+rounds, seed) and ``run_experiment(spec)`` executes it on either engine:
+
+  engine="sim"   — the event-driven heterogeneous-client simulator
+                   (repro.core.async_engine.FederatedSimulation)
+  engine="spmd"  — the compiled one-round-per-step SPMD path
+                   (repro.core.fl_step), with the same CommModel applied
+                   analytically for time/byte accounting
+
+Both return the normalized ``ExperimentResult`` / ``RoundRecord`` schema,
+so benchmark tables are spec sweeps instead of hand-wired setups.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Union
+
+from repro.api import strategies as strategies_mod
+from repro.api import world as world_mod
+from repro.core.async_engine import CommModel, StrategyConfig
+
+ENGINES = ("sim", "spmd")
+DATASETS = ("auto", "unsw", "road", "lm")
+PARTITIONS = ("dirichlet", "iid")
+PROFILES = ("heterogeneous", "uniform")
+
+
+@dataclasses.dataclass
+class DataSpec:
+    dataset: str = "auto"             # auto | unsw | road | lm (auto infers
+                                      # from the model config)
+    n_samples: int = 20000
+    eval_samples: int = 4000
+    partition: str = "dirichlet"
+    alpha: float = 0.5                # Dirichlet concentration (lower=skewed)
+    seq_len: int = 128                # lm datasets only
+    factory: Optional[Callable[[int, int], Any]] = None
+    # factory(seed, n) -> (X, y) or {"x": ..., "y": ...} overrides `dataset`
+
+
+@dataclasses.dataclass
+class WorldSpec:
+    num_clients: int = 10
+    profile: str = "heterogeneous"    # heterogeneous | uniform
+    dropout_p: float = 0.0
+    speed_sigma: float = 0.6          # lognormal speed spread (stragglers)
+    profile_seed_offset: int = 1      # profiles seeded at seed + offset
+
+
+@dataclasses.dataclass
+class ExperimentSpec:
+    model: Union[str, Any] = "anomaly-mlp"     # config name or ArchConfig
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    world: WorldSpec = dataclasses.field(default_factory=WorldSpec)
+    comm: Optional[CommModel] = None           # None -> CommModel() defaults
+    strategy: Union[str, StrategyConfig, Any] = "ours"
+    strategy_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    engine: str = "sim"
+    rounds: int = 5
+    seed: int = 0
+    eval_fn: Optional[Callable] = None         # custom eval(params, batch)
+    lr_schedule: Optional[Callable] = None     # spmd engine only
+    optimizer: Union[str, Any, None] = None    # spmd engine only:
+                                               # None -> per-round SGD (the
+                                               # sim's semantics); or
+                                               # "sgd"|"adamw"|"adafactor"
+                                               # or a prebuilt Optimizer
+
+    # ------------------------------------------------------------------
+    # resolution helpers
+    # ------------------------------------------------------------------
+    def resolve_model(self):
+        if not isinstance(self.model, str):
+            return self.model                  # already an ArchConfig
+        from repro.configs import anomaly_mlp
+        named = {"anomaly-mlp": anomaly_mlp.CONFIG,
+                 "anomaly-mlp-road": anomaly_mlp.ROAD_CONFIG,
+                 "anomaly-mlp-smoke": anomaly_mlp.SMOKE}
+        if self.model in named:
+            return named[self.model]
+        from repro.configs import registry
+        return registry.get_config(self.model)
+
+    def resolve_strategy(self) -> StrategyConfig:
+        return strategies_mod.resolve_strategy(self.strategy,
+                                               **self.strategy_kwargs)
+
+    def resolve_comm(self) -> CommModel:
+        return self.comm or CommModel()
+
+    def strategy_name(self) -> str:
+        if isinstance(self.strategy, str):
+            return self.strategy
+        return getattr(self.strategy, "name", "<custom>")
+
+    def build_world(self) -> world_mod.World:
+        return world_mod.build_world(self)
+
+    # ------------------------------------------------------------------
+    # validation
+    # ------------------------------------------------------------------
+    def validate(self) -> "ExperimentSpec":
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; "
+                             f"expected one of {ENGINES}")
+        if self.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if self.world.num_clients < 1:
+            raise ValueError("world.num_clients must be >= 1, got "
+                             f"{self.world.num_clients}")
+        if self.data.dataset not in DATASETS and self.data.factory is None:
+            raise ValueError(f"unknown dataset {self.data.dataset!r}; "
+                             f"expected one of {DATASETS} or a factory")
+        if self.data.partition not in PARTITIONS:
+            raise ValueError(f"unknown partition {self.data.partition!r}; "
+                             f"expected one of {PARTITIONS}")
+        if self.world.profile not in PROFILES:
+            raise ValueError(f"unknown profile {self.world.profile!r}; "
+                             f"expected one of {PROFILES}")
+        strategy = self.resolve_strategy()     # raises on unknown names
+        if self.engine == "spmd":
+            self._validate_spmd(strategy)
+        return self
+
+    def _validate_spmd(self, st: StrategyConfig) -> None:
+        """The compiled path is a synchronous cohort step: reject knobs
+        whose semantics only the event-driven simulator implements."""
+        unsupported = []
+        if st.mode != "sync":
+            unsupported.append("mode='async' (use engine='sim')")
+        if st.dynamic_batch:
+            unsupported.append("dynamic_batch (per-round shape changes "
+                               "would retrace the compiled step)")
+        if st.quantize_updates:
+            unsupported.append("quantize_updates")
+        if st.per_client_lr:
+            unsupported.append("per_client_lr")
+        if st.grad_norm_selection or (st.selection and st.select_fraction < 1.0):
+            unsupported.append("client selection (cohort dim is static)")
+        if self.world.dropout_p > 0:
+            unsupported.append("world.dropout_p > 0")
+        if unsupported:
+            raise ValueError("engine='spmd' does not support: "
+                             + "; ".join(unsupported))

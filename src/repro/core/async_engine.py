@@ -56,6 +56,10 @@ class CommModel:
     t_launch: float = 0.0         # fixed per-step dispatch overhead — the
                                   # paper's kernel-launch/memcpy cost that
                                   # large batches amortize (Tables V-VI)
+    beacon_bytes: float = 0.125   # 1-bit "skip" beacon a θ-filtered client
+                                  # still transmits (§IV-C); charged to both
+                                  # bytes_sent and transfer time so the sim
+                                  # and SPMD engines account identically
 
 
 @dataclasses.dataclass
@@ -95,6 +99,23 @@ class StrategyConfig:
                                           # cap: batch sizes then see equal
                                           # data, isolating the launch-
                                           # overhead effect the paper measures)
+
+
+def local_step_count(n: int, batch_size: int, st: StrategyConfig) -> int:
+    """Per-round local step count, quantized UP to powers of two.
+
+    Heterogeneous client datasets otherwise produce a distinct
+    (steps, batch) shape per client, and every distinct shape re-traces
+    the jitted local scan — the dominant CPU cost at 100 clients.
+    Power-of-two quantization caps the trace count at ~7 per batch size.
+    Shared with the spmd runner (repro.api) so both engines consume and
+    account the same per-round sample volume.
+    """
+    cap = max(1, st.max_samples_per_round // batch_size)
+    steps = max(1, math.ceil(st.local_epochs * n / batch_size))
+    steps = min(steps, cap)
+    steps = 1 << (steps - 1).bit_length()          # next power of two
+    return min(steps, cap)
 
 
 @dataclasses.dataclass
@@ -189,35 +210,17 @@ class FederatedSimulation:
         return run
 
     def _build_eval(self):
-        cfg = self.cfg
-
-        @jax.jit
-        def ev(params, batch):
-            if cfg.family == "mlp":
-                from repro.models import mlp_detector
-                return mlp_detector.accuracy(params, batch, cfg)
-            return -api.loss_fn(params, batch, cfg)   # LM: quality proxy
-
-        return ev
+        return api.build_default_eval(self.cfg)
 
     # ------------------------------------------------------------------
     # client-local training (simulated timing + real gradients)
     # ------------------------------------------------------------------
     def _client_batches(self, cid: int):
-        """Fixed-step resampled batches -> stable jit shapes.
-
-        Step counts are quantized UP to powers of two: heterogeneous client
-        datasets otherwise produce a distinct (steps, batch) shape per
-        client, and every distinct shape re-traces the jitted local scan —
-        the dominant CPU cost at 100 clients. Power-of-two quantization
-        caps the trace count at ~7 per batch size."""
+        """Fixed-step resampled batches -> stable jit shapes (step count
+        from ``local_step_count``)."""
         loader = self.loaders[cid]
-        st = self.strategy
         bs = loader.batch_size
-        steps = max(1, math.ceil(st.local_epochs * loader.n / bs))
-        steps = min(steps, max(1, st.max_samples_per_round // bs))
-        steps = 1 << (steps - 1).bit_length()          # next power of two
-        steps = min(steps, max(1, st.max_samples_per_round // bs))
+        steps = local_step_count(loader.n, bs, self.strategy)
         batches = [loader.sample() for _ in range(steps)]
         stacked = {k: np.stack([b[k] for b in batches]) for k in batches[0]}
         return stacked, steps, steps * bs
@@ -263,7 +266,8 @@ class FederatedSimulation:
     def _transfer_time(self, sent: bool, prof: ClientProfile) -> float:
         if sent:
             return prof.net_latency + self._payload_bytes() / self.comm.bandwidth
-        return prof.net_latency   # 1-bit skip beacon
+        # 1-bit skip beacon: still a message, still on the wire
+        return prof.net_latency + self.comm.beacon_bytes / self.comm.bandwidth
 
     # ------------------------------------------------------------------
     # rounds
@@ -316,6 +320,8 @@ class FederatedSimulation:
             if sent:
                 n_sent += 1
                 self.bytes_sent += self._payload_bytes()
+            else:
+                self.bytes_sent += self.comm.beacon_bytes
             self.comm_time += transfer
             if st.checkpointing:
                 self.checkpoints[cid] = True   # periodic local state save

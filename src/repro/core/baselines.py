@@ -1,67 +1,18 @@
-"""Baseline FL strategies the paper compares against (Table II, Fig. 4).
+"""DEPRECATED shim — the baseline strategies moved to ``repro.api.strategies``.
 
-All are expressed as ``StrategyConfig`` presets over the same simulation
-engine, so comparisons isolate the STRATEGY (not incidental implementation
-differences). Faithfulness notes:
+The five paper baselines (Table II, Fig. 4) are now first-class registry
+entries; prefer::
 
-  fedavg  — McMahan et al. [10]: synchronous, full participation, no
-            filtering. The paper's "Sync (Baseline)".
-  cmfl    — Luping et al. [5]: clients upload only updates RELEVANT to
-            global convergence, measured by sign agreement with the
-            previous global update — synchronous, same alignment test as
-            ours but WITHOUT async/selection/dynamic-batch (so the delta
-            vs "ours" is exactly the paper's claimed combination effect).
-  acfl    — Yan et al. [11] CriticalFL: client selection favours clients
-            with large early-training gradient norms ("critical learning
-            periods"); synchronous, no filtering.
-  fedl2p  — Lee et al. [4]: personalization — per-client learned LR
-            scaling (simplified meta-rule), synchronous, no filtering.
-  ours    — async + θ-filter + adaptive selection + dynamic batch +
-            Weibull checkpointing (the paper's framework).
+    from repro.api import get_strategy
+    strategy = get_strategy("ours").build(batch_size=128)
+
+or, declaratively, ``ExperimentSpec(strategy="ours", ...)``. This module
+re-exports the factory functions and ``PRESETS`` mapping unchanged so
+existing imports keep working.
 """
 from __future__ import annotations
 
-from repro.core.async_engine import StrategyConfig
+from repro.api.strategies import (PRESETS, acfl, cmfl, fedavg, fedl2p,
+                                  ours)
 
-
-def fedavg(batch_size=64, lr=5e-3, local_epochs=1) -> StrategyConfig:
-    return StrategyConfig(mode="sync", theta=None, selection=False,
-                          dynamic_batch=False, checkpointing=False,
-                          batch_size=batch_size, lr=lr,
-                          local_epochs=local_epochs)
-
-
-def cmfl(batch_size=64, lr=5e-3, theta=0.65, local_epochs=1) -> StrategyConfig:
-    return StrategyConfig(mode="sync", theta=theta, selection=False,
-                          dynamic_batch=False, checkpointing=False,
-                          batch_size=batch_size, lr=lr,
-                          local_epochs=local_epochs)
-
-
-def acfl(batch_size=64, lr=5e-3, select_fraction=0.7,
-         local_epochs=1) -> StrategyConfig:
-    return StrategyConfig(mode="sync", theta=None, selection=True,
-                          select_fraction=select_fraction,
-                          grad_norm_selection=True, dynamic_batch=False,
-                          checkpointing=False, batch_size=batch_size,
-                          lr=lr, local_epochs=local_epochs)
-
-
-def fedl2p(batch_size=64, lr=5e-3, local_epochs=1) -> StrategyConfig:
-    return StrategyConfig(mode="sync", theta=None, selection=False,
-                          dynamic_batch=False, checkpointing=False,
-                          per_client_lr=True, batch_size=batch_size,
-                          lr=lr, local_epochs=local_epochs)
-
-
-def ours(batch_size=64, lr=5e-3, theta=0.65, local_epochs=1,
-         dynamic_batch=True, select_fraction=1.0) -> StrategyConfig:
-    return StrategyConfig(mode="async", theta=theta, selection=True,
-                          select_fraction=select_fraction,
-                          dynamic_batch=dynamic_batch, checkpointing=True,
-                          batch_size=batch_size, lr=lr,
-                          local_epochs=local_epochs)
-
-
-PRESETS = {"fedavg": fedavg, "cmfl": cmfl, "acfl": acfl,
-           "fedl2p": fedl2p, "ours": ours}
+__all__ = ["PRESETS", "acfl", "cmfl", "fedavg", "fedl2p", "ours"]

@@ -49,7 +49,8 @@ def init_state(rng, cfg, optimizer=None) -> FLState:
 
 
 def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
-                  lr_schedule=None, agg_dtype=jnp.bfloat16):
+                  lr_schedule=None, agg_dtype=jnp.bfloat16,
+                  beacon_bytes: float = 0.125):
     """Un-jitted step(state, batch) -> (state, metrics) — the dry-run wraps
     this with explicit in/out shardings; trainers use build_fl_train_step.
 
@@ -57,6 +58,9 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
     theta=None -> synchronous FedAvg baseline (mask == ones).
     agg_dtype: cross-client reduction precision (§Perf iteration E —
     bf16 halves the aggregation all-reduce; optimizer math stays fp32).
+    beacon_bytes: wire cost of a filtered client's 1-bit skip beacon —
+    charged into ``bytes_sent`` so the metric matches the event-driven
+    simulator's accounting (CommModel.beacon_bytes).
     """
     optimizer = optimizer or optim_mod.for_config(cfg)
 
@@ -105,9 +109,15 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
             "loss": loss.mean(),
             "accept_rate": passed.mean(),
             "alignment_mean": ratios.mean(),
+            # per-client transmit mask (post-fallback) — the api runner
+            # needs it for per-client transfer-time accounting
+            "mask": mask,
             # client->server bytes actually transmitted this round (the
-            # paper's communication-overhead metric, §V-D)
-            "bytes_sent": mask.sum() * _update_bytes(state.params),
+            # paper's communication-overhead metric, §V-D); filtered
+            # clients are charged their 1-bit skip beacon, matching the
+            # event-driven simulator
+            "bytes_sent": (mask.sum() * _update_bytes(state.params)
+                           + (jnp.float32(C) - mask.sum()) * beacon_bytes),
             "bytes_baseline": jnp.float32(C) * _update_bytes(state.params),
         }
         run = {"accepted": state.metrics["accepted"] + mask.sum(),
@@ -118,9 +128,11 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
 
 
 def build_fl_train_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
-                        lr_schedule=None, donate: bool = True):
+                        lr_schedule=None, donate: bool = True,
+                        beacon_bytes: float = 0.125):
     """jit'd step(state, batch) -> (state, metrics)."""
-    step = make_raw_step(cfg, optimizer, theta, lr_schedule)
+    step = make_raw_step(cfg, optimizer, theta, lr_schedule,
+                         beacon_bytes=beacon_bytes)
     if donate:
         return jax.jit(step, donate_argnums=(0,))
     return jax.jit(step)

@@ -19,8 +19,16 @@ HBM_BW = 819e9                # bytes/s per chip
 ICI_BW = 50e9                 # bytes/s per link
 
 
-def _auto(axes):
-    return (jax.sharding.AxisType.Auto,) * len(axes)
+def _make_mesh(shape, axes, devices=None):
+    """jax.make_mesh across jax versions: AxisType/axis_types only exist
+    from jax 0.5; on 0.4.x every axis is Auto already."""
+    kwargs = {}
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type.Auto,) * len(axes)
+    if devices is not None:
+        kwargs["devices"] = devices
+    return jax.make_mesh(shape, axes, **kwargs)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -29,20 +37,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     n = int(np.prod(shape))
     devices = jax.devices()
     if len(devices) == n:
-        return jax.make_mesh(shape, axes, axis_types=_auto(axes))
+        return _make_mesh(shape, axes)
     if len(devices) < n:
         raise RuntimeError(
             f"need {n} devices for mesh {shape}, have {len(devices)} — "
             f"launch via repro.launch.dryrun (forces 512 host devices)")
     # more devices than needed (e.g. 512 forced, single-pod 256): subset
-    return jax.make_mesh(shape, axes, axis_types=_auto(axes),
-                         devices=devices[:n])
+    return _make_mesh(shape, axes, devices=devices[:n])
 
 
 def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
     """Single-device mesh for smoke tests of the sharded code path."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(axes),
-                         devices=jax.devices()[:1])
+    return _make_mesh(shape, axes, devices=jax.devices()[:1])
 
 
 def client_axes_in_mesh(cfg, mesh) -> tuple:

@@ -93,7 +93,8 @@ def main(argv=None):
     for i in range(args.steps):
         state, metrics = step(state, next_batch())
         if i % args.log_every == 0 or i == args.steps - 1:
-            m = jax.tree.map(float, metrics)
+            # per-client leaves (e.g. the (C,) transmit mask) aren't scalars
+            m = {k: float(v) for k, v in metrics.items() if v.ndim == 0}
             print(f"step {i:4d} loss={m['loss']:.4f} "
                   f"accept={m['accept_rate']:.2f} "
                   f"align={m['alignment_mean']:.3f} "

@@ -57,6 +57,22 @@ def init_cache(cfg: ArchConfig, batch_size: int, seq_len: int):
     return module_for(cfg).init_cache(cfg, batch_size, seq_len)
 
 
+def build_default_eval(cfg: ArchConfig):
+    """Jitted default quality metric ev(params, batch) -> scalar, shared
+    by both FL engines so their accuracy fields stay comparable:
+    classification accuracy for the mlp detector family, a -loss quality
+    proxy for everything else (LMs etc.)."""
+
+    @jax.jit
+    def ev(params, batch):
+        if cfg.family == "mlp":
+            from repro.models import mlp_detector
+            return mlp_detector.accuracy(params, batch, cfg)
+        return -loss_fn(params, batch, cfg)
+
+    return ev
+
+
 # --------------------------------------------------------------------------
 # input specs (ShapeDtypeStruct stand-ins, no allocation)
 # --------------------------------------------------------------------------

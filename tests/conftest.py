@@ -1,7 +1,25 @@
+import importlib.util
+import pathlib
+import sys
+
 import numpy as np
 import pytest
 
-import jax
+# the container image has no `hypothesis` and may not pip install; load
+# the deterministic stub (tests/_hypothesis_stub.py) in its place BEFORE
+# the property-test modules are collected. A real install wins.
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis",
+        pathlib.Path(__file__).with_name("_hypothesis_stub.py"))
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _mod.strategies
+
+import jax  # noqa: E402
 
 
 @pytest.fixture(scope="session", autouse=True)

@@ -1,0 +1,171 @@
+"""repro.api: spec validation, strategy-registry round-trip, sim/spmd
+result-schema parity, and seeded reproducibility."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (ROUND_FIELDS, CommModel, DataSpec, ExperimentSpec,
+                       STRATEGY_REGISTRY, StrategyConfig, WorldSpec,
+                       get_strategy, list_strategies, register_strategy,
+                       run_experiment)
+
+SMALL = dict(model="anomaly-mlp-smoke",
+             data=DataSpec(n_samples=1200, eval_samples=300),
+             world=WorldSpec(num_clients=4, profile="uniform"),
+             rounds=2, seed=0)
+
+
+def _spec(**kw):
+    return ExperimentSpec(**{**SMALL, **kw})
+
+
+def _degenerate_strategy(bs=32):
+    # one local step (max_samples == batch) -> sim == spmd exactly
+    return StrategyConfig(mode="sync", theta=None, selection=False,
+                          dynamic_batch=False, checkpointing=False,
+                          batch_size=bs, lr=3e-2, local_epochs=1,
+                          max_samples_per_round=bs)
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+def test_unknown_engine_rejected():
+    with pytest.raises(ValueError, match="unknown engine"):
+        _spec(engine="ray").validate()
+
+
+def test_bad_rounds_rejected():
+    with pytest.raises(ValueError, match="rounds"):
+        _spec(rounds=0).validate()
+
+
+def test_unknown_strategy_lists_registry():
+    with pytest.raises(ValueError, match="fedavg"):
+        _spec(strategy="no-such-strategy").validate()
+
+
+def test_unknown_partition_rejected():
+    with pytest.raises(ValueError, match="partition"):
+        _spec(data=DataSpec(partition="zipf")).validate()
+
+
+def test_spmd_rejects_async_and_dropout():
+    with pytest.raises(ValueError, match="spmd"):
+        _spec(engine="spmd", strategy="ours").validate()
+    with pytest.raises(ValueError, match="dropout"):
+        _spec(engine="spmd", strategy=_degenerate_strategy(),
+              world=WorldSpec(num_clients=4, profile="uniform",
+                              dropout_p=0.3)).validate()
+
+
+def test_lm_needs_iid_partition():
+    spec = _spec(model="anomaly-mlp-smoke",
+                 data=DataSpec(dataset="lm", partition="dirichlet"))
+    with pytest.raises(ValueError, match="iid"):
+        spec.build_world()
+
+
+# ---------------------------------------------------------------------------
+# registry round-trip
+# ---------------------------------------------------------------------------
+
+def test_register_strategy_roundtrip():
+    name = "_test-fedavg-fast"
+
+    @register_strategy(name, "test-only preset")
+    def fast(batch_size=32, **kw):
+        return get_strategy("fedavg").build(batch_size=batch_size,
+                                            lr=5e-2, **kw)
+
+    try:
+        assert name in list_strategies()
+        res = run_experiment(_spec(strategy=name))
+        assert res.strategy == name
+        assert len(res.records) == SMALL["rounds"]
+        assert res.final.accuracy > 0.0
+    finally:
+        del STRATEGY_REGISTRY[name]
+
+
+def test_presets_all_instantiate():
+    for name in list_strategies():
+        cfg = get_strategy(name).build()
+        assert isinstance(cfg, StrategyConfig), name
+
+
+# ---------------------------------------------------------------------------
+# engine parity (degenerate configuration) + schema
+# ---------------------------------------------------------------------------
+
+def test_sim_spmd_parity_degenerate():
+    comm = CommModel(bandwidth=5e6, latency=0.0, t_sample=2e-3,
+                     t_launch=0.25)
+    spec = _spec(strategy=_degenerate_strategy(), comm=comm, rounds=3)
+    sim = run_experiment(spec)
+    spmd = run_experiment(dataclasses.replace(spec, engine="spmd"))
+    assert sim.num_clients == spmd.num_clients
+    assert sim.param_bytes == spmd.param_bytes
+    for a, b in zip(sim.records, spmd.records):
+        # exact: both engines account the same CommModel arithmetic,
+        # including the 1-bit skip-beacon byte rule
+        assert a.round == b.round
+        assert a.sim_time == b.sim_time
+        assert a.comm_time == b.comm_time
+        assert a.idle_time == b.idle_time
+        assert a.bytes_sent == b.bytes_sent
+        assert a.updates_applied == b.updates_applied
+        assert a.accept_rate == b.accept_rate
+        # fp32 trajectories coincide up to reduction order
+        np.testing.assert_allclose(a.accuracy, b.accuracy, atol=1e-6)
+        np.testing.assert_allclose(a.loss, b.loss, rtol=1e-4)
+
+
+def test_round_record_schema():
+    assert set(ROUND_FIELDS) >= {"accuracy", "sim_time", "bytes_sent",
+                                 "idle_time", "accept_rate", "comm_time",
+                                 "updates_applied", "loss", "round"}
+
+
+# ---------------------------------------------------------------------------
+# byte accounting: filtered clients pay the 1-bit skip beacon
+# ---------------------------------------------------------------------------
+
+def test_skip_beacon_charged_in_sim():
+    comm = CommModel()
+    # theta > 1 can never pass (alignment ratio <= 1): round 0 bootstraps
+    # (no reference sign yet -> everyone sends), later rounds all skip
+    spec = _spec(strategy=get_strategy("cmfl").build(batch_size=32,
+                                                     theta=1.5),
+                 comm=comm, rounds=3)
+    res = run_experiment(spec)
+    r0, r1, r2 = res.records
+    C = res.num_clients
+    assert r0.accept_rate == 1.0 and r1.accept_rate == 0.0
+    assert r0.bytes_sent == C * res.param_bytes
+    np.testing.assert_allclose(r1.bytes_sent - r0.bytes_sent,
+                               C * comm.beacon_bytes)
+    np.testing.assert_allclose(r2.bytes_sent - r1.bytes_sent,
+                               C * comm.beacon_bytes)
+
+
+# ---------------------------------------------------------------------------
+# seeded reproducibility
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["sim", "spmd"])
+def test_same_spec_same_records(engine):
+    strategy = (_degenerate_strategy() if engine == "spmd"
+                else get_strategy("ours").build(batch_size=32,
+                                                dynamic_batch=False))
+    spec = _spec(strategy=strategy, engine=engine,
+                 world=WorldSpec(num_clients=4, profile="heterogeneous",
+                                 dropout_p=0.0))
+    a = run_experiment(spec)
+    b = run_experiment(_spec(strategy=strategy, engine=engine,
+                             world=WorldSpec(num_clients=4,
+                                             profile="heterogeneous",
+                                             dropout_p=0.0)))
+    assert a.records == b.records
