@@ -4,11 +4,16 @@
   PYTHONPATH=src python -m benchmarks.run --only table3_comm_opt
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale repeats
   PYTHONPATH=src python -m benchmarks.run --list     # strategy smoke mode
+  PYTHONPATH=src python -m benchmarks.run --bench-json BENCH_sim.json
+                                                     # sim-engine perf run
 
 Each module prints a CSV block headed by its paper-table provenance; the
 roofline table (deliverable g) is rendered from the dry-run JSONL by
 ``roofline_report``. ``--list`` instantiates every registered strategy
-(no training) — a cheap registry/CI smoke check.
+(no training) — a cheap registry/CI smoke check. ``--bench-json`` times
+the fixed 32-client heterogeneous sim config on both execution paths
+(reference per-client loop vs compiled cohort megastep) and writes
+rounds/sec + dispatches/round so the perf trajectory is tracked in CI.
 """
 from __future__ import annotations
 
@@ -51,6 +56,69 @@ def list_strategies() -> None:
     print(f"# {len(STRATEGY_REGISTRY)} strategies instantiated OK")
 
 
+def bench_sim(json_path: str, rounds: int = 20, clients: int = 32,
+              warmup: int = 2) -> dict:
+    """Sim-engine perf benchmark (ISSUE 2 acceptance metric): the fixed
+    ``clients``-client heterogeneous config, timed on BOTH execution
+    paths. Reports rounds/sec and compiled dispatches/round; the
+    megastep path must hold O(1) dispatches while the reference loop
+    pays O(clients).
+
+    The config is the communication-centric FedSGD setting the paper's
+    Tables V-VI profile (one local step per client per round,
+    ``max_samples_per_round == batch_size``), where per-client dispatch /
+    transfer / sync overhead dominates — the effect this benchmark
+    exists to track. Compute-bound configs (16 local steps) still gain
+    ~2.3x from batched cohort math; see README "Performance". Two warmup
+    rounds per path absorb jit compiles (round 1 re-specializes the
+    megastep on ``has_ref``)."""
+    import json
+
+    from repro.api import DataSpec, ExperimentSpec, WorldSpec, get_strategy
+    from repro.core import async_engine as ae
+
+    spec = ExperimentSpec(
+        model="anomaly-mlp",
+        data=DataSpec(n_samples=20000, eval_samples=2000),
+        world=WorldSpec(num_clients=clients, profile="heterogeneous"),
+        strategy=get_strategy("ours").build(batch_size=64,
+                                            dynamic_batch=False,
+                                            max_samples_per_round=64),
+        seed=0)
+    cfg = spec.resolve_model()
+    world = spec.build_world()
+
+    out = {"config": {"model": "anomaly-mlp", "clients": clients,
+                      "rounds": rounds, "strategy": "ours",
+                      "batch_size": 64, "max_samples_per_round": 64,
+                      "local_steps": 1, "profile": "heterogeneous"}}
+    for name, megastep in (("loop", False), ("megastep", True)):
+        sim = ae.FederatedSimulation(cfg, world.client_arrays,
+                                     world.eval_arrays,
+                                     spec.resolve_strategy(), world.profiles,
+                                     seed=0, megastep=megastep)
+        for r in range(warmup):
+            sim.run_round(r)
+        d0 = sim.dispatches
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            sim.run_round(warmup + r)
+        dt = time.perf_counter() - t0
+        out[name] = {"seconds": round(dt, 3),
+                     "rounds_per_sec": round(rounds / dt, 3),
+                     "dispatches_per_round": (sim.dispatches - d0) / rounds}
+    out["speedup"] = round(out["megastep"]["rounds_per_sec"]
+                           / out["loop"]["rounds_per_sec"], 2)
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(json.dumps(out, indent=2))
+    print(f"# wrote {json_path}: {out['speedup']}x rounds/sec "
+          f"({out['loop']['dispatches_per_round']:.1f} -> "
+          f"{out['megastep']['dispatches_per_round']:.1f} dispatches/round)")
+    return out
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
@@ -58,9 +126,19 @@ def main(argv=None) -> None:
                     help="paper-scale repeat counts (slow on CPU)")
     ap.add_argument("--list", action="store_true",
                     help="instantiate every registered strategy and exit")
+    ap.add_argument("--bench-json", default=None, metavar="PATH",
+                    help="run the sim-engine perf benchmark and write "
+                         "rounds/sec + dispatches/round JSON to PATH")
+    ap.add_argument("--bench-rounds", type=int, default=20,
+                    help="timed rounds for --bench-json (CI uses fewer)")
+    ap.add_argument("--bench-clients", type=int, default=32)
     args = ap.parse_args(argv)
     if args.list:
         list_strategies()
+        return
+    if args.bench_json:
+        bench_sim(args.bench_json, rounds=args.bench_rounds,
+                  clients=args.bench_clients)
         return
     mods = [args.only] if args.only else MODULES
     failures = []

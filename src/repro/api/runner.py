@@ -57,7 +57,9 @@ def _run_sim(spec: ExperimentSpec) -> ExperimentResult:
     sim = ae.FederatedSimulation(cfg, world.client_arrays, world.eval_arrays,
                                  strategy, world.profiles,
                                  comm=spec.resolve_comm(), seed=spec.seed,
-                                 eval_fn=spec.eval_fn)
+                                 eval_fn=spec.eval_fn,
+                                 eval_every=spec.eval_every,
+                                 megastep=spec.megastep)
     hist = sim.run(spec.rounds)
     records = [RoundRecord(round=m.round, sim_time=m.sim_time,
                            comm_time=m.comm_time, idle_time=m.idle_time,
@@ -168,7 +170,10 @@ def _run_spmd(spec: ExperimentSpec) -> ExperimentResult:
         idle_time += sum(barrier - a for a in arrivals)
         bytes_sent += float(m["bytes_sent"])
 
-        acc = float(evaluate(state.params, eval_dev))
+        if rnd % spec.eval_every == 0 or rnd == spec.rounds - 1:
+            acc = float(evaluate(state.params, eval_dev))
+        else:
+            acc = records[-1].accuracy if records else float("nan")
         records.append(RoundRecord(
             round=rnd, sim_time=sim_time, comm_time=comm_time,
             idle_time=idle_time, bytes_sent=bytes_sent,

@@ -61,6 +61,14 @@ class ExperimentSpec:
     engine: str = "sim"
     rounds: int = 5
     seed: int = 0
+    eval_every: int = 1                        # evaluate every k-th round
+                                               # (+ the final round); >1
+                                               # skips the eval dispatch on
+                                               # off-rounds of long runs
+    megastep: bool = True                      # sim engine: one compiled
+                                               # cohort dispatch per round
+                                               # (False -> the reference
+                                               # per-client loop)
     eval_fn: Optional[Callable] = None         # custom eval(params, batch)
     lr_schedule: Optional[Callable] = None     # spmd engine only
     optimizer: Union[str, Any, None] = None    # spmd engine only:
@@ -108,6 +116,9 @@ class ExperimentSpec:
                              f"expected one of {ENGINES}")
         if self.rounds < 1:
             raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if self.eval_every < 1:
+            raise ValueError(
+                f"eval_every must be >= 1, got {self.eval_every}")
         if self.world.num_clients < 1:
             raise ValueError("world.num_clients must be >= 1, got "
                              f"{self.world.num_clients}")

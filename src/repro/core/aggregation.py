@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def masked_mean(client_trees, mask: jnp.ndarray, weights=None,
@@ -46,6 +47,13 @@ def fedavg(client_trees, weights=None):
 def staleness_weight(tau, alpha0: float = 0.6):
     """Polynomial staleness discount for async updates."""
     return alpha0 * (1.0 + jnp.asarray(tau, jnp.float32)) ** -0.5
+
+
+def staleness_weight_host(tau, alpha0: float = 0.6) -> float:
+    """Host-side f32 twin of ``staleness_weight`` — the simulator computes
+    per-arrival weights in Python without a device round-trip per sender."""
+    return float(np.float32(alpha0) * np.float32(1.0 + tau)
+                 ** np.float32(-0.5))
 
 
 def apply_async_update(global_tree, client_tree, alpha):

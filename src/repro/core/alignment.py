@@ -9,16 +9,20 @@ Implementation notes:
   * operates on flat pytrees; zero entries in the reference count as
     "matching" only if the local entry is also zero (sign(0)==sign(0)),
     mirroring the paper's ``sign(W)`` comparison.
-  * ``per_client_alignment`` vectorizes over a leading client axis —
-    this is the production path used by ``fl_step`` (one shot for all C
-    clients, no per-tensor kernel launches: DESIGN.md §7).
-  * an optional Pallas kernel path (repro.kernels.ops.sign_align) is used
-    when ``use_kernel=True``; pure-jnp is the oracle.
+  * ``per_client_alignment`` vectorizes over a leading client axis
+    (pytree space — the small-scale oracle).
+  * ``cohort_alignment`` is the production path used by ``fl_step`` and
+    the simulator megastep: it consumes the flat (C, rows, LANE) arena
+    layout (repro.kernels.arena) so all C clients are scored in one
+    kernel sweep — Pallas on TPU, jnp oracle on CPU, no per-tensor
+    launches (DESIGN.md §7).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import arena as arena_ops
 
 
 def tree_sign(tree):
@@ -56,6 +60,16 @@ def per_client_alignment(client_trees, ref_sign_tree) -> jnp.ndarray:
         aligned += eq.reshape(C, -1).sum(axis=1)
         total += jnp.float32(ref.size)
     return aligned / jnp.maximum(total, 1.0)
+
+
+def cohort_alignment(u_mat, ref_mat, n: int) -> jnp.ndarray:
+    """(C,) relevance ratios from arena-layout updates.
+
+    u_mat: (C, rows, LANE) f32 packed updates; ref_mat: (rows, LANE) int8
+    reference signs with -2 padding sentinel; n: true element count.
+    """
+    counts = arena_ops.cohort_sign_align(u_mat, ref_mat)
+    return counts / jnp.maximum(jnp.float32(n), 1.0)
 
 
 def selection_mask(ratios: jnp.ndarray, theta: float) -> jnp.ndarray:

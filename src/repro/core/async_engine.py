@@ -21,6 +21,19 @@ Composable strategy flags mirror the paper's ablations (Table III):
   dynamic_batch    — capacity-proportional batch assignment (§IV-A)
   checkpointing    — Weibull-interval checkpoint/restore on dropout (§IV-C)
 
+Execution: by default each round's client work runs as ONE compiled
+cohort megastep (core/megastep.py) — selected clients' fixed-shape
+batches are stacked into (C, steps, B, ...) and a single jitted
+vmap-of-scan returns per-client deltas (packed into the flat parameter
+arena), losses, sign-alignment ratios and update norms; server
+aggregation is one weighted arena sum (Pallas on TPU, jnp oracle on
+CPU). Heterogeneous (steps, batch) shapes fall into a handful of
+power-of-two groups, each one dispatch. ``megastep=False`` selects the
+original per-client Python loop, kept as the seeded reference
+implementation (tests/test_megastep.py pins the two trajectories to each
+other). Timing and byte accounting stay event-driven in Python either
+way, consuming the batched device results.
+
 Simulated time model (recorded separately from real wall time):
   train_time  = steps · batch · t_sample / speed
   comm_time   = latency + bytes/bandwidth   (only if the update is SENT —
@@ -39,11 +52,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation, alignment
+from repro.core import aggregation, alignment, compression
+from repro.core import megastep as megastep_mod
 from repro.core.batchsize import BatchSizeController, ClientMetrics
 from repro.core.checkpoint_policy import fit_weibull, optimal_interval
 from repro.core.selection import AdaptiveClientSelector
 from repro.data.loader import ArrayLoader
+from repro.kernels import arena as arena_mod
 from repro.models import api
 from repro.optim import adamw as optim_mod
 
@@ -107,7 +122,9 @@ def local_step_count(n: int, batch_size: int, st: StrategyConfig) -> int:
     Heterogeneous client datasets otherwise produce a distinct
     (steps, batch) shape per client, and every distinct shape re-traces
     the jitted local scan — the dominant CPU cost at 100 clients.
-    Power-of-two quantization caps the trace count at ~7 per batch size.
+    Power-of-two quantization caps the trace count at ~7 per batch size
+    (and, on the megastep path, caps the number of cohort shape GROUPS —
+    each group is one compiled dispatch per round).
     Shared with the spmd runner (repro.api) so both engines consume and
     account the same per-round sample volume.
     """
@@ -135,7 +152,8 @@ class FederatedSimulation:
     def __init__(self, cfg, client_arrays: List[dict], eval_arrays: dict,
                  strategy: StrategyConfig, profiles: List[ClientProfile],
                  comm: CommModel = None, seed: int = 0,
-                 eval_fn: Callable = None):
+                 eval_fn: Callable = None, eval_every: int = 1,
+                 megastep: bool = True):
         self.cfg = cfg
         self.strategy = strategy
         self.comm = comm or CommModel()
@@ -143,15 +161,38 @@ class FederatedSimulation:
         self.rng = np.random.default_rng(seed)
         self.num_clients = len(client_arrays)
         self.eval_arrays = eval_arrays
+        # device-cache the eval batch ONCE (was re-transferred every round)
+        self._eval_dev = jax.tree.map(jnp.asarray, eval_arrays)
+        self.eval_every = max(1, int(eval_every))
+        self.megastep = bool(megastep)
+        self.dispatches = 0           # compiled-call count (bench metric)
 
         # --- model/optim setup ------------------------------------------
-        self.params = api.init_params(jax.random.PRNGKey(seed), cfg)
+        self._params_tree = api.init_params(jax.random.PRNGKey(seed), cfg)
         self.param_bytes = sum(x.size * x.dtype.itemsize
-                               for x in jax.tree.leaves(self.params))
+                               for x in jax.tree.leaves(self._params_tree))
         self.opt = optim_mod.sgd(lr=strategy.lr)
         self.ref_sign = None          # sign(w_g^t − w_g^{t−1}); None round 0
         self._local_run = self._build_local_run()
         self._eval = eval_fn or self._build_eval()
+
+        # --- cohort megastep / parameter arena ----------------------------
+        self._arena = arena_mod.ParamArena(self._params_tree)
+        self._params_mat = None       # canonical device state when megastep
+        self._ref_mat = None          # (rows, lane) int8, -2 padding
+        self._ef_arena = None         # (N, rows, lane) batched EF buffers
+        if self.megastep:
+            self._params_mat = self._arena.pack(self._params_tree)
+            self._cohort_step = megastep_mod.build_cohort_step(
+                cfg, self.opt, self._arena, theta=strategy.theta,
+                quantize=strategy.quantize_updates)
+            self._apply_update = megastep_mod.build_apply_update(self._arena)
+            self._unpack = jax.jit(self._arena.unpack)
+            if strategy.quantize_updates:
+                # +1 dummy row absorbs the EF residuals of cohort-width
+                # padding rows (see _run_round_mega pass 3)
+                self._ef_arena = compression.init_error_arena(
+                    self.num_clients + 1, self._arena)
 
         # --- per-client state --------------------------------------------
         self.batch_ctrl = BatchSizeController()
@@ -176,7 +217,9 @@ class FederatedSimulation:
 
         # --- compression (beyond-paper) -----------------------------------
         self._ef_state = {}
-        self._wire_bytes = None
+        self._wire_bytes = (compression.arena_wire_bytes(self._arena)
+                            if (self.megastep and strategy.quantize_updates)
+                            else None)
 
         # --- accounting -----------------------------------------------------
         self.sim_time = 0.0
@@ -185,6 +228,20 @@ class FederatedSimulation:
         self.bytes_sent = 0.0
         self.server_step = 0
         self.history: List[RoundMetrics] = []
+
+    # ------------------------------------------------------------------
+    # parameter state (pytree view lazily unpacked from the arena)
+    # ------------------------------------------------------------------
+    @property
+    def params(self):
+        if self._params_tree is None:
+            self._params_tree = self._unpack(self._params_mat)
+            self.dispatches += 1
+        return self._params_tree
+
+    @params.setter
+    def params(self, tree):
+        self._params_tree = tree
 
     # ------------------------------------------------------------------
     # jitted pieces
@@ -225,21 +282,25 @@ class FederatedSimulation:
         stacked = {k: np.stack([b[k] for b in batches]) for k in batches[0]}
         return stacked, steps, steps * bs
 
+    def _train_time(self, steps: int, n_samples: int,
+                    prof: ClientProfile) -> float:
+        """Per-step dispatch overhead + per-sample compute (paper §IV-A:
+        larger batches -> fewer steps -> amortized launch cost)."""
+        return (steps * self.comm.t_launch
+                + n_samples * self.comm.t_sample) / max(prof.speed, 1e-3)
+
     def _train_client(self, cid: int):
         batches, steps, n_samples = self._client_batches(cid)
         new_params, loss = self._local_run(
             self.params, jax.tree.map(jnp.asarray, batches),
             jnp.float32(self.client_lr_scale[cid]))
+        self.dispatches += 1
         prof = self.profiles[cid]
-        # per-step dispatch overhead + per-sample compute (paper §IV-A:
-        # larger batches -> fewer steps -> amortized launch cost)
-        train_time = (steps * self.comm.t_launch
-                      + n_samples * self.comm.t_sample) / max(prof.speed, 1e-3)
+        train_time = self._train_time(steps, n_samples, prof)
         delta = jax.tree.map(lambda n, o: (n - o).astype(jnp.float32),
                              new_params, self.params)
         if self.strategy.quantize_updates:
             # int8 + error feedback on the wire; server dequantizes
-            from repro.core import compression
             err = self._ef_state.setdefault(
                 cid, compression.init_error_state(delta))
             q, s, _n, self._ef_state[cid] = compression.compress_update(
@@ -249,6 +310,7 @@ class FederatedSimulation:
                 lambda o, d: (o.astype(jnp.float32) + d).astype(o.dtype),
                 self.params, delta)
             self._wire_bytes = compression.transport_bytes(q, s)
+            self.dispatches += 2
         return new_params, delta, float(loss), train_time
 
     def _filter_update(self, delta) -> tuple:
@@ -256,6 +318,7 @@ class FederatedSimulation:
         if self.strategy.theta is None or self.ref_sign is None:
             return True, 1.0
         ratio = float(alignment.alignment_ratio(delta, self.ref_sign))
+        self.dispatches += 1
         return ratio >= self.strategy.theta, ratio
 
     def _payload_bytes(self) -> float:
@@ -281,7 +344,209 @@ class FederatedSimulation:
             return self.selector.select(k)
         return list(range(self.num_clients))
 
-    def run_round(self, rnd: int) -> RoundMetrics:
+    def run_round(self, rnd: int, evaluate: bool = True) -> RoundMetrics:
+        if self.megastep:
+            return self._run_round_mega(rnd, evaluate)
+        return self._run_round_loop(rnd, evaluate)
+
+    def _finish_round(self, rnd: int, evaluate: bool, n_selected: int,
+                      losses: List[float], n_sent: int, updates_applied: int,
+                      round_times: Dict[int, float]) -> RoundMetrics:
+        """Round tail shared by both execution paths: Weibull checkpoint
+        refit, dynamic-batch feedback, (optional) evaluation, metrics."""
+        st = self.strategy
+        if st.checkpointing and len(self.failure_log) >= 2:
+            lam, k = fit_weibull(np.diff(sorted(self.failure_log)))
+            self.ckpt_interval = optimal_interval(
+                max(self.sim_time, 1.0), self.recovery_time, lam, k)
+        if st.dynamic_batch:
+            for cid, b in self.batch_ctrl.feedback(round_times).items():
+                if cid < len(self.loaders):
+                    self.loaders[cid].set_batch_size(b)
+        if evaluate:
+            acc = float(self._eval(self.params, self._eval_dev))
+            self.dispatches += 1
+        else:
+            # off-round: carry the last measured accuracy forward
+            acc = self.history[-1].accuracy if self.history else float("nan")
+        m = RoundMetrics(
+            round=rnd, sim_time=self.sim_time, comm_time=self.comm_time,
+            idle_time=self.idle_time, bytes_sent=self.bytes_sent,
+            updates_applied=updates_applied,
+            accept_rate=n_sent / max(n_selected, 1), accuracy=acc,
+            loss=float(np.mean(losses)) if losses else float("nan"))
+        self.history.append(m)
+        return m
+
+    # ------------------------------------------------------------------
+    # megastep path: one compiled dispatch per cohort shape group
+    # ------------------------------------------------------------------
+    def _run_round_mega(self, rnd: int, evaluate: bool = True) -> RoundMetrics:
+        st = self.strategy
+        selected = self._select_clients()
+        round_start = self.sim_time
+
+        # pass 1: dropout draws — SAME Generator order as the loop path
+        cohort: List[int] = []
+        meta: Dict[int, tuple] = {}       # cid -> (delay, steps, n_samples)
+        for cid in selected:
+            prof = self.profiles[cid]
+            delay = 0.0
+            if self.rng.random() < prof.dropout_p:
+                self.failure_log.append(round_start)
+                self.selector.observe(cid, delivered=False)
+                if not st.checkpointing:
+                    continue                      # client lost this round
+                delay = (self.recovery_time if self.checkpoints.get(cid)
+                         else self.restart_time)
+            cohort.append(cid)
+            meta[cid] = (delay, 0, 0)
+
+        # pass 2: per-loader batch draws (per-client Generators — identical
+        # draws to the loop path), grouped by rectangular (steps, batch)
+        groups: Dict[tuple, dict] = {}
+        for cid in cohort:
+            batches, steps, n_samples = self._client_batches(cid)
+            meta[cid] = (meta[cid][0], steps, n_samples)
+            g = groups.setdefault((steps, self.loaders[cid].batch_size),
+                                  {"cids": [], "batches": []})
+            g["cids"].append(cid)
+            g["batches"].append(batches)
+
+        # pass 3: ONE compiled dispatch per shape group — per-client
+        # deltas stay on device in the arena; only (C,)-vectors come home.
+        # The cohort width is bucketed UP to a power of two (padding
+        # replicates the last client; pad results are discarded and pad
+        # aggregation weights are zero) so dropout-varying survivor
+        # counts reuse compiled traces instead of re-tracing per C.
+        has_ref = self._ref_mat is not None and st.theta is not None
+        per_client: Dict[int, tuple] = {}     # cid -> (loss, ratio, norm)
+        group_results = []                    # (cids, padded_C, deltas_dev)
+        for (steps, bs), g in groups.items():
+            cids = g["cids"]
+            C = len(cids)
+            padded = 1 << (C - 1).bit_length()
+            blist = g["batches"] + [g["batches"][-1]] * (padded - C)
+            batch = {k: jnp.asarray(np.stack([b[k] for b in blist]))
+                     for k in blist[0]}
+            lr_scale = np.ones(padded, np.float32)
+            lr_scale[:C] = self.client_lr_scale[cids]
+            idx = None
+            if st.quantize_updates:
+                # pad rows scatter their EF residual into the dummy row
+                # (index num_clients) of the (N+1)-row error arena
+                idx = jnp.asarray(
+                    np.concatenate([cids, np.full(padded - C,
+                                                  self.num_clients)]),
+                    jnp.int32)
+            deltas, losses, ratios, norms, new_ef = self._cohort_step(
+                self._params_mat, batch, jnp.asarray(lr_scale),
+                self._ref_mat if has_ref else None,
+                self._ef_arena, idx, has_ref=has_ref)
+            self.dispatches += 1
+            if st.quantize_updates:
+                self._ef_arena = new_ef
+            losses, ratios, norms = (np.asarray(losses), np.asarray(ratios),
+                                     np.asarray(norms))
+            for j, cid in enumerate(cids):
+                per_client[cid] = (float(losses[j]), float(ratios[j]),
+                                   float(norms[j]))
+            group_results.append((cids, padded, deltas))
+
+        # pass 4: event-driven accounting, in the loop path's client order
+        losses_all: List[float] = []
+        arrivals = []                     # (arrive, cid, sent)
+        round_times: Dict[int, float] = {}
+        n_sent = 0
+        for cid in cohort:
+            delay, steps, n_samples = meta[cid]
+            loss, ratio, gn = per_client[cid]
+            prof = self.profiles[cid]
+            losses_all.append(loss)
+            sent = (st.theta is None or not has_ref
+                    or ratio >= st.theta)
+            transfer = self._transfer_time(sent, prof)
+            arrive = (round_start + delay
+                      + self._train_time(steps, n_samples, prof) + transfer)
+            arrivals.append((arrive, cid, sent))
+            round_times[cid] = arrive - round_start
+            self.selector.observe(cid, delivered=True, passed=sent,
+                                  round_time=arrive - round_start)
+            self.grad_norms[cid] = 0.5 * self.grad_norms[cid] + 0.5 * gn
+            if st.per_client_lr:
+                self.client_lr_scale[cid] = float(np.clip(
+                    self.client_lr_scale[cid] * (1.05 if gn < 1.0 else 0.9),
+                    0.25, 2.0))
+            if sent:
+                n_sent += 1
+                self.bytes_sent += self._payload_bytes()
+            else:
+                self.bytes_sent += self.comm.beacon_bytes
+            self.comm_time += transfer
+            if st.checkpointing:
+                self.checkpoints[cid] = True   # periodic local state save
+
+        arrivals.sort(key=lambda a: a[0])
+        updates_applied = 0
+        weights: Dict[int, float] = {}    # cid -> aggregation weight
+
+        if st.mode == "sync":
+            senders = [cid for (_, cid, sent) in arrivals if sent]
+            if senders:
+                w = 1.0 / len(senders)
+                weights = {cid: w for cid in senders}
+                self.server_step += 1
+                updates_applied = 1
+            if arrivals:
+                barrier = arrivals[-1][0]
+                self.idle_time += sum(barrier - a for (a, *_r) in arrivals)
+                self.sim_time = barrier
+        else:
+            # async: quorum clock + FedBuff-style buffered mean of
+            # staleness-discounted deltas (see the loop path's notes)
+            if arrivals:
+                q_idx = max(0, math.ceil(st.quorum * len(arrivals)) - 1)
+                self.sim_time = arrivals[q_idx][0]
+                buf = []
+                for i, (_arrive, cid, sent) in enumerate(arrivals):
+                    if not sent:
+                        continue
+                    tau = max(0, i - q_idx)
+                    alpha = aggregation.staleness_weight_host(tau, st.alpha0)
+                    buf.append((cid, alpha))
+                    self.server_step += 1
+                    updates_applied += 1
+                if buf:
+                    inv = 1.0 / len(buf)
+                    weights = {cid: alpha * inv for cid, alpha in buf}
+
+        # server aggregation: ONE weighted arena sum over all shape groups
+        # (w_g ← w_anchor + Σ w_i·Δ_i covers both sync FedAvg and async
+        # staleness buffering — no per-round pytree stacking)
+        if weights:
+            d_groups = tuple(d for (_cids, _p, d) in group_results)
+            w_groups = []
+            for cids, padded, _d in group_results:
+                w = np.zeros(padded, np.float32)    # pad rows weigh nothing
+                w[:len(cids)] = [weights.get(c, 0.0) for c in cids]
+                w_groups.append(jnp.asarray(w))
+            new_mat, ref_mat = self._apply_update(self._params_mat,
+                                                  d_groups, tuple(w_groups))
+            self.dispatches += 1
+            self._params_mat = new_mat
+            self._params_tree = None      # pytree view now stale
+            # reference direction = sign of the global movement this round
+            if updates_applied and st.theta is not None:
+                self._ref_mat = ref_mat
+
+        return self._finish_round(rnd, evaluate, len(selected), losses_all,
+                                  n_sent, updates_applied, round_times)
+
+    # ------------------------------------------------------------------
+    # reference path: the original per-client loop (O(clients) dispatches
+    # per round) — kept as the seeded oracle the megastep is pinned to
+    # ------------------------------------------------------------------
+    def _run_round_loop(self, rnd: int, evaluate: bool = True) -> RoundMetrics:
         st = self.strategy
         selected = self._select_clients()
         round_start = self.sim_time
@@ -312,6 +577,7 @@ class FederatedSimulation:
                                   round_time=arrive - round_start)
             gn = float(np.sqrt(sum(float(jnp.vdot(g, g))
                                    for g in jax.tree.leaves(delta))))
+            self.dispatches += 1
             self.grad_norms[cid] = 0.5 * self.grad_norms[cid] + 0.5 * gn
             if st.per_client_lr:
                 self.client_lr_scale[cid] = float(np.clip(
@@ -334,6 +600,7 @@ class FederatedSimulation:
             if sent_params:
                 stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *sent_params)
                 self.params = aggregation.fedavg(stacked)
+                self.dispatches += 1
                 self.server_step += 1
                 updates_applied = 1
             if arrivals:
@@ -354,21 +621,13 @@ class FederatedSimulation:
                     if not sent:
                         continue
                     tau = max(0, i - q_idx)
-                    alpha = float(aggregation.staleness_weight(tau, st.alpha0))
+                    alpha = aggregation.staleness_weight_host(tau, st.alpha0)
                     buf.append((alpha, new_params))
                     self.server_step += 1
                     updates_applied += 1
                 self.params = aggregation.buffered_async_update(
                     self.params, buf)
-
-        if st.checkpointing and len(self.failure_log) >= 2:
-            lam, k = fit_weibull(np.diff(sorted(self.failure_log)))
-            self.ckpt_interval = optimal_interval(
-                max(self.sim_time, 1.0), self.recovery_time, lam, k)
-        if st.dynamic_batch:
-            for cid, b in self.batch_ctrl.feedback(round_times).items():
-                if cid < len(self.loaders):
-                    self.loaders[cid].set_batch_size(b)
+                self.dispatches += 1
 
         # reference direction = sign of the global movement this round
         if updates_applied and st.theta is not None:
@@ -376,21 +635,18 @@ class FederatedSimulation:
                 lambda n, o: jnp.sign(n.astype(jnp.float32)
                                       - o.astype(jnp.float32)).astype(jnp.int8),
                 self.params, prev_params)
+            self.dispatches += 1
 
-        acc = float(self._eval(self.params,
-                               jax.tree.map(jnp.asarray, self.eval_arrays)))
-        m = RoundMetrics(
-            round=rnd, sim_time=self.sim_time, comm_time=self.comm_time,
-            idle_time=self.idle_time, bytes_sent=self.bytes_sent,
-            updates_applied=updates_applied,
-            accept_rate=n_sent / max(len(selected), 1), accuracy=acc,
-            loss=float(np.mean(losses)) if losses else float("nan"))
-        self.history.append(m)
-        return m
+        return self._finish_round(rnd, evaluate, len(selected), losses,
+                                  n_sent, updates_applied, round_times)
 
     def run(self, num_rounds: int) -> List[RoundMetrics]:
         for r in range(num_rounds):
-            self.run_round(r)
+            # eval_every > 1 skips the eval dispatch on off-rounds (the
+            # previous accuracy is carried forward); the final round is
+            # always evaluated so ``result.final`` stays meaningful
+            evaluate = (r % self.eval_every == 0) or (r == num_rounds - 1)
+            self.run_round(r, evaluate=evaluate)
         return self.history
 
 

@@ -19,12 +19,47 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import arena as arena_ops
 from repro.kernels import ops
 
 
 def init_error_state(params):
     """Per-client error-feedback buffers (fp32, zero)."""
     return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+# ---------------------------------------------------------------------------
+# batched (arena-space) error feedback — the cohort megastep path
+# ---------------------------------------------------------------------------
+
+def init_error_arena(num_clients: int, arena) -> jnp.ndarray:
+    """All clients' EF buffers as ONE (N, rows, lane) f32 device array —
+    gathered/scattered by cohort index inside the megastep, so per-round
+    compression costs one dispatch instead of O(clients) pytree walks."""
+    return jnp.zeros((num_clients, arena.rows, arena.lane), jnp.float32)
+
+
+def compress_cohort(deltas, err):
+    """EF-corrected int8 round-trip for a whole cohort in arena space.
+
+    deltas, err: (C, rows, lane) f32. Returns (restored, new_err) where
+    ``restored`` is the dequantized wire payload (what the server sees)
+    and ``new_err`` the residuals to carry. Row-wise quantization is
+    independent per row, so the cohort folds into one (C·rows, lane)
+    kernel call — identical scales to the per-client path.
+    """
+    corrected = deltas + err
+    C, R, L = corrected.shape
+    q, s = arena_ops.quantize_rows(corrected.reshape(C * R, L))
+    restored = arena_ops.dequantize_rows(q, s).reshape(C, R, L)
+    return restored, corrected - restored
+
+
+def arena_wire_bytes(arena) -> int:
+    """Wire bytes of one client's compressed update in the arena layout
+    (int8 payload + one f32 scale per row) — matches ``transport_bytes``
+    for the same flattened tree."""
+    return arena.rows * arena.lane + 4 * arena.rows
 
 
 def compress_update(update, error, interpret=None):

@@ -6,11 +6,14 @@ One FL "round" = one compiled step:
      cohort per (pod×data) mesh shard);
   2. ``vmap(grad)`` produces per-client gradient pytrees (C, ...) — each
      mesh shard materializes exactly one client's gradients;
-  3. per-client sign-alignment ratios vs the sign of the previous global
-     update (Algorithm 1, CALCULATE-RELEVANCE);
-  4. the mask ``ratio ≥ θ`` gates a weighted mean over C — GSPMD lowers
-     this to a masked all-reduce (the paper's selective update as a
-     collective);
+  3. gradients are packed ONCE into the flat (C, rows, LANE) parameter
+     arena (repro.kernels.arena); per-client sign-alignment ratios vs the
+     sign of the previous global update (Algorithm 1,
+     CALCULATE-RELEVANCE) run as one kernel sweep over that buffer —
+     Pallas on TPU, jnp oracle on CPU;
+  4. the mask ``ratio ≥ θ`` gates a weighted arena sum over C — GSPMD
+     lowers this to a masked all-reduce (the paper's selective update as
+     a collective);
   5. optimizer update + new reference sign.
 
 ``theta=None`` (or mask forced to ones) gives the synchronous FedAvg
@@ -19,13 +22,13 @@ ref_sign are kept unchanged (server keeps w_g — §IV-C).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import aggregation, alignment
+from repro.core import alignment
+from repro.kernels import arena as arena_mod
 from repro.models import api
 from repro.optim import adamw as optim_mod
 
@@ -63,6 +66,11 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
     simulator's accounting (CommModel.beacon_bytes).
     """
     optimizer = optimizer or optim_mod.for_config(cfg)
+    # static arena layout from the config's parameter template — no
+    # allocation (eval_shape); pack/unpack trace away inside the step
+    template = jax.eval_shape(
+        lambda: api.init_params(jax.random.PRNGKey(0), cfg))
+    arena = arena_mod.ParamArena(template)
 
     def loss_for_client(params, client_batch):
         return api.loss_fn(params, client_batch, cfg)
@@ -74,13 +82,16 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
         )(state.params, batch)                                 # loss: (C,)
         C = loss.shape[0]
 
-        # (3)+(4) selective aggregation (the paper's contribution)
+        # (3)+(4) selective aggregation (the paper's contribution) on the
+        # flat (C, rows, LANE) arena — one packed buffer, one kernel sweep
+        u = arena.pack_cohort(grads)
         if theta is None:
             mask = jnp.ones((C,), jnp.float32)
             ratios = jnp.ones((C,), jnp.float32)
             passed = mask
         else:
-            ratios = alignment.per_client_alignment(grads, state.ref_sign)
+            ratios = alignment.cohort_alignment(
+                u, arena.pack_signs(state.ref_sign), arena.n)
             passed = alignment.selection_mask(ratios, theta)
             # bootstrap: round 0 has no reference direction yet -> accept all
             passed = jnp.where(state.step == 0, jnp.ones_like(passed), passed)
@@ -89,7 +100,10 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
             # θ this round, accept all rather than stall. The faithful
             # keep-w_g semantics live in the async simulator path.
             mask = jnp.where(passed.sum() > 0, passed, jnp.ones_like(passed))
-        agg = aggregation.masked_mean(grads, mask, reduce_dtype=agg_dtype)
+        w = mask / jnp.maximum(mask.sum(), 1e-9)
+        agg = arena.unpack(
+            arena_mod.weighted_sum(u, w, compute_dtype=agg_dtype),
+            dtype=jnp.float32)
         any_accepted = mask.sum() > 0
 
         # (5) optimizer update; hold position if nothing was accepted
@@ -105,6 +119,7 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
                                    jnp.sign(a).astype(jnp.int8), r),
             agg, state.ref_sign)
 
+        update_bytes = _update_bytes(state.params)
         metrics = {
             "loss": loss.mean(),
             "accept_rate": passed.mean(),
@@ -116,9 +131,9 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
             # paper's communication-overhead metric, §V-D); filtered
             # clients are charged their 1-bit skip beacon, matching the
             # event-driven simulator
-            "bytes_sent": (mask.sum() * _update_bytes(state.params)
+            "bytes_sent": (mask.sum() * update_bytes
                            + (jnp.float32(C) - mask.sum()) * beacon_bytes),
-            "bytes_baseline": jnp.float32(C) * _update_bytes(state.params),
+            "bytes_baseline": jnp.float32(C) * update_bytes,
         }
         run = {"accepted": state.metrics["accepted"] + mask.sum(),
                "rounds": state.metrics["rounds"] + 1.0}
@@ -136,11 +151,6 @@ def build_fl_train_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
     if donate:
         return jax.jit(step, donate_argnums=(0,))
     return jax.jit(step)
-
-
-@functools.lru_cache(maxsize=None)
-def _bytes_cache(key):
-    return key
 
 
 def _update_bytes(params) -> jnp.ndarray:

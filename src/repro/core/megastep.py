@@ -1,0 +1,110 @@
+"""Compiled cohort megastep: one dispatch per simulated round.
+
+The event-driven simulator used to train selected clients one at a time —
+a separate jitted dispatch, host→device batch transfer, and per-leaf
+``float(jnp.vdot(...))`` sync for EVERY client EVERY round: exactly the
+per-tensor launch storm the paper profiles away (Tables V-VI). This
+module collapses all of it into two compiled dispatches per round:
+
+``build_cohort_step``  — stacks the cohort's fixed-shape batches into
+    ``(C, steps, B, ...)`` and runs one jitted vmap-of-scan that returns,
+    in a single call: per-client parameter deltas already packed into the
+    flat ``(C, rows, LANE)`` arena, mean losses, sign-alignment ratios vs
+    the reference direction, update L2 norms, and the updated batched
+    error-feedback arena (int8 wire compression, when enabled). The only
+    host transfer per round is the small (C,) metric vectors.
+
+``build_apply_update`` — server aggregation as one weighted sum over the
+    arena (Pallas ``masked_agg`` on TPU, jnp oracle on CPU): both sync
+    FedAvg over the senders and FedBuff-style staleness-discounted async
+    buffering are ``w_g ← w_anchor + Σ_i w_i·Δ_i`` for host-chosen
+    weights, so one kernel serves both modes. Also returns the new
+    reference sign (-2 padding sentinel) for the next round's θ filter.
+
+Timing, selection, dropout and byte accounting stay event-driven in
+Python, consuming these batched device results (core/async_engine.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import alignment, compression
+from repro.kernels import arena as arena_ops
+from repro.models import api
+
+
+def build_cohort_step(cfg, opt, arena, theta=None, quantize: bool = False):
+    """Returns jitted ``step(params_mat, batches, lr_scale, ref_mat, ef,
+    idx, *, has_ref) -> (deltas, losses, ratios, norms, new_ef)``.
+
+    params_mat: (rows, lane) f32 arena of the round-start globals.
+    batches:    pytree, leaves (C, steps, B, ...) — the stacked cohort.
+    lr_scale:   (C,) per-client LR scaling (FedL2P personalization).
+    ref_mat:    (rows, lane) int8 reference sign (None until it exists).
+    ef, idx:    (N, rows, lane) EF arena + (C,) client ids (quantize only).
+    has_ref:    static — round 0 has no reference direction; ratios are 1.
+    """
+    @functools.partial(jax.jit, static_argnames=("has_ref",))
+    def cohort_step(params_mat, batches, lr_scale, ref_mat, ef, idx, *,
+                    has_ref):
+        params = arena.unpack(params_mat)
+
+        def train_one(client_batches, scale):
+            opt_state = opt.init(params)
+
+            def step(carry, batch):
+                p, s = carry
+                loss, grads = jax.value_and_grad(
+                    lambda q: api.loss_fn(q, batch, cfg))(p)
+                grads = jax.tree.map(lambda g: g * scale, grads)
+                p, s = opt.update(grads, s, p)
+                return (p, s), loss
+
+            (p, _), losses = jax.lax.scan(step, (params, opt_state),
+                                          client_batches)
+            return p, losses.mean()
+
+        new_params, losses = jax.vmap(train_one)(batches, lr_scale)
+        deltas = arena.pack_cohort(jax.tree.map(
+            lambda n, o: (n - o).astype(jnp.float32), new_params, params))
+
+        new_ef = ef
+        if quantize:
+            restored, residual = compression.compress_cohort(
+                deltas, jnp.take(ef, idx, axis=0))
+            new_ef = ef.at[idx].set(residual)
+            deltas = restored
+
+        norms = jnp.sqrt(jnp.sum(deltas * deltas, axis=(1, 2)))
+        if has_ref and theta is not None:
+            ratios = alignment.cohort_alignment(deltas, ref_mat, arena.n)
+        else:
+            ratios = jnp.ones(deltas.shape[:1], jnp.float32)
+        return deltas, losses, ratios, norms, new_ef
+
+    return cohort_step
+
+
+def build_apply_update(arena):
+    """Returns jitted ``apply(params_mat, deltas_groups, weight_groups) ->
+    (new_params_mat, new_ref_mat)``.
+
+    ``deltas_groups`` / ``weight_groups`` are tuples (one entry per batch
+    shape group this round — heterogeneous step counts quantize to a few
+    power-of-two groups); weights are host-computed: mask/|S| for sync,
+    α(τ)/N for async senders, 0 for filtered clients.
+    """
+
+    @jax.jit
+    def apply_update(params_mat, deltas_groups, weight_groups):
+        agg = None
+        for d, w in zip(deltas_groups, weight_groups):
+            part = arena_ops.weighted_sum(d, w)
+            agg = part if agg is None else agg + part
+        new_mat = params_mat + agg
+        return new_mat, arena.sign_ref(new_mat, params_mat)
+
+    return apply_update
