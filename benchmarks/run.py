@@ -56,22 +56,33 @@ def list_strategies() -> None:
     print(f"# {len(STRATEGY_REGISTRY)} strategies instantiated OK")
 
 
+SCAN_R = 8          # rounds per dispatch on the scanned control plane
+
+
 def bench_sim(json_path: str, rounds: int = 20, clients: int = 32,
-              warmup: int = 2) -> dict:
-    """Sim-engine perf benchmark (ISSUE 2 acceptance metric): the fixed
-    ``clients``-client heterogeneous config, timed on BOTH execution
-    paths. Reports rounds/sec and compiled dispatches/round; the
-    megastep path must hold O(1) dispatches while the reference loop
-    pays O(clients).
+              warmup: int = 2, check_against: str = None) -> dict:
+    """Sim-engine perf benchmark (ISSUE 2/3 acceptance metric): the fixed
+    ``clients``-client heterogeneous config, timed on every execution
+    path. Reports rounds/sec and compiled dispatches/round: the
+    reference loop pays O(clients) dispatches/round, the per-round
+    megastep O(1), the scanned device-control-plane path O(1/R)
+    (amortized BELOW one), and the compiled spmd engine exactly one
+    training dispatch per round.
 
     The config is the communication-centric FedSGD setting the paper's
     Tables V-VI profile (one local step per client per round,
     ``max_samples_per_round == batch_size``), where per-client dispatch /
     transfer / sync overhead dominates — the effect this benchmark
     exists to track. Compute-bound configs (16 local steps) still gain
-    ~2.3x from batched cohort math; see README "Performance". Two warmup
+    ~2.3x from batched cohort math; see README "Performance". Warmup
     rounds per path absorb jit compiles (round 1 re-specializes the
-    megastep on ``has_ref``)."""
+    megastep on ``has_ref``).
+
+    ``check_against``: path to a committed BENCH JSON — fails (exit 1)
+    if any shared path's rounds/sec regresses more than 30% after
+    normalizing out machine speed via the reference loop's ratio (CI
+    runners and dev boxes differ in absolute speed; the loop path is the
+    uncompiled-control baseline both sides measure)."""
     import json
 
     from repro.api import DataSpec, ExperimentSpec, WorldSpec, get_strategy
@@ -91,32 +102,139 @@ def bench_sim(json_path: str, rounds: int = 20, clients: int = 32,
     out = {"config": {"model": "anomaly-mlp", "clients": clients,
                       "rounds": rounds, "strategy": "ours",
                       "batch_size": 64, "max_samples_per_round": 64,
-                      "local_steps": 1, "profile": "heterogeneous"}}
-    for name, megastep in (("loop", False), ("megastep", True)):
+                      "local_steps": 1, "profile": "heterogeneous",
+                      "scan_rounds_per_dispatch": SCAN_R}}
+    for name, kwargs in (("loop", dict(megastep=False)),
+                         ("megastep", dict(megastep=True)),
+                         ("scanned", dict(megastep=True,
+                                          rounds_per_dispatch=SCAN_R))):
         sim = ae.FederatedSimulation(cfg, world.client_arrays,
                                      world.eval_arrays,
                                      spec.resolve_strategy(), world.profiles,
-                                     seed=0, megastep=megastep)
-        for r in range(warmup):
-            sim.run_round(r)
-        d0 = sim.dispatches
-        t0 = time.perf_counter()
-        for r in range(rounds):
-            sim.run_round(warmup + r)
-        dt = time.perf_counter() - t0
+                                     seed=0, **kwargs)
+        if name == "scanned":
+            # warmup compiles BOTH trace lengths the timed run will use
+            # (full R-dispatches plus the remainder-length scan, if any)
+            sim.run(SCAN_R + rounds % SCAN_R)
+            d0 = sim.dispatches
+            t0 = time.perf_counter()
+            sim.run(rounds)
+            dt = time.perf_counter() - t0
+        else:
+            for r in range(warmup):
+                sim.run_round(r)
+            d0 = sim.dispatches
+            t0 = time.perf_counter()
+            for r in range(rounds):
+                sim.run_round(warmup + r)
+            dt = time.perf_counter() - t0
         out[name] = {"seconds": round(dt, 3),
                      "rounds_per_sec": round(rounds / dt, 3),
                      "dispatches_per_round": (sim.dispatches - d0) / rounds}
+
+    out["spmd"] = _bench_spmd_engine(rounds, clients)
     out["speedup"] = round(out["megastep"]["rounds_per_sec"]
                            / out["loop"]["rounds_per_sec"], 2)
+    out["scan_speedup"] = round(out["scanned"]["rounds_per_sec"]
+                                / out["loop"]["rounds_per_sec"], 2)
     with open(json_path, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")
     print(json.dumps(out, indent=2))
-    print(f"# wrote {json_path}: {out['speedup']}x rounds/sec "
+    print(f"# wrote {json_path}: megastep {out['speedup']}x / scanned "
+          f"{out['scan_speedup']}x rounds/sec vs loop "
           f"({out['loop']['dispatches_per_round']:.1f} -> "
-          f"{out['megastep']['dispatches_per_round']:.1f} dispatches/round)")
+          f"{out['megastep']['dispatches_per_round']:.1f} -> "
+          f"{out['scanned']['dispatches_per_round']:.2f} dispatches/round)")
+    if check_against:
+        _check_regression(out, check_against)
     return out
+
+
+def _bench_spmd_engine(rounds: int, clients: int) -> dict:
+    """Compiled spmd engine with the device control plane attached
+    (sync + θ-filter + adaptive selection): raw step throughput, exactly
+    one training dispatch per round by construction."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.api import DataSpec, ExperimentSpec, WorldSpec
+    from repro.api.runner import build_spmd_components
+    from repro.core.async_engine import StrategyConfig
+
+    st = StrategyConfig(mode="sync", theta=0.65, selection=True,
+                        select_fraction=0.5, dynamic_batch=False,
+                        checkpointing=False, batch_size=64,
+                        max_samples_per_round=64)
+    spec = ExperimentSpec(
+        model="anomaly-mlp",
+        data=DataSpec(n_samples=20000, eval_samples=2000),
+        world=WorldSpec(num_clients=clients, profile="heterogeneous"),
+        strategy=st, engine="spmd", seed=0)
+    world = spec.build_world()
+    cfg, st, _opt, state, step = build_spmd_components(spec, world=world)
+    rng = np.random.default_rng(0)
+    xs = np.stack([c["x"][rng.integers(0, len(c["x"]), 64)]
+                   for c in world.client_arrays])
+    ys = np.stack([c["y"][rng.integers(0, len(c["y"]), 64)]
+                   for c in world.client_arrays])
+    batch = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
+    state, m = step(state, batch)                      # compile
+    jax.block_until_ready(m)
+    t0 = time.perf_counter()
+    for _ in range(rounds):
+        state, m = step(state, batch)
+    jax.block_until_ready(m)
+    dt = time.perf_counter() - t0
+    return {"seconds": round(dt, 3),
+            "rounds_per_sec": round(rounds / dt, 3),
+            "dispatches_per_round": 1.0}
+
+
+def _check_regression(out: dict, committed_path: str,
+                      tolerance: float = 0.30) -> None:
+    """CI bench-regression guard: compare rounds/sec per path against
+    the committed JSON, normalized by the loop path's machine-speed
+    ratio; fail on a >``tolerance`` drop."""
+    import json
+
+    with open(committed_path) as f:
+        committed = json.load(f)
+    # the guard is only meaningful under the committed measurement
+    # protocol: a different round count changes the scanned path's trace
+    # length / eval amortization and a different client count changes
+    # every path's work — refuse rather than spuriously pass or fail
+    proto = ("clients", "rounds", "batch_size", "max_samples_per_round",
+             "scan_rounds_per_dispatch")
+    mismatch = {k: (out["config"].get(k), committed["config"].get(k))
+                for k in proto
+                if out["config"].get(k) != committed["config"].get(k)}
+    if mismatch:
+        raise SystemExit(
+            f"bench-guard config mismatch vs {committed_path}: "
+            f"{mismatch} — run with the committed protocol "
+            f"(--bench-rounds/--bench-clients) to use --check-against")
+    scale = (out["loop"]["rounds_per_sec"]
+             / max(committed["loop"]["rounds_per_sec"], 1e-9))
+    failures = []
+    for path in ("megastep", "scanned", "spmd"):
+        if path not in committed or path not in out:
+            continue
+        floor = (1.0 - tolerance) * committed[path]["rounds_per_sec"] * scale
+        got = out[path]["rounds_per_sec"]
+        status = "ok" if got >= floor else "REGRESSION"
+        print(f"# bench-guard [{path}] rounds/sec={got:.2f} "
+              f"floor={floor:.2f} (committed="
+              f"{committed[path]['rounds_per_sec']:.2f} x machine-scale "
+              f"{scale:.2f} x {1 - tolerance:.2f}) {status}")
+        if got < floor:
+            failures.append(path)
+    if failures:
+        raise SystemExit(
+            f"bench regression >{tolerance:.0%} on: {failures} "
+            f"(see floors above; refresh BENCH_sim.json only with a "
+            f"justified perf change)")
 
 
 def main(argv=None) -> None:
@@ -132,13 +250,18 @@ def main(argv=None) -> None:
     ap.add_argument("--bench-rounds", type=int, default=20,
                     help="timed rounds for --bench-json (CI uses fewer)")
     ap.add_argument("--bench-clients", type=int, default=32)
+    ap.add_argument("--check-against", default=None, metavar="PATH",
+                    help="committed BENCH JSON to guard against: fail if "
+                         "any path's rounds/sec drops >30%% below it "
+                         "(machine-speed normalized via the loop path)")
     args = ap.parse_args(argv)
     if args.list:
         list_strategies()
         return
     if args.bench_json:
         bench_sim(args.bench_json, rounds=args.bench_rounds,
-                  clients=args.bench_clients)
+                  clients=args.bench_clients,
+                  check_against=args.check_against)
         return
     mods = [args.only] if args.only else MODULES
     failures = []

@@ -7,7 +7,10 @@ serves two request streams:
   2. ROAD-like CAN windows -> masquerade alarm rate.
 
   PYTHONPATH=src python examples/anomaly_serving.py
+
+``REPRO_SMOKE=1`` runs a <=2-round miniature (the CI smoke mode).
 """
+import os
 import time
 
 import jax
@@ -18,11 +21,16 @@ from repro.configs import anomaly_mlp
 from repro.data import synthetic
 from repro.models import mlp_detector
 
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+
 
 def train(cfg, rounds=8, clients=8, seed=0, alpha=0.7):
+    if SMOKE:
+        rounds, clients = 2, 4
     res = run_experiment(ExperimentSpec(
         model=cfg,
-        data=DataSpec(n_samples=16000, eval_samples=3000, alpha=alpha),
+        data=DataSpec(n_samples=16000 if not SMOKE else 2000,
+                      eval_samples=3000 if not SMOKE else 400, alpha=alpha),
         world=WorldSpec(num_clients=clients, profile="heterogeneous",
                         profile_seed_offset=0),
         strategy="ours",

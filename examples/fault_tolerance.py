@@ -4,31 +4,39 @@ while the no-checkpoint sync baseline loses client work. Also shows the
 adaptive checkpoint interval reacting to the observed failure regime.
 
   PYTHONPATH=src python examples/fault_tolerance.py
+
+``REPRO_SMOKE=1`` runs a <=2-round miniature (the CI smoke mode).
 """
+import os
+
 import numpy as np
 
 from repro.api import DataSpec, ExperimentSpec, WorldSpec, run_experiment
 from repro.configs import anomaly_mlp
 from repro.core.checkpoint_policy import fit_weibull, optimal_interval
 
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+
 
 def main():
-    cfg = anomaly_mlp.CONFIG.replace(mlp_hidden=(128, 64), num_classes=10)
+    cfg = (anomaly_mlp.CONFIG.replace(mlp_hidden=(128, 64), num_classes=10)
+           if not SMOKE else anomaly_mlp.SMOKE)
     print(f"{'dropout':>8} {'ours_acc':>9} {'fedavg_acc':>11} "
           f"{'ours_deliver':>13} {'fedavg_deliver':>14}")
-    for p in (0.1, 0.3, 0.5):
+    for p in ((0.1, 0.3, 0.5) if not SMOKE else (0.3,)):
         accs, deliver = {}, {}
         for name in ["ours", "fedavg"]:
             res = run_experiment(ExperimentSpec(
                 model=cfg,
-                data=DataSpec(n_samples=12000, eval_samples=3000,
+                data=DataSpec(n_samples=12000 if not SMOKE else 1500,
+                              eval_samples=3000 if not SMOKE else 300,
                               alpha=0.5),
-                world=WorldSpec(num_clients=10, profile="uniform",
-                                dropout_p=p),
+                world=WorldSpec(num_clients=10 if not SMOKE else 4,
+                                profile="uniform", dropout_p=p),
                 strategy=name,
                 strategy_kwargs=dict(batch_size=64, lr=3e-2,
                                      local_epochs=2),
-                rounds=6, seed=42))
+                rounds=6 if not SMOKE else 2, seed=42))
             accs[name] = np.mean(res.series("accuracy")[-3:])
             deliver[name] = np.mean(res.series("accept_rate"))
         print(f"{p:8.1f} {accs['ours']:9.3f} {accs['fedavg']:11.3f} "

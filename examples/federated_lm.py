@@ -8,30 +8,41 @@ just on the CPU device, driven through one ``ExperimentSpec`` with
 ``engine="spmd"``. Logs loss / accept-rate / bytes saved by the θ-filter.
 
   PYTHONPATH=src python examples/federated_lm.py --steps 300
-(defaults to a CI-friendly 30; --steps 300 is the full run)
+(defaults to a CI-friendly 30; --steps 300 is the full run;
+``REPRO_SMOKE=1`` shrinks to a 2-round, 2-layer miniature)
 """
 import argparse
+import os
 import time
 
 from repro.api import (DataSpec, ExperimentSpec, WorldSpec, run_experiment)
 from repro.configs import registry
 from repro.optim import schedule
 
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=30)
-    ap.add_argument("--clients", type=int, default=4)
-    ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--per-client-batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=30 if not SMOKE else 2)
+    ap.add_argument("--clients", type=int, default=4 if not SMOKE else 2)
+    ap.add_argument("--seq", type=int, default=256 if not SMOKE else 32)
+    ap.add_argument("--per-client-batch", type=int, default=4 if not SMOKE
+                    else 2)
     ap.add_argument("--theta", type=float, default=0.55)
     args = ap.parse_args()
 
-    cfg = registry.get_config("qwen2-1.5b").replace(
-        num_layers=6, d_model=768, num_heads=12, num_kv_heads=4,
-        head_dim=64, d_ff=2048, vocab_size=50304, remat=False)
-    print(f"model: 6L d768 qwen2-style, {cfg.param_count()/1e6:.1f}M params "
-          f"(~100M target)")
+    if SMOKE:
+        cfg = registry.get_config("qwen2-1.5b").replace(
+            num_layers=2, d_model=64, num_heads=2, num_kv_heads=1,
+            head_dim=32, d_ff=128, vocab_size=512, remat=False)
+    else:
+        cfg = registry.get_config("qwen2-1.5b").replace(
+            num_layers=6, d_model=768, num_heads=12, num_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab_size=50304, remat=False)
+    print(f"model: {cfg.num_layers}L d{cfg.d_model} qwen2-style, "
+          f"{cfg.param_count()/1e6:.1f}M params"
+          + ("" if SMOKE else " (~100M target)"))
 
     bs = args.per_client_batch
     spec = ExperimentSpec(

@@ -9,12 +9,17 @@ compiled step comes from the experiment API
 (``repro.api.build_spmd_components``).
 
   PYTHONPATH=src python examples/hierarchical_pods.py
+
+``REPRO_SMOKE=1`` runs a <=2-round miniature (the CI smoke mode).
 """
 import argparse
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
 
 from repro.api import ExperimentSpec, WorldSpec, build_spmd_components
 from repro.configs import anomaly_mlp
@@ -28,15 +33,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--pods", type=int, default=2)
     ap.add_argument("--clients-per-pod", type=int, default=4)
-    ap.add_argument("--rounds", type=int, default=24)
-    ap.add_argument("--sync-every", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=24 if not SMOKE else 2)
+    ap.add_argument("--sync-every", type=int, default=4 if not SMOKE else 2)
     args = ap.parse_args()
 
     cfg = anomaly_mlp.CONFIG.replace(mlp_hidden=(64, 32), num_features=20,
                                      num_classes=5, dtype="float32")
     P, C = args.pods, args.clients_per_pod
-    X, y = synthetic.make_unsw_like(0, 12000, cfg.num_features,
-                                    cfg.num_classes)
+    X, y = synthetic.make_unsw_like(0, 12000 if not SMOKE else 2000,
+                                    cfg.num_features, cfg.num_classes)
     # pods see DIFFERENT non-IID slices (regional skew)
     pod_parts = partition.dirichlet_partition(y, P, alpha=1.0, seed=1)
     Xe, ye = synthetic.make_unsw_like(1, 3000, cfg.num_features,

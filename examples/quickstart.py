@@ -9,23 +9,29 @@ deltas: end-to-end time, transmitted bytes, accuracy.
 Everything is one declarative ``ExperimentSpec`` per run:
 
   PYTHONPATH=src python examples/quickstart.py
+
+``REPRO_SMOKE=1`` runs a <=2-round miniature (the CI smoke mode).
 """
 import dataclasses
+import os
 
 from repro.api import (CommModel, DataSpec, ExperimentSpec, WorldSpec,
                        run_experiment)
 
+SMOKE = bool(os.environ.get("REPRO_SMOKE"))
+
 
 def main():
     spec = ExperimentSpec(
-        model="anomaly-mlp",
-        data=DataSpec(n_samples=20000, eval_samples=4000, alpha=0.5),
-        world=WorldSpec(num_clients=10, dropout_p=0.1),
+        model="anomaly-mlp" if not SMOKE else "anomaly-mlp-smoke",
+        data=DataSpec(n_samples=20000 if not SMOKE else 1500,
+                      eval_samples=4000 if not SMOKE else 300, alpha=0.5),
+        world=WorldSpec(num_clients=10 if not SMOKE else 4, dropout_p=0.1),
         comm=CommModel(bandwidth=5e6, latency=0.5, t_sample=2e-3,
                        t_launch=0.25),
         strategy="fedavg",
         strategy_kwargs=dict(batch_size=64, lr=3e-2, local_epochs=2),
-        rounds=8, seed=0)
+        rounds=8 if not SMOKE else 2, seed=0)
 
     results = {}
     for name in ["fedavg", "ours"]:

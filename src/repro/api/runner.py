@@ -29,8 +29,9 @@ import numpy as np
 from repro.api.result import ExperimentResult, RoundRecord
 from repro.api.spec import ExperimentSpec
 from repro.core import async_engine as ae
-from repro.core import fl_step
+from repro.core import compression, fl_step
 from repro.data.loader import ArrayLoader
+from repro.kernels import arena as arena_mod
 from repro.models import api as model_api
 from repro.optim import adamw as optim_mod
 
@@ -59,7 +60,8 @@ def _run_sim(spec: ExperimentSpec) -> ExperimentResult:
                                  comm=spec.resolve_comm(), seed=spec.seed,
                                  eval_fn=spec.eval_fn,
                                  eval_every=spec.eval_every,
-                                 megastep=spec.megastep)
+                                 megastep=spec.megastep,
+                                 rounds_per_dispatch=spec.rounds_per_dispatch)
     hist = sim.run(spec.rounds)
     records = [RoundRecord(round=m.round, sim_time=m.sim_time,
                            comm_time=m.comm_time, idle_time=m.idle_time,
@@ -96,19 +98,49 @@ def _resolve_optimizer(spec: ExperimentSpec, st):
     return opt
 
 
-def build_spmd_components(spec: ExperimentSpec):
+def _spmd_control_plane(spec: ExperimentSpec, st, world,
+                        round_time_hint=()) -> "fl_step.ControlPlane":
+    """Device control-plane options for the compiled path: selection,
+    dropout, per-client LR and wire quantization as cohort masking."""
+    C = world.num_clients if world is not None else spec.world.num_clients
+    k = C
+    if st.grad_norm_selection or (st.selection and st.select_fraction < 1.0):
+        k = max(1, int(st.select_fraction * C))
+    dropout = ()
+    if world is not None and any(p.dropout_p > 0 for p in world.profiles):
+        dropout = tuple(float(p.dropout_p) for p in world.profiles)
+    elif spec.world.dropout_p > 0:
+        dropout = (float(spec.world.dropout_p),) * C
+    return fl_step.ControlPlane(
+        num_clients=C, select_k=k,
+        grad_norm_selection=st.grad_norm_selection,
+        dropout_p=dropout, quantize=st.quantize_updates,
+        per_client_lr=st.per_client_lr,
+        round_time_hint=tuple(float(t) for t in round_time_hint),
+        seed=spec.seed)
+
+
+def build_spmd_components(spec: ExperimentSpec, world=None,
+                          round_time_hint=()):
     """(cfg, strategy, optimizer, state, jitted step) for custom loops —
     the supported way to reach the compiled path from user code (used by
-    examples/hierarchical_pods.py)."""
+    examples/hierarchical_pods.py). Strategies that use selection /
+    dropout / quantized updates / per-client LR get the device control
+    plane attached automatically (fl_step.ControlPlane)."""
     cfg = spec.resolve_model()
     st = spec.resolve_strategy()
     comm = spec.resolve_comm()
     opt = _resolve_optimizer(spec, st)
-    state = fl_step.init_state(jax.random.PRNGKey(spec.seed), cfg, opt)
+    cp = _spmd_control_plane(spec, st, world, round_time_hint)
+    if not cp.active():
+        cp = None
+    state = fl_step.init_state(jax.random.PRNGKey(spec.seed), cfg, opt,
+                               control_plane=cp)
     step = fl_step.build_fl_train_step(cfg, opt, theta=st.theta,
                                        lr_schedule=spec.lr_schedule,
                                        donate=False,
-                                       beacon_bytes=comm.beacon_bytes)
+                                       beacon_bytes=comm.beacon_bytes,
+                                       control_plane=cp)
     return cfg, st, opt, state, step
 
 
@@ -119,8 +151,8 @@ def _build_eval(cfg, eval_fn):
 
 
 def _run_spmd(spec: ExperimentSpec) -> ExperimentResult:
-    cfg, st, _opt, state, step = build_spmd_components(spec)
     comm = spec.resolve_comm()
+    st = spec.resolve_strategy()
     world = spec.build_world()
     C = world.num_clients
 
@@ -138,10 +170,21 @@ def _run_spmd(spec: ExperimentSpec) -> ExperimentResult:
     steps = min(ae.local_step_count(l.n, bs, st) for l in loaders)
     n_samples = steps * bs
 
+    # analytic per-client round time (train + transfer) — the control
+    # plane's timeliness signal for reliability-scored selection
+    hint = [(steps * comm.t_launch + n_samples * comm.t_sample)
+            / max(p.speed, 1e-3) + p.net_latency
+            for p in world.profiles]
+    cfg, st, _opt, state, step = build_spmd_components(
+        spec, world=world, round_time_hint=hint)
+
     evaluate = _build_eval(cfg, spec.eval_fn)
     eval_dev = jax.tree.map(jnp.asarray, world.eval_arrays)
     param_bytes = sum(x.size * x.dtype.itemsize
                       for x in jax.tree.leaves(state.params))
+    payload_bytes = (compression.arena_wire_bytes(
+        arena_mod.ParamArena(state.params)) if st.quantize_updates
+        else param_bytes)
 
     sim_time = comm_time = idle_time = bytes_sent = 0.0
     records: List[RoundRecord] = []
@@ -156,16 +199,21 @@ def _run_spmd(spec: ExperimentSpec) -> ExperimentResult:
         state, m = step(state, batch)
 
         mask = np.asarray(m["mask"])
+        selected = np.asarray(m["selected"])
+        delivered = np.asarray(m["delivered"])
+        participating = (selected * delivered) > 0
         arrivals = []
         for cid in range(C):
+            if not participating[cid]:
+                continue        # unselected / dropped: silent this round
             prof = world.profiles[cid]
             t_train = (steps * comm.t_launch
                        + n_samples * comm.t_sample) / max(prof.speed, 1e-3)
-            payload = param_bytes if mask[cid] > 0 else comm.beacon_bytes
+            payload = payload_bytes if mask[cid] > 0 else comm.beacon_bytes
             transfer = prof.net_latency + payload / comm.bandwidth
             comm_time += transfer
             arrivals.append(t_train + transfer)
-        barrier = max(arrivals)
+        barrier = max(arrivals) if arrivals else 0.0
         sim_time += barrier
         idle_time += sum(barrier - a for a in arrivals)
         bytes_sent += float(m["bytes_sent"])

@@ -69,6 +69,14 @@ class ExperimentSpec:
                                                # cohort dispatch per round
                                                # (False -> the reference
                                                # per-client loop)
+    rounds_per_dispatch: Optional[int] = None  # sim engine: device-resident
+                                               # control plane — R rounds of
+                                               # {select, train, θ-filter,
+                                               # aggregate, control update}
+                                               # per compiled lax.scan
+                                               # dispatch (core/control.py).
+                                               # None -> host control plane
+                                               # (the pinned reference paths)
     eval_fn: Optional[Callable] = None         # custom eval(params, batch)
     lr_schedule: Optional[Callable] = None     # spmd engine only
     optimizer: Union[str, Any, None] = None    # spmd engine only:
@@ -119,6 +127,17 @@ class ExperimentSpec:
         if self.eval_every < 1:
             raise ValueError(
                 f"eval_every must be >= 1, got {self.eval_every}")
+        if self.rounds_per_dispatch is not None:
+            if self.rounds_per_dispatch < 1:
+                raise ValueError("rounds_per_dispatch must be >= 1, got "
+                                 f"{self.rounds_per_dispatch}")
+            if self.engine != "sim":
+                raise ValueError("rounds_per_dispatch is a sim-engine "
+                                 "knob (the spmd step is already one "
+                                 "compiled round)")
+            if not self.megastep:
+                raise ValueError("rounds_per_dispatch requires "
+                                 "megastep=True")
         if self.world.num_clients < 1:
             raise ValueError("world.num_clients must be >= 1, got "
                              f"{self.world.num_clients}")
@@ -137,22 +156,17 @@ class ExperimentSpec:
         return self
 
     def _validate_spmd(self, st: StrategyConfig) -> None:
-        """The compiled path is a synchronous cohort step: reject knobs
-        whose semantics only the event-driven simulator implements."""
+        """The compiled path is a synchronous cohort step. Selection,
+        dropout, per-client LR scaling and quantized updates are all
+        handled by the device-resident control plane as cohort MASKING
+        (core/control.py routed through core/fl_step.py), so only knobs
+        that genuinely need the event-driven simulator are rejected."""
         unsupported = []
         if st.mode != "sync":
             unsupported.append("mode='async' (use engine='sim')")
         if st.dynamic_batch:
             unsupported.append("dynamic_batch (per-round shape changes "
                                "would retrace the compiled step)")
-        if st.quantize_updates:
-            unsupported.append("quantize_updates")
-        if st.per_client_lr:
-            unsupported.append("per_client_lr")
-        if st.grad_norm_selection or (st.selection and st.select_fraction < 1.0):
-            unsupported.append("client selection (cohort dim is static)")
-        if self.world.dropout_p > 0:
-            unsupported.append("world.dropout_p > 0")
         if unsupported:
             raise ValueError("engine='spmd' does not support: "
                              + "; ".join(unsupported))

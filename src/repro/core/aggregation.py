@@ -45,15 +45,26 @@ def fedavg(client_trees, weights=None):
 
 
 def staleness_weight(tau, alpha0: float = 0.6):
-    """Polynomial staleness discount for async updates."""
-    return alpha0 * (1.0 + jnp.asarray(tau, jnp.float32)) ** -0.5
+    """Polynomial staleness discount α(τ) = α₀·(1+τ)^-0.5 — the ONE
+    implementation both engines use (the event-driven simulator, the
+    scanned megastep and the spmd path all call this; regression-pinned
+    over τ ∈ {0..8} in tests/test_control.py). Accepts scalars or
+    arrays; all arithmetic in f32."""
+    return (jnp.float32(alpha0)
+            * (1.0 + jnp.asarray(tau, jnp.float32)) ** jnp.float32(-0.5))
+
+
+def staleness_weights_np(taus, alpha0: float = 0.6) -> np.ndarray:
+    """Host-side vectorized view of :func:`staleness_weight` — ONE device
+    round-trip for a whole round's arrival order (the per-arrival
+    ``float()`` sync this replaces was a dispatch per sender)."""
+    return np.asarray(staleness_weight(np.asarray(taus), alpha0))
 
 
 def staleness_weight_host(tau, alpha0: float = 0.6) -> float:
-    """Host-side f32 twin of ``staleness_weight`` — the simulator computes
-    per-arrival weights in Python without a device round-trip per sender."""
-    return float(np.float32(alpha0) * np.float32(1.0 + tau)
-                 ** np.float32(-0.5))
+    """Deprecated scalar shim kept for API compatibility — delegates to
+    the unified :func:`staleness_weight`."""
+    return float(staleness_weight(tau, alpha0))
 
 
 def apply_async_update(global_tree, client_tree, alpha):

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation, alignment, compression
+from repro.core import control as control_mod
 from repro.core import megastep as megastep_mod
 from repro.core.batchsize import BatchSizeController, ClientMetrics
 from repro.core.checkpoint_policy import fit_weibull, optimal_interval
@@ -153,18 +154,29 @@ class FederatedSimulation:
                  strategy: StrategyConfig, profiles: List[ClientProfile],
                  comm: CommModel = None, seed: int = 0,
                  eval_fn: Callable = None, eval_every: int = 1,
-                 megastep: bool = True):
+                 megastep: bool = True,
+                 rounds_per_dispatch: Optional[int] = None):
         self.cfg = cfg
         self.strategy = strategy
         self.comm = comm or CommModel()
         self.profiles = profiles
         self.rng = np.random.default_rng(seed)
+        self.seed = seed
         self.num_clients = len(client_arrays)
         self.eval_arrays = eval_arrays
         # device-cache the eval batch ONCE (was re-transferred every round)
         self._eval_dev = jax.tree.map(jnp.asarray, eval_arrays)
         self.eval_every = max(1, int(eval_every))
         self.megastep = bool(megastep)
+        # rounds_per_dispatch=None -> host control plane (per-round
+        # megastep / reference loop); an int >= 1 -> the device-resident
+        # control plane, R rounds per compiled dispatch (lax.scan)
+        self.rounds_per_dispatch = (int(rounds_per_dispatch)
+                                    if rounds_per_dispatch else None)
+        if self.rounds_per_dispatch and not self.megastep:
+            raise ValueError("rounds_per_dispatch requires megastep=True "
+                             "(the scanned path runs on the parameter "
+                             "arena)")
         self.dispatches = 0           # compiled-call count (bench metric)
 
         # --- model/optim setup ------------------------------------------
@@ -220,6 +232,20 @@ class FederatedSimulation:
         self._wire_bytes = (compression.arena_wire_bytes(self._arena)
                             if (self.megastep and strategy.quantize_updates)
                             else None)
+
+        # --- unified staleness weights (one jnp impl for both engines):
+        # τ < #arrivals <= N, so one table lookup replaces the per-arrival
+        # host formula — identical values on every execution path
+        self._alpha_table = aggregation.staleness_weights_np(
+            np.arange(self.num_clients + 1), strategy.alpha0)
+
+        # --- device-resident control plane (scanned path, built lazily) ---
+        self._scan_fns: Dict[int, Callable] = {}   # R -> jitted scan
+        self._scan_world = None                    # (data, sizes, profiles)
+        self._scan_ctl = None                      # ControlState carry
+        self._scan_ref_valid = jnp.asarray(False)
+        self._scan_round0 = 0
+        self._scan_key = jax.random.fold_in(jax.random.PRNGKey(seed), 7)
 
         # --- accounting -----------------------------------------------------
         self.sim_time = 0.0
@@ -512,7 +538,7 @@ class FederatedSimulation:
                     if not sent:
                         continue
                     tau = max(0, i - q_idx)
-                    alpha = aggregation.staleness_weight_host(tau, st.alpha0)
+                    alpha = float(self._alpha_table[tau])
                     buf.append((cid, alpha))
                     self.server_step += 1
                     updates_applied += 1
@@ -621,7 +647,7 @@ class FederatedSimulation:
                     if not sent:
                         continue
                     tau = max(0, i - q_idx)
-                    alpha = aggregation.staleness_weight_host(tau, st.alpha0)
+                    alpha = float(self._alpha_table[tau])
                     buf.append((alpha, new_params))
                     self.server_step += 1
                     updates_applied += 1
@@ -640,7 +666,135 @@ class FederatedSimulation:
         return self._finish_round(rnd, evaluate, len(selected), losses,
                                   n_sent, updates_applied, round_times)
 
+    # ------------------------------------------------------------------
+    # scanned path: the device-resident control plane — R rounds of
+    # {select -> train -> θ-filter -> aggregate -> control update} per
+    # compiled dispatch (core/megastep.build_scanned_rounds)
+    # ------------------------------------------------------------------
+    def _scan_setup(self):
+        """Build the device world + ControlState once (lazy)."""
+        if self._scan_world is not None:
+            return self._scan_world
+        cap = max(l.n for l in self.loaders)
+        data = {}
+        for k in self.loaders[0].arrays:
+            stacked = []
+            for l in self.loaders:
+                a = np.asarray(l.arrays[k])
+                pad = np.zeros((cap - len(a),) + a.shape[1:], a.dtype)
+                stacked.append(np.concatenate([a, pad]) if len(pad)
+                               else a)
+            data[k] = jnp.asarray(np.stack(stacked))
+        sizes = jnp.asarray([l.n for l in self.loaders], jnp.int32)
+        speed = jnp.asarray([p.speed for p in self.profiles], jnp.float32)
+        latency = jnp.asarray([p.net_latency for p in self.profiles],
+                              jnp.float32)
+        dropout_p = jnp.asarray([p.dropout_p for p in self.profiles],
+                                jnp.float32)
+        self._scan_world = (data, sizes, speed, latency, dropout_p)
+        self._scan_ctl = control_mod.init_control(
+            self.num_clients,
+            batch_sizes=[l.batch_size for l in self.loaders],
+            arena=self._arena,
+            quantize=self.strategy.quantize_updates)
+        return self._scan_world
+
+    def _scan_shapes(self):
+        """Static (select_k, steps_phys, batch_phys) of the scanned trace."""
+        st = self.strategy
+        k = max(1, int(st.select_fraction * self.num_clients))
+        if not (st.grad_norm_selection
+                or (st.selection and st.select_fraction < 1.0)):
+            k = self.num_clients
+        batch_phys = min(l.batch_size for l in self.loaders)
+        steps_phys = min(local_step_count(l.n, batch_phys, st)
+                         for l in self.loaders)
+        return k, steps_phys, batch_phys
+
+    def _scan_fn(self, R: int):
+        if R not in self._scan_fns:
+            k, steps_phys, batch_phys = self._scan_shapes()
+            self._scan_fns[R] = megastep_mod.build_scanned_rounds(
+                self.cfg, self.opt, self._arena, self.strategy, self.comm,
+                num_clients=self.num_clients, select_k=k,
+                steps_phys=steps_phys, batch_phys=batch_phys,
+                rounds_per_dispatch=R, param_bytes=self.param_bytes,
+                wire_bytes=self._wire_bytes,
+                recovery_time=self.recovery_time,
+                restart_time=self.restart_time)
+        return self._scan_fns[R]
+
+    def _run_scanned(self, num_rounds: int) -> List[RoundMetrics]:
+        data, sizes, speed, latency, dropout_p = self._scan_setup()
+        R = self.rounds_per_dispatch
+        ref_mat = self._ref_mat
+        if ref_mat is None:      # no reference yet; gated by ref_valid
+            ref_mat = jnp.where(jnp.asarray(self._arena.valid_mask()),
+                                jnp.int8(0), jnp.int8(-2))
+        done = 0
+        while done < num_rounds:
+            Rg = min(R, num_rounds - done)
+            carry, ms = self._scan_fn(Rg)(
+                self._params_mat, ref_mat, self._scan_ref_valid,
+                self._scan_ctl, data, sizes, speed, latency, dropout_p,
+                self._scan_key, jnp.int32(self._scan_round0),
+                jnp.asarray([self.sim_time, self.comm_time,
+                             self.idle_time, self.bytes_sent],
+                            jnp.float32))
+            self.dispatches += 1
+            (self._params_mat, ref_mat, self._scan_ref_valid,
+             self._scan_ctl, _acc) = carry
+            self._params_tree = None          # pytree view now stale
+            ms = {k: np.asarray(v) for k, v in ms.items()}
+
+            last = done + Rg - 1
+            # evaluate once per dispatch (at its last round) when the
+            # eval cadence lands inside the dispatch or the run ends —
+            # cadence over THIS run()'s relative round index, exactly
+            # like the host reference paths
+            do_eval = (any(r % self.eval_every == 0
+                           for r in range(done, done + Rg))
+                       or last == num_rounds - 1)
+            if do_eval:
+                acc_val = float(self._eval(self.params, self._eval_dev))
+                self.dispatches += 1
+            else:
+                acc_val = None
+            prev_acc = (self.history[-1].accuracy if self.history
+                        else float("nan"))
+            for j in range(Rg):
+                is_last = j == Rg - 1
+                self.history.append(RoundMetrics(
+                    round=done + j,
+                    sim_time=float(ms["sim_time"][j]),
+                    comm_time=float(ms["comm_time"][j]),
+                    idle_time=float(ms["idle_time"][j]),
+                    bytes_sent=float(ms["bytes_sent"][j]),
+                    updates_applied=int(ms["updates_applied"][j]),
+                    accept_rate=float(ms["accept_rate"][j]),
+                    accuracy=(acc_val if (is_last and acc_val is not None)
+                              else prev_acc),
+                    loss=float(ms["loss"][j])))
+            self.server_step += int(ms["updates_applied"].sum())
+            # failure times are only known to round granularity on the
+            # scanned path; log each at its round's start clock
+            starts = [self.sim_time] + [float(t) for t
+                                        in ms["sim_time"][:-1]]
+            for j in range(Rg):
+                self.failure_log.extend([starts[j]]
+                                        * int(ms["n_failures"][j]))
+            self.sim_time = float(ms["sim_time"][-1])
+            self.comm_time = float(ms["comm_time"][-1])
+            self.idle_time = float(ms["idle_time"][-1])
+            self.bytes_sent = float(ms["bytes_sent"][-1])
+            self._scan_round0 += Rg
+            done += Rg
+        self._ref_mat = (ref_mat if bool(self._scan_ref_valid) else None)
+        return self.history
+
     def run(self, num_rounds: int) -> List[RoundMetrics]:
+        if self.rounds_per_dispatch:
+            return self._run_scanned(num_rounds)
         for r in range(num_rounds):
             # eval_every > 1 skips the eval dispatch on off-rounds (the
             # previous accuracy is carried forward); the final round is

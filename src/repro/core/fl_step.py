@@ -19,15 +19,25 @@ One FL "round" = one compiled step:
 ``theta=None`` (or mask forced to ones) gives the synchronous FedAvg
 baseline the paper compares against. If no client passes, parameters and
 ref_sign are kept unchanged (server keeps w_g — §IV-C).
+
+The device-resident control plane (core/control.py) routes through this
+step as COHORT MASKING: with a ``ControlPlane`` attached, adaptive
+selection (top-k + ε-greedy over reliability scores), per-client dropout
+draws, per-client LR scaling and int8+error-feedback wire quantization
+all run inside the same compiled program — clients that are unselected
+or dropped simply carry zero aggregation weight and zero wire bytes, so
+the cohort dim stays static and nothing retraces.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import alignment
+from repro.core import alignment, compression
+from repro.core import control as control_mod
 from repro.kernels import arena as arena_mod
 from repro.models import api
 from repro.optim import adamw as optim_mod
@@ -39,21 +49,67 @@ class FLState(NamedTuple):
     ref_sign: dict          # int8 sign of last accepted global update
     step: jnp.ndarray       # i32
     metrics: dict           # running counters (accept rate, bytes saved)
+    control: Optional[control_mod.ControlState] = None
+    # device control plane (None -> plain masked-FedAvg semantics)
 
 
-def init_state(rng, cfg, optimizer=None) -> FLState:
+@dataclasses.dataclass(frozen=True)
+class ControlPlane:
+    """Static configuration of the spmd engine's device control plane.
+
+    ``select_k == num_clients`` disables selection; an empty
+    ``dropout_p`` disables dropout draws. ``round_time_hint`` is the
+    analytic per-client round time (train + transfer at the CommModel's
+    rates) the reliability EMAs observe — the compiled step has no event
+    clock, so timeliness is scored from this static profile-derived
+    estimate while availability / pass-rate stay live per round.
+    """
+    num_clients: int
+    select_k: int
+    epsilon: float = 0.1
+    grad_norm_selection: bool = False
+    dropout_p: Tuple[float, ...] = ()
+    quantize: bool = False
+    per_client_lr: bool = False
+    round_time_hint: Tuple[float, ...] = ()
+    seed: int = 0
+    ema: float = 0.8
+
+    @property
+    def selecting(self) -> bool:
+        return (self.grad_norm_selection
+                or self.select_k < self.num_clients)
+
+    @property
+    def has_dropout(self) -> bool:
+        return any(p > 0 for p in self.dropout_p)
+
+    def active(self) -> bool:
+        return (self.selecting or self.has_dropout or self.quantize
+                or self.per_client_lr)
+
+
+def init_state(rng, cfg, optimizer=None,
+               control_plane: Optional[ControlPlane] = None) -> FLState:
     params = api.init_params(rng, cfg)
     optimizer = optimizer or optim_mod.for_config(cfg)
     opt_state = optimizer.init(params)
     ref_sign = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.int8), params)
+    ctl = None
+    if control_plane is not None and control_plane.active():
+        arena = arena_mod.ParamArena(jax.eval_shape(lambda: params))
+        ctl = control_mod.init_control(
+            control_plane.num_clients, arena=arena,
+            quantize=control_plane.quantize)
     return FLState(params, opt_state, ref_sign, jnp.zeros((), jnp.int32),
                    {"accepted": jnp.zeros((), jnp.float32),
-                    "rounds": jnp.zeros((), jnp.float32)})
+                    "rounds": jnp.zeros((), jnp.float32)}, ctl)
 
 
 def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
                   lr_schedule=None, agg_dtype=jnp.bfloat16,
-                  beacon_bytes: float = 0.125):
+                  beacon_bytes: float = 0.125,
+                  control_plane: Optional[ControlPlane] = None):
     """Un-jitted step(state, batch) -> (state, metrics) — the dry-run wraps
     this with explicit in/out shardings; trainers use build_fl_train_step.
 
@@ -64,6 +120,8 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
     beacon_bytes: wire cost of a filtered client's 1-bit skip beacon —
     charged into ``bytes_sent`` so the metric matches the event-driven
     simulator's accounting (CommModel.beacon_bytes).
+    control_plane: attach the device control plane — adaptive selection,
+    dropout, per-client LR and quantized updates as cohort masking.
     """
     optimizer = optimizer or optim_mod.for_config(cfg)
     # static arena layout from the config's parameter template — no
@@ -71,6 +129,10 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
     template = jax.eval_shape(
         lambda: api.init_params(jax.random.PRNGKey(0), cfg))
     arena = arena_mod.ParamArena(template)
+    cp = control_plane if (control_plane is not None
+                           and control_plane.active()) else None
+    wire_bytes = (float(compression.arena_wire_bytes(arena))
+                  if (cp and cp.quantize) else None)
 
     def loss_for_client(params, client_batch):
         return api.loss_fn(params, client_batch, cfg)
@@ -81,25 +143,69 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
             jax.value_and_grad(loss_for_client), in_axes=(None, 0)
         )(state.params, batch)                                 # loss: (C,)
         C = loss.shape[0]
+        ctl = state.control
+
+        # (2b) control plane: selection + dropout as static-width masks
+        if cp is not None:
+            key = jax.random.fold_in(jax.random.PRNGKey(cp.seed),
+                                     state.step)
+            k_sel, k_drop = jax.random.split(key)
+            if cp.has_dropout:
+                delivered = (jax.random.uniform(k_drop, (C,))
+                             >= jnp.asarray(cp.dropout_p, jnp.float32))
+            else:
+                delivered = jnp.ones((C,), bool)
+            if cp.grad_norm_selection:
+                sel_idx = jnp.argsort(-ctl.grad_norm,
+                                      stable=True)[:cp.select_k]
+            elif cp.selecting:
+                sel_idx = control_mod.select_topk(
+                    control_mod.score(ctl), cp.select_k, key=k_sel,
+                    epsilon=cp.epsilon)
+            else:
+                sel_idx = None
+            if sel_idx is not None:
+                selected = jnp.zeros((C,), bool).at[sel_idx].set(True)
+            else:
+                selected = jnp.ones((C,), bool)
+            active = selected & delivered
+        else:
+            selected = delivered = active = jnp.ones((C,), bool)
 
         # (3)+(4) selective aggregation (the paper's contribution) on the
         # flat (C, rows, LANE) arena — one packed buffer, one kernel sweep
         u = arena.pack_cohort(grads)
+        if cp is not None and cp.per_client_lr:
+            u = u * ctl.lr_scale[:, None, None]
+        if cp is not None and cp.quantize:
+            # int8 + error feedback on the wire; only clients that
+            # actually participate quantize / carry residuals
+            restored, residual = compression.compress_cohort(
+                u, ctl.ef[:C])
+            u = jnp.where(active[:, None, None], restored, u)
+            ctl = ctl._replace(ef=ctl.ef.at[:C].set(
+                jnp.where(active[:, None, None], residual, ctl.ef[:C])))
+        # norms AFTER the quantize round-trip — what the server actually
+        # receives, matching the host engines' grad_norm EMAs
+        norms = jnp.sqrt(jnp.sum(u * u, axis=(1, 2)))
         if theta is None:
-            mask = jnp.ones((C,), jnp.float32)
             ratios = jnp.ones((C,), jnp.float32)
-            passed = mask
+            passed = active.astype(jnp.float32)
+            mask = passed
         else:
             ratios = alignment.cohort_alignment(
                 u, arena.pack_signs(state.ref_sign), arena.n)
             passed = alignment.selection_mask(ratios, theta)
             # bootstrap: round 0 has no reference direction yet -> accept all
             passed = jnp.where(state.step == 0, jnp.ones_like(passed), passed)
+            passed = passed * active.astype(jnp.float32)
             # production fallback (deviation from the paper's "server keeps
-            # w_g", which deadlocks a per-step trainer): if NO client passes
-            # θ this round, accept all rather than stall. The faithful
-            # keep-w_g semantics live in the async simulator path.
-            mask = jnp.where(passed.sum() > 0, passed, jnp.ones_like(passed))
+            # w_g", which deadlocks a per-step trainer): if NO participating
+            # client passes θ this round, accept all participants rather
+            # than stall. The faithful keep-w_g semantics live in the async
+            # simulator path.
+            mask = jnp.where(passed.sum() > 0, passed,
+                             active.astype(jnp.float32))
         w = mask / jnp.maximum(mask.sum(), 1e-9)
         agg = arena.unpack(
             arena_mod.weighted_sum(u, w, compute_dtype=agg_dtype),
@@ -119,35 +225,62 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
                                    jnp.sign(a).astype(jnp.int8), r),
             agg, state.ref_sign)
 
-        update_bytes = _update_bytes(state.params)
+        # (6) control-plane statistics for the next round's selection
+        if cp is not None:
+            cohort = jnp.arange(C)
+            sent = mask > 0
+            hint = (jnp.asarray(cp.round_time_hint, jnp.float32)
+                    if cp.round_time_hint else jnp.ones((C,), jnp.float32))
+            ctl = control_mod.observe(ctl, cohort, mask=selected,
+                                      delivered=delivered, passed=sent,
+                                      round_time=hint, ema=cp.ema)
+            ctl = control_mod.grad_norm_update(ctl, cohort, norms, active)
+            if cp.per_client_lr:
+                ctl = control_mod.lr_scale_update(ctl, cohort, norms,
+                                                  active)
+            ctl = control_mod.staleness_update(ctl, cohort, sent)
+
+        update_bytes = (jnp.float32(wire_bytes) if wire_bytes
+                        else _update_bytes(state.params))
+        n_sel = selected.sum().astype(jnp.float32)
         metrics = {
             "loss": loss.mean(),
-            "accept_rate": passed.mean(),
+            # pre-fallback pass fraction over the selected cohort (the
+            # paper's acceptance-rate metric; == passed.mean() when the
+            # control plane is off)
+            "accept_rate": passed.sum() / jnp.maximum(n_sel, 1.0),
             "alignment_mean": ratios.mean(),
             # per-client transmit mask (post-fallback) — the api runner
             # needs it for per-client transfer-time accounting
             "mask": mask,
+            "selected": selected.astype(jnp.float32),
+            "delivered": delivered.astype(jnp.float32),
             # client->server bytes actually transmitted this round (the
             # paper's communication-overhead metric, §V-D); filtered
             # clients are charged their 1-bit skip beacon, matching the
-            # event-driven simulator
+            # event-driven simulator; unselected / dropped clients send
+            # nothing at all
             "bytes_sent": (mask.sum() * update_bytes
-                           + (jnp.float32(C) - mask.sum()) * beacon_bytes),
-            "bytes_baseline": jnp.float32(C) * update_bytes,
+                           + ((active.astype(jnp.float32) - mask).sum()
+                              * beacon_bytes)),
+            "bytes_baseline": jnp.float32(C) * _update_bytes(state.params),
         }
         run = {"accepted": state.metrics["accepted"] + mask.sum(),
                "rounds": state.metrics["rounds"] + 1.0}
-        return FLState(new_params, new_opt, new_ref, state.step + 1, run), metrics
+        return FLState(new_params, new_opt, new_ref, state.step + 1, run,
+                       ctl), metrics
 
     return step
 
 
 def build_fl_train_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
                         lr_schedule=None, donate: bool = True,
-                        beacon_bytes: float = 0.125):
+                        beacon_bytes: float = 0.125,
+                        control_plane: Optional[ControlPlane] = None):
     """jit'd step(state, batch) -> (state, metrics)."""
     step = make_raw_step(cfg, optimizer, theta, lr_schedule,
-                         beacon_bytes=beacon_bytes)
+                         beacon_bytes=beacon_bytes,
+                         control_plane=control_plane)
     if donate:
         return jax.jit(step, donate_argnums=(0,))
     return jax.jit(step)

@@ -23,6 +23,16 @@ module collapses all of it into two compiled dispatches per round:
 
 Timing, selection, dropout and byte accounting stay event-driven in
 Python, consuming these batched device results (core/async_engine.py).
+
+``build_scanned_rounds`` goes one step further (the device-resident
+control plane): selection, dynamic batch adaptation, dropout, timing and
+staleness-weighted aggregation ALL run as pure-JAX state transitions
+(core/control.py), so ``rounds_per_dispatch`` rounds execute inside ONE
+jitted ``lax.scan`` — dispatches per simulated round drop from O(1)
+toward O(1/R). Selection is a masked fixed-width cohort: a stable top-k
++ ε-greedy pick on device, with per-client arena slabs (error-feedback
+buffers) fetched by a one-hot gather (Pallas kernel on TPU, jnp oracle
+on CPU — kernels/gather.py via kernels/arena.py).
 """
 from __future__ import annotations
 
@@ -31,9 +41,36 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import alignment, compression
+from repro.core import aggregation, alignment, compression, control
 from repro.kernels import arena as arena_ops
 from repro.models import api
+
+
+def _train_cohort(cfg, opt, arena, params, batches, lr_scale):
+    """The cohort's local training as ONE vmap-of-scan — shared by the
+    per-round cohort step and the scanned control plane so the two
+    compiled paths can never drift apart. Returns the per-client deltas
+    packed into the (C, rows, lane) arena and (C,) mean losses."""
+
+    def train_one(client_batches, scale):
+        opt_state = opt.init(params)
+
+        def step(carry, batch):
+            p, s = carry
+            loss, grads = jax.value_and_grad(
+                lambda q: api.loss_fn(q, batch, cfg))(p)
+            grads = jax.tree.map(lambda g: g * scale, grads)
+            p, s = opt.update(grads, s, p)
+            return (p, s), loss
+
+        (p, _), losses = jax.lax.scan(step, (params, opt_state),
+                                      client_batches)
+        return p, losses.mean()
+
+    new_params, losses = jax.vmap(train_one)(batches, lr_scale)
+    deltas = arena.pack_cohort(jax.tree.map(
+        lambda n, o: (n - o).astype(jnp.float32), new_params, params))
+    return deltas, losses
 
 
 def build_cohort_step(cfg, opt, arena, theta=None, quantize: bool = False):
@@ -51,26 +88,8 @@ def build_cohort_step(cfg, opt, arena, theta=None, quantize: bool = False):
     def cohort_step(params_mat, batches, lr_scale, ref_mat, ef, idx, *,
                     has_ref):
         params = arena.unpack(params_mat)
-
-        def train_one(client_batches, scale):
-            opt_state = opt.init(params)
-
-            def step(carry, batch):
-                p, s = carry
-                loss, grads = jax.value_and_grad(
-                    lambda q: api.loss_fn(q, batch, cfg))(p)
-                grads = jax.tree.map(lambda g: g * scale, grads)
-                p, s = opt.update(grads, s, p)
-                return (p, s), loss
-
-            (p, _), losses = jax.lax.scan(step, (params, opt_state),
-                                          client_batches)
-            return p, losses.mean()
-
-        new_params, losses = jax.vmap(train_one)(batches, lr_scale)
-        deltas = arena.pack_cohort(jax.tree.map(
-            lambda n, o: (n - o).astype(jnp.float32), new_params, params))
-
+        deltas, losses = _train_cohort(cfg, opt, arena, params, batches,
+                                       lr_scale)
         new_ef = ef
         if quantize:
             restored, residual = compression.compress_cohort(
@@ -108,3 +127,202 @@ def build_apply_update(arena):
         return new_mat, arena.sign_ref(new_mat, params_mat)
 
     return apply_update
+
+
+# ---------------------------------------------------------------------------
+# device-resident control plane: R rounds per dispatch (lax.scan)
+# ---------------------------------------------------------------------------
+
+def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
+                         select_k: int, steps_phys: int, batch_phys: int,
+                         rounds_per_dispatch: int, param_bytes: float,
+                         wire_bytes=None, epsilon: float = 0.1,
+                         ema: float = 0.8, recovery_time: float = 0.2,
+                         restart_time: float = 1.0):
+    """Compile ``rounds_per_dispatch`` full FL rounds — {select → train
+    cohort → θ-filter → staleness-weighted arena aggregate → control
+    update} — into one jitted ``lax.scan``.
+
+    The entire server control plane lives in a ``ControlState`` of
+    ``(N,)`` device arrays (core/control.py); selection produces a FIXED
+    width-``select_k`` cohort (top-k + ε-greedy on device), so
+    dropout-varying rounds reuse a single trace and the per-round launch
+    + transfer overhead the paper profiles (Tables V-VI) is amortized
+    over R rounds. Event accounting (arrival times, quorum clock,
+    barrier idle, bytes) is computed with the same formulas the
+    event-driven engine uses, as vector arithmetic inside the scan.
+
+    Semantics vs the event-driven reference (documented deviations):
+      * batch sampling / dropout / ε-exploration draw from a JAX PRNG
+        (per-round ``fold_in`` keys, so trajectories are independent of
+        the dispatch grouping R — ``rounds_per_dispatch=8`` is
+        bit-identical to ``=1``), not the host numpy Generators;
+      * every cohort client trains on the static (steps_phys,
+        batch_phys) shape; ``dynamic_batch`` adapts the ControlState's
+        power-of-two assignments and drives the simulated straggler
+        timing exactly (the §IV-A effect), while gradient math keeps the
+        fixed physical shape — the price of a single trace;
+      * the Weibull checkpoint-interval refit (which never feeds back
+        into the trajectory) is skipped; failures are counted per round.
+
+    Returns ``run(params_mat, ref_mat, ref_valid, ctl, data, sizes,
+    speed, latency, dropout_p, base_key, round0, acc) -> (carry, metrics)``
+    where ``metrics`` is a dict of ``(R,)`` per-round series and
+    ``carry`` the updated ``(params_mat, ref_mat, ref_valid, ctl, acc)``.
+    ``acc`` is the (sim_time, comm_time, idle_time, bytes_sent) f32
+    accumulator vector.
+    """
+    N, K, R = int(num_clients), int(select_k), int(rounds_per_dispatch)
+    theta_on = st.theta is not None
+    payload = float(wire_bytes if (st.quantize_updates and wire_bytes)
+                    else param_bytes)
+    beacon = float(comm.beacon_bytes)
+
+    def round_body(carry, r, data, sizes, speed, latency, dropout_p,
+                   base_key):
+        params_mat, ref_mat, ref_valid, ctl, acc = carry
+        sim_t, comm_t, idle_t, bytes_s = acc
+        key = jax.random.fold_in(base_key, r)
+        k_eps, k_pick, k_drop, k_data = jax.random.split(key, 4)
+
+        # --- selection: fixed-width top-k cohort ------------------------
+        if st.grad_norm_selection:
+            cohort = jnp.argsort(-ctl.grad_norm, stable=True)[:K]
+        elif st.selection and K < N:
+            cohort = control.select_topk_epsilon(
+                control.score(ctl), K, epsilon,
+                eps_u=jax.random.uniform(k_eps, (K,)),
+                pick_u=jax.random.uniform(k_pick, (K,)))
+        else:
+            cohort = jnp.arange(K)
+        # --- dropout draws (§IV-C fault model) --------------------------
+        failed = jax.random.uniform(k_drop, (K,)) < dropout_p[cohort]
+        if st.checkpointing:
+            active = jnp.ones((K,), bool)
+            delay = jnp.where(
+                failed, jnp.where(ctl.has_ckpt[cohort],
+                                  jnp.float32(recovery_time),
+                                  jnp.float32(restart_time)), 0.0)
+        else:
+            active = ~failed
+            delay = jnp.zeros((K,), jnp.float32)
+
+        # --- cohort batches: on-device gather + index sampling ----------
+        sz = sizes[cohort]
+        idx = jax.random.randint(k_data, (K, steps_phys, batch_phys), 0,
+                                 sz[:, None, None])
+        batch = {name: leaf[cohort[:, None, None], idx]
+                 for name, leaf in data.items()}
+
+        # --- local training: vmap-of-scan over the cohort ---------------
+        params = arena.unpack(params_mat)
+        lr_scale = (ctl.lr_scale[cohort] if st.per_client_lr
+                    else jnp.ones((K,), jnp.float32))
+        deltas, losses = _train_cohort(cfg, opt, arena, params, batch,
+                                       lr_scale)
+        new_ef = ctl.ef
+        if st.quantize_updates:
+            ef_cohort = arena_ops.cohort_gather(ctl.ef, cohort)
+            restored, residual = compression.compress_cohort(
+                deltas, ef_cohort)
+            new_ef = ctl.ef.at[cohort].set(
+                jnp.where(active[:, None, None], residual, ef_cohort))
+            deltas = restored
+        ctl = ctl._replace(ef=new_ef)
+
+        norms = jnp.sqrt(jnp.sum(deltas * deltas, axis=(1, 2)))
+        if theta_on:
+            ratios = alignment.cohort_alignment(deltas, ref_mat, arena.n)
+            passed = jnp.where(ref_valid, ratios >= st.theta, True)
+        else:
+            passed = jnp.ones((K,), bool)
+        sent = active & passed
+
+        # --- event accounting (the engine's timing model, vectorized) ---
+        b_eff = jnp.minimum(
+            (ctl.batch[cohort] if st.dynamic_batch else batch_phys), sz)
+        steps_t = control.local_steps(sz, b_eff, st.local_epochs,
+                                      st.max_samples_per_round)
+        b_eff = b_eff.astype(jnp.float32)
+        steps_f = steps_t.astype(jnp.float32)
+        train_t = ((steps_f * comm.t_launch
+                    + steps_f * b_eff * comm.t_sample)
+                   / jnp.maximum(speed[cohort], 1e-3))
+        msg_bytes = jnp.where(sent, payload, beacon)
+        transfer = latency[cohort] + msg_bytes / comm.bandwidth
+        arrive = delay + train_t + transfer          # rel. to round start
+        n_active = active.sum().astype(jnp.int32)
+        n_sent = sent.sum().astype(jnp.int32)
+        comm_t = comm_t + jnp.sum(jnp.where(active, transfer, 0.0))
+        bytes_s = bytes_s + jnp.sum(jnp.where(active, msg_bytes, 0.0))
+
+        # --- aggregation weights: sync barrier / async quorum -----------
+        if st.mode == "sync":
+            barrier = jnp.max(jnp.where(active, arrive, -jnp.inf))
+            sim_t = jnp.where(n_active > 0, sim_t + barrier, sim_t)
+            idle_t = idle_t + jnp.sum(
+                jnp.where(active, barrier - arrive, 0.0))
+            w = sent.astype(jnp.float32) \
+                / jnp.maximum(n_sent.astype(jnp.float32), 1.0)
+            updates_applied = (n_sent > 0).astype(jnp.int32)
+        else:
+            t_act = jnp.where(active, arrive, jnp.inf)
+            q_idx = jnp.maximum(
+                0, jnp.ceil(st.quorum * n_active.astype(jnp.float32))
+                .astype(jnp.int32) - 1)
+            sim_t = jnp.where(n_active > 0,
+                              sim_t + jnp.sort(t_act)[q_idx], sim_t)
+            rank = jnp.argsort(jnp.argsort(t_act, stable=True),
+                               stable=True)
+            tau = jnp.maximum(0, rank - q_idx)
+            alphas = aggregation.staleness_weight(tau, st.alpha0)
+            w = jnp.where(sent, alphas, 0.0) \
+                / jnp.maximum(n_sent.astype(jnp.float32), 1.0)
+            updates_applied = n_sent
+
+        # --- one weighted arena sum applies the round ------------------
+        new_mat = params_mat + arena_ops.weighted_sum(deltas, w)
+        applied = updates_applied > 0
+        if theta_on:
+            sref = arena.sign_ref(new_mat, params_mat)
+            ref_mat = jnp.where(applied, sref, ref_mat)
+            ref_valid = ref_valid | applied
+        params_mat = new_mat
+
+        # --- control-plane transitions (core/control.py) ----------------
+        ctl = control.observe_round(ctl, cohort, failed=failed,
+                                    active=active, passed=sent,
+                                    round_time=arrive, ema=ema)
+        ctl = control.grad_norm_update(ctl, cohort, norms, active)
+        if st.per_client_lr:
+            ctl = control.lr_scale_update(ctl, cohort, norms, active)
+        if st.dynamic_batch:
+            ctl = control.batch_feedback(ctl, cohort, arrive, active)
+        if st.checkpointing:
+            ctl = control.checkpoint_update(ctl, cohort, active)
+        ctl = control.staleness_update(ctl, cohort, sent)
+
+        loss_mean = (jnp.sum(jnp.where(active, losses, 0.0))
+                     / jnp.maximum(n_active.astype(jnp.float32), 1.0))
+        metrics = {
+            "sim_time": sim_t, "comm_time": comm_t, "idle_time": idle_t,
+            "bytes_sent": bytes_s,
+            "updates_applied": updates_applied,
+            "accept_rate": (n_sent.astype(jnp.float32) / jnp.float32(K)),
+            "loss": loss_mean,
+            "n_failures": failed.sum().astype(jnp.int32),
+        }
+        acc = jnp.stack([sim_t, comm_t, idle_t, bytes_s])
+        return (params_mat, ref_mat, ref_valid, ctl, acc), metrics
+
+    @jax.jit
+    def run(params_mat, ref_mat, ref_valid, ctl, data, sizes, speed,
+            latency, dropout_p, base_key, round0, acc):
+        body = functools.partial(round_body, data=data, sizes=sizes,
+                                 speed=speed, latency=latency,
+                                 dropout_p=dropout_p, base_key=base_key)
+        rounds = round0 + jnp.arange(R, dtype=jnp.int32)
+        carry0 = (params_mat, ref_mat, ref_valid, ctl, acc)
+        return jax.lax.scan(lambda c, r: body(c, r), carry0, rounds)
+
+    return run

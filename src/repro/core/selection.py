@@ -52,7 +52,10 @@ class AdaptiveClientSelector:
         order = list(np.argsort(-scores))
         chosen = [cids[i] for i in order[:k]]
         # ε-greedy exploration: swap in random unchosen clients
-        pool = [c for c in cids if c not in chosen]
+        # (set membership: the old `c not in chosen` list scan was O(n·k);
+        # pool order and contents are identical, so seeded draws match)
+        chosen_set = set(chosen)
+        pool = [c for c in cids if c not in chosen_set]
         for i in range(len(chosen)):
             if pool and self.rng.random() < self.epsilon:
                 j = self.rng.integers(len(pool))

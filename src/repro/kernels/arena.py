@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import gather as _gather
 from repro.kernels import masked_agg as _agg
 from repro.kernels import quantize as _qz
 from repro.kernels import ref as _ref
@@ -156,6 +157,19 @@ def fused_apply(p, u, w_lr) -> jnp.ndarray:
     if use_pallas():
         return _agg.fused_update(p, u, w_lr, interpret=False)
     return _ref.fused_update(p, u, w_lr)
+
+
+def cohort_gather(src, idx) -> jnp.ndarray:
+    """Gather per-client arena slabs by cohort index: src (N, rows, lane)
+    f32, idx (K,) i32 -> (K, rows, lane). The device control plane's
+    top-k selection feeds this (EF buffers, per-client state slabs); on
+    TPU it runs as a one-hot matmul sweep (MXU-friendly, no serial DMA
+    per row), on CPU as the bit-identical ``jnp.take`` oracle."""
+    if use_pallas():
+        onehot = (idx[:, None] == jnp.arange(src.shape[0])[None, :]
+                  ).astype(jnp.float32)
+        return _gather.onehot_gather(src, onehot, interpret=False)
+    return _ref.cohort_gather(src, idx)
 
 
 def quantize_rows(x):

@@ -37,6 +37,12 @@ def fused_update(p, u, w_lr):
     return (p.astype(jnp.float32) - agg).astype(p.dtype)
 
 
+def cohort_gather(src, idx):
+    """src: (N, R, LANE); idx: (K,) i32 -> (K, R, LANE) gathered rows —
+    oracle of the one-hot matmul gather (exact: one nonzero per row)."""
+    return jnp.take(src, idx, axis=0)
+
+
 def quantize_q8(x):
     """Per-row symmetric int8 quantization. x: (R, LANE) float.
     Returns (q int8 (R, LANE), scale f32 (R, 1))."""

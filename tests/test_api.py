@@ -52,13 +52,35 @@ def test_unknown_partition_rejected():
         _spec(data=DataSpec(partition="zipf")).validate()
 
 
-def test_spmd_rejects_async_and_dropout():
+def test_spmd_rejects_async_and_dynamic_batch():
+    # "ours" is async + dynamic_batch: both remain sim-only semantics
     with pytest.raises(ValueError, match="spmd"):
         _spec(engine="spmd", strategy="ours").validate()
-    with pytest.raises(ValueError, match="dropout"):
+    with pytest.raises(ValueError, match="dynamic_batch"):
+        _spec(engine="spmd", strategy=get_strategy("fedavg").build(
+            dynamic_batch=True)).validate()
+
+
+def test_spmd_accepts_selection_and_dropout():
+    """The device control plane handles selection, dropout and quantized
+    updates as cohort masking — validate() must accept them now."""
+    st = dataclasses.replace(_degenerate_strategy(), selection=True,
+                             select_fraction=0.5, quantize_updates=True,
+                             per_client_lr=True)
+    _spec(engine="spmd", strategy=st,
+          world=WorldSpec(num_clients=4, profile="uniform",
+                          dropout_p=0.3)).validate()
+
+
+def test_rounds_per_dispatch_validated():
+    with pytest.raises(ValueError, match="rounds_per_dispatch"):
+        _spec(rounds_per_dispatch=0).validate()
+    with pytest.raises(ValueError, match="sim-engine"):
         _spec(engine="spmd", strategy=_degenerate_strategy(),
-              world=WorldSpec(num_clients=4, profile="uniform",
-                              dropout_p=0.3)).validate()
+              rounds_per_dispatch=4).validate()
+    with pytest.raises(ValueError, match="megastep"):
+        _spec(rounds_per_dispatch=4, megastep=False).validate()
+    _spec(rounds_per_dispatch=4).validate()
 
 
 def test_lm_needs_iid_partition():

@@ -1,0 +1,36 @@
+"""CI smoke run of every script in examples/ (<=2 rounds each).
+
+Each example honors ``REPRO_SMOKE=1`` by shrinking to a miniature
+configuration; this test executes them as real subprocesses (the same
+way a user would) so the entry points can never silently rot.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+EXAMPLES = sorted(p.name for p in (ROOT / "examples").glob("*.py"))
+
+
+def test_every_example_is_covered():
+    """New example scripts must register here (parametrize catches them
+    automatically — this guards against an empty glob)."""
+    assert len(EXAMPLES) >= 5, EXAMPLES
+
+
+@pytest.mark.parametrize("script", EXAMPLES)
+def test_example_smoke(script):
+    env = dict(os.environ)
+    env["REPRO_SMOKE"] = "1"
+    env["PYTHONPATH"] = (str(ROOT / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / script)],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (
+        f"{script} failed\n--- stdout ---\n{proc.stdout[-2000:]}"
+        f"\n--- stderr ---\n{proc.stderr[-2000:]}")
+    assert proc.stdout.strip(), f"{script} produced no output"

@@ -7,6 +7,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import aggregation, alignment
+from repro.kernels import gather as ga
 from repro.kernels import masked_agg as ma
 from repro.kernels import ops, ref
 from repro.kernels import quantize as qz
@@ -53,6 +54,20 @@ def test_masked_agg(C, shape):
     np.testing.assert_allclose(np.asarray(ma.masked_agg(u, w)),
                                np.asarray(ref.masked_agg(u, w)),
                                rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("N,K", [(4, 2), (8, 8), (6, 1)])
+def test_onehot_cohort_gather(N, K):
+    """One-hot matmul gather == jnp.take oracle (exact: single 1.0
+    coefficient per output row) — the scanned control plane's cohort
+    fetch (kernels/gather.py)."""
+    key = jax.random.PRNGKey(5)
+    src = _rand(key, (N, 8, ops.LANE), jnp.float32)
+    idx = jax.random.randint(jax.random.fold_in(key, 1), (K,), 0, N)
+    onehot = (idx[:, None] == jnp.arange(N)[None, :]).astype(jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ga.onehot_gather(src, onehot)),
+        np.asarray(ref.cohort_gather(src, idx)))
 
 
 @pytest.mark.parametrize("dtype", DTYPES)
