@@ -4,7 +4,7 @@
   PYTHONPATH=src python -m benchmarks.run --only table3_comm_opt
   PYTHONPATH=src python -m benchmarks.run --full     # paper-scale repeats
   PYTHONPATH=src python -m benchmarks.run --list     # strategy smoke mode
-  PYTHONPATH=src python -m benchmarks.run --bench-json BENCH_sim.json
+  PYTHONPATH=src python -m benchmarks.run --bench-json BENCH_sim.json --sweep
                                                      # sim-engine perf run
 
 Each module prints a CSV block headed by its paper-table provenance; the
@@ -14,6 +14,8 @@ roofline table (deliverable g) is rendered from the dry-run JSONL by
 the fixed 32-client heterogeneous sim config on both execution paths
 (reference per-client loop vs compiled cohort megastep) and writes
 rounds/sec + dispatches/round so the perf trajectory is tracked in CI.
+``--sweep`` adds the multi-seed sweep benchmark: the serial per-seed
+spmd loop vs run_sweep's ONE vmapped seed-stacked state.
 """
 from __future__ import annotations
 
@@ -58,9 +60,94 @@ def list_strategies() -> None:
 
 SCAN_R = 8          # rounds per dispatch on the scanned control plane
 
+# multi-seed sweep protocol (--sweep): the Table VII regime — MANY small
+# repeated runs — where per-seed dispatch overhead dominates and folding
+# the seed axis into the cohort dispatch pays the most
+SWEEP_SEEDS = 16
+SWEEP_CLIENTS = 4
+SWEEP_BATCH = 32
+SWEEP_ROUNDS = 50
+SWEEP_REPS = 3      # best-of-N timing: the windows are short (dispatch-
+                    # bound micro-runs), min over reps kills scheduler noise
+
+
+def bench_sweep(rounds: int = SWEEP_ROUNDS, seeds: int = SWEEP_SEEDS,
+                clients: int = SWEEP_CLIENTS,
+                batch_size: int = SWEEP_BATCH,
+                reps: int = SWEEP_REPS) -> dict:
+    """Multi-seed spmd sweep throughput: the serial per-seed loop vs ONE
+    vmapped seed-stacked state (``run_sweep``'s vectorized path,
+    ``fl_step.build_seed_batched_step``). Fixed cohort batches reused
+    every round (the ``_bench_spmd_engine`` idiom) isolate dispatch +
+    compute from host sampling; rounds/sec counts seeds x rounds
+    simulated rounds. Both sides share one compiled step build; the
+    serial loop still pays one dispatch per seed per round, the vmapped
+    path exactly one per round for ALL seeds."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import anomaly_mlp
+    from repro.core import fl_step
+    from repro.optim import adamw as optim_mod
+
+    cfg = anomaly_mlp.SMOKE
+    opt = optim_mod.sgd(5e-3, momentum=0.0)
+    rng = np.random.default_rng(0)
+    batches = [{"x": jnp.asarray(rng.normal(
+                    size=(clients, batch_size, cfg.num_features))
+                    .astype(np.float32)),
+                "y": jnp.asarray(rng.integers(
+                    0, cfg.num_classes, (clients, batch_size)))}
+               for _ in range(seeds)]
+
+    step = fl_step.build_fl_train_step(cfg, opt, theta=0.65, donate=False)
+    states = [fl_step.init_state(jax.random.PRNGKey(s), cfg, opt)
+              for s in range(seeds)]
+    for i in range(seeds):                              # compile + warm
+        states[i], m = step(states[i], batches[i])
+    jax.block_until_ready(m)
+    dt_serial = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            for i in range(seeds):
+                states[i], m = step(states[i], batches[i])
+        jax.block_until_ready(m)
+        dt_serial = min(dt_serial, time.perf_counter() - t0)
+
+    vstep = fl_step.build_seed_batched_step(cfg, opt, theta=0.65)
+    vstate = fl_step.init_seed_batched_state(range(seeds), cfg, opt)
+    vbatch = {k: jnp.stack([b[k] for b in batches]) for k in batches[0]}
+    vstate, m = vstep(vstate, vbatch)                   # compile + warm
+    jax.block_until_ready(m)
+    dt_vmap = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            vstate, m = vstep(vstate, vbatch)
+        jax.block_until_ready(m)
+        dt_vmap = min(dt_vmap, time.perf_counter() - t0)
+
+    total = seeds * rounds
+    out = {
+        "serial": {"seconds": round(dt_serial, 3),
+                   "rounds_per_sec": round(total / dt_serial, 3),
+                   "dispatches_per_round": float(seeds)},
+        "vmapped": {"seconds": round(dt_vmap, 3),
+                    "rounds_per_sec": round(total / dt_vmap, 3),
+                    "dispatches_per_round": 1.0},
+        "speedup": round(dt_serial / dt_vmap, 2),
+    }
+    print(f"# sweep bench ({seeds} seeds x {rounds} rounds, "
+          f"{clients} clients, batch {batch_size}): vmapped "
+          f"{out['speedup']}x serial rounds/sec")
+    return out
+
 
 def bench_sim(json_path: str, rounds: int = 20, clients: int = 32,
-              warmup: int = 2, check_against: str = None) -> dict:
+              warmup: int = 2, check_against: str = None,
+              sweep: bool = False) -> dict:
     """Sim-engine perf benchmark (ISSUE 2/3 acceptance metric): the fixed
     ``clients``-client heterogeneous config, timed on every execution
     path. Reports rounds/sec and compiled dispatches/round: the
@@ -133,6 +220,12 @@ def bench_sim(json_path: str, rounds: int = 20, clients: int = 32,
                      "dispatches_per_round": (sim.dispatches - d0) / rounds}
 
     out["spmd"] = _bench_spmd_engine(rounds, clients)
+    if sweep:
+        out["config"].update({"sweep_seeds": SWEEP_SEEDS,
+                              "sweep_clients": SWEEP_CLIENTS,
+                              "sweep_batch": SWEEP_BATCH,
+                              "sweep_rounds": SWEEP_ROUNDS})
+        out["sweep"] = bench_sweep()
     out["speedup"] = round(out["megastep"]["rounds_per_sec"]
                            / out["loop"]["rounds_per_sec"], 2)
     out["scan_speedup"] = round(out["scanned"]["rounds_per_sec"]
@@ -205,8 +298,11 @@ def _check_regression(out: dict, committed_path: str,
     # protocol: a different round count changes the scanned path's trace
     # length / eval amortization and a different client count changes
     # every path's work — refuse rather than spuriously pass or fail
-    proto = ("clients", "rounds", "batch_size", "max_samples_per_round",
-             "scan_rounds_per_dispatch")
+    proto = ["clients", "rounds", "batch_size", "max_samples_per_round",
+             "scan_rounds_per_dispatch"]
+    if "sweep" in out and "sweep" in committed:
+        proto += ["sweep_seeds", "sweep_clients", "sweep_batch",
+                  "sweep_rounds"]
     mismatch = {k: (out["config"].get(k), committed["config"].get(k))
                 for k in proto
                 if out["config"].get(k) != committed["config"].get(k)}
@@ -230,6 +326,20 @@ def _check_regression(out: dict, committed_path: str,
               f"{scale:.2f} x {1 - tolerance:.2f}) {status}")
         if got < floor:
             failures.append(path)
+    if "sweep" in out and "sweep" in committed:
+        # the sweep claim is the vmapped/serial RATIO — both sides are
+        # dispatch-bound micro-runs whose absolute rounds/sec doesn't
+        # track the loop path's machine scale, but their ratio does not
+        # depend on machine speed at all
+        floor = (1.0 - tolerance) * committed["sweep"]["speedup"]
+        got = out["sweep"]["speedup"]
+        status = "ok" if got >= floor else "REGRESSION"
+        print(f"# bench-guard [sweep] vmapped/serial speedup={got:.2f} "
+              f"floor={floor:.2f} (committed="
+              f"{committed['sweep']['speedup']:.2f} x "
+              f"{1 - tolerance:.2f}) {status}")
+        if got < floor:
+            failures.append("sweep")
     if failures:
         raise SystemExit(
             f"bench regression >{tolerance:.0%} on: {failures} "
@@ -254,6 +364,11 @@ def main(argv=None) -> None:
                     help="committed BENCH JSON to guard against: fail if "
                          "any path's rounds/sec drops >30%% below it "
                          "(machine-speed normalized via the loop path)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="time the vectorized (vmapped seed-stacked) vs "
+                         "serial multi-seed spmd sweep; with --bench-json "
+                         "its numbers join the JSON and the "
+                         "--check-against regression guard")
     args = ap.parse_args(argv)
     if args.list:
         list_strategies()
@@ -261,7 +376,11 @@ def main(argv=None) -> None:
     if args.bench_json:
         bench_sim(args.bench_json, rounds=args.bench_rounds,
                   clients=args.bench_clients,
-                  check_against=args.check_against)
+                  check_against=args.check_against, sweep=args.sweep)
+        return
+    if args.sweep:
+        import json
+        print(json.dumps(bench_sweep(), indent=2))
         return
     mods = [args.only] if args.only else MODULES
     failures = []

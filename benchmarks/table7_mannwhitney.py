@@ -3,38 +3,40 @@
 Per-run AUC-ROC samples of ours vs each baseline on BOTH datasets
 (UNSW-like and ROAD-like surrogates); H1: ours stochastically larger.
 The paper rejects H0 at α=0.05 for all six comparisons.
+
+Runs as ONE ``run_sweep`` per dataset (strategy × seed cross-product)
+and tests with the dependency-free ``repro.api.stats`` U implementation
+(pinned to scipy's asymptotic method in tests/test_sweep.py) — the
+hand-rolled per-seed loop this module used to carry now lives in the
+experiment layer.
 """
 from __future__ import annotations
 
-import numpy as np
-from scipy.stats import mannwhitneyu
-
 from benchmarks import common
-
-
-def _auc_samples(cfg, name, runs, rounds=4):
-    vals = []
-    for r in range(runs):
-        res = common.run(cfg, name,
-                         strategy_kwargs=dict(batch_size=64, lr=3e-2,
-                                              local_epochs=2),
-                         num_clients=8, rounds=rounds, dropout=0.3,
-                         seed=300 + r, n=8000)
-        vals.append(common.auc_of(res))
-    return np.array(vals)
+from repro.api import run_sweep
 
 
 def run(runs=10):
     rows = []
     for cfg, ds in [(common.UNSW, "UNSW-like"), (common.ROAD, "ROAD-like")]:
-        ours = _auc_samples(cfg, "ours", runs)
-        for base in ["cmfl", "acfl", "fedl2p"]:
-            them = _auc_samples(cfg, base, runs)
-            u, p = mannwhitneyu(ours, them, alternative="greater")
-            rows.append([f"ours_vs_{base}", ds, round(float(u), 1),
-                         f"{p:.3g}", "reject_H0" if p < 0.05 else "keep_H0",
-                         round(float(ours.mean()), 4),
-                         round(float(them.mean()), 4)])
+        base = common.spec_for(cfg, "ours",
+                               strategy_kwargs=dict(batch_size=64, lr=3e-2,
+                                                    local_epochs=2),
+                               num_clients=8, rounds=4, dropout=0.3,
+                               n=8000)
+        sweep = run_sweep(base, axes={
+            "strategy": ["ours", "cmfl", "acfl", "fedl2p"],
+            "seed": range(300, 300 + runs)})
+        ours_auc = sweep.values("auc", strategy="ours")
+        for baseline in ["cmfl", "acfl", "fedl2p"]:
+            r = sweep.mann_whitney_u("strategy", "ours", baseline,
+                                     metric="auc", alternative="greater")
+            them_auc = sweep.values("auc", strategy=baseline)
+            rows.append([f"ours_vs_{baseline}", ds, round(float(r.u), 1),
+                         f"{r.p_value:.3g}",
+                         "reject_H0" if r.significant(0.05) else "keep_H0",
+                         round(float(ours_auc.mean()), 4),
+                         round(float(them_auc.mean()), 4)])
     return common.emit(rows, ["comparison", "dataset", "U", "p_value",
                               "alpha_0.05", "ours_auc", "baseline_auc"])
 

@@ -13,13 +13,16 @@ Lower layers (``repro.core``, ``repro.kernels``, ``repro.launch``, ...)
 remain importable for engine-level work.
 """
 from repro.api import (ClientProfile, CommModel, DataSpec, ExperimentResult,
-                       ExperimentSpec, RoundRecord, STRATEGY_REGISTRY,
-                       Strategy, StrategyConfig, WorldSpec, get_strategy,
-                       list_strategies, register_strategy, run_experiment)
+                       ExperimentSession, ExperimentSpec, RoundRecord,
+                       STRATEGY_REGISTRY, ScheduleSpec, Strategy,
+                       StrategyConfig, SweepResult, WorldSpec, get_strategy,
+                       list_strategies, register_strategy, run_experiment,
+                       run_sweep)
 
 __all__ = [
     "ClientProfile", "CommModel", "DataSpec", "ExperimentResult",
-    "ExperimentSpec", "RoundRecord", "STRATEGY_REGISTRY", "Strategy",
-    "StrategyConfig", "WorldSpec", "get_strategy", "list_strategies",
-    "register_strategy", "run_experiment",
+    "ExperimentSession", "ExperimentSpec", "RoundRecord",
+    "STRATEGY_REGISTRY", "ScheduleSpec", "Strategy", "StrategyConfig",
+    "SweepResult", "WorldSpec", "get_strategy", "list_strategies",
+    "register_strategy", "run_experiment", "run_sweep",
 ]

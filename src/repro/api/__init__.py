@@ -1,26 +1,48 @@
 """Public experiment API: declarative specs, pluggable strategies, one
-facade over both engines.
+facade over both engines — plus sessions, schedules and sweeps.
 
     from repro.api import ExperimentSpec, run_experiment
 
     result = run_experiment(ExperimentSpec(strategy="ours", rounds=8))
     print(result.final.accuracy, result.final.bytes_sent)
+
+Resumable driving and multi-seed statistics:
+
+    from repro.api import ExperimentSession, run_sweep
+
+    session = ExperimentSession.open(spec)
+    for record in session.stream(8):
+        ...
+    session.checkpoint("run.ckpt")
+
+    sweep = run_sweep(spec, axes={"strategy": ["ours", "fedavg"],
+                                  "seed": range(5)})
+    print(sweep.mann_whitney_u("strategy", "ours", "fedavg").p_value)
 """
 from repro.api.result import (ROUND_FIELDS, ExperimentResult, RoundRecord)
-from repro.api.runner import build_spmd_components, run_experiment
-from repro.api.spec import DataSpec, ExperimentSpec, WorldSpec
+from repro.api.runner import (build_spmd_components, run_experiment,
+                              run_spmd_seed_batch, seed_vectorizable)
+from repro.api.session import (CheckpointMismatchError, ExperimentSession)
+from repro.api.spec import (DataSpec, ExperimentSpec, SpecError, SpecIssue,
+                            WorldSpec)
+from repro.api.stats import MannWhitneyResult, mann_whitney_u, median_iqr
 from repro.api.strategies import (PRESETS, STRATEGY_REGISTRY, Strategy,
                                   get_strategy, list_strategies,
                                   register_strategy, resolve_strategy)
+from repro.api.sweep import SweepPoint, SweepResult, run_sweep
 from repro.api.world import World, build_world
 from repro.core.async_engine import (ClientProfile, CommModel,
                                      StrategyConfig)
+from repro.core.schedule import ScheduleSpec
 
 __all__ = [
-    "ClientProfile", "CommModel", "DataSpec", "ExperimentResult",
-    "ExperimentSpec", "PRESETS", "ROUND_FIELDS", "RoundRecord",
-    "STRATEGY_REGISTRY", "Strategy", "StrategyConfig", "World",
+    "CheckpointMismatchError", "ClientProfile", "CommModel", "DataSpec",
+    "ExperimentResult", "ExperimentSession", "ExperimentSpec",
+    "MannWhitneyResult", "PRESETS", "ROUND_FIELDS", "RoundRecord",
+    "STRATEGY_REGISTRY", "ScheduleSpec", "SpecError", "SpecIssue",
+    "Strategy", "StrategyConfig", "SweepPoint", "SweepResult", "World",
     "WorldSpec", "build_spmd_components", "build_world", "get_strategy",
-    "list_strategies", "register_strategy", "resolve_strategy",
-    "run_experiment",
+    "list_strategies", "mann_whitney_u", "median_iqr",
+    "register_strategy", "resolve_strategy", "run_experiment",
+    "run_spmd_seed_batch", "run_sweep", "seed_vectorizable",
 ]

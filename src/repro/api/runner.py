@@ -1,14 +1,26 @@
-"""``run_experiment(spec)`` — one facade over both engines.
+"""Engine drivers behind the experiment API.
 
-engine="sim"   builds the client world and drives the event-driven
-               ``FederatedSimulation`` (heterogeneous timing, dropout,
-               async quorum, checkpointing — the paper's apparatus).
+``run_experiment(spec)`` is now a thin wrapper over
+``ExperimentSession`` (api/session.py) — open, run to the spec's round
+budget, collect the result. The engine-specific machinery lives here:
 
-engine="spmd"  drives the compiled ``fl_step`` path: one jitted step per
-               round over a (C, B, ...) cohort batch, with the SAME
-               CommModel applied analytically for sync-barrier timing and
-               byte accounting, so both engines emit the normalized
-               ``RoundRecord`` schema.
+``build_simulation(spec)``  — the event-driven ``FederatedSimulation``
+    (heterogeneous timing, dropout, async/semi-async quorum,
+    checkpointing — the paper's apparatus), constructed from a spec.
+
+``SpmdDriver``              — stepping driver for the compiled
+    ``fl_step`` path: one jitted step per round over a (C, B, ...)
+    cohort batch, with the SAME CommModel applied analytically for
+    sync-barrier timing and byte accounting, so both engines emit the
+    normalized ``RoundRecord`` schema. Exposes ``run_rounds`` /
+    ``state_dict`` / ``load_state_dict`` for session streaming and
+    bit-exact checkpoint/resume.
+
+``run_spmd_seed_batch``     — the vectorized multi-seed path used by
+    ``run_sweep``: same-shape replicas over S seeds advance as ONE
+    vmapped, seed-stacked ``FLState`` (the seed axis folded into the
+    cohort dispatch), so an S-seed sweep pays one compiled dispatch per
+    round instead of S.
 
 Degenerate parity: with uniform profiles, zero latency, theta=None and
 one local step (``max_samples_per_round == batch_size``), the two engines
@@ -19,8 +31,9 @@ in the sim's local runs, so the spmd engine uses momentum=0).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import List
+from typing import List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -37,45 +50,42 @@ from repro.optim import adamw as optim_mod
 
 
 def run_experiment(spec: ExperimentSpec) -> ExperimentResult:
-    spec.validate()
-    t0 = time.time()
-    if spec.engine == "sim":
-        result = _run_sim(spec)
-    else:
-        result = _run_spmd(spec)
-    result.wall_time = time.time() - t0
-    return result
+    """One-shot facade: open a session, run ``spec.rounds``, return the
+    normalized result. For streaming, callbacks, checkpoint/resume or
+    sweeps use ``ExperimentSession`` / ``run_sweep`` directly."""
+    from repro.api.session import ExperimentSession
+
+    session = ExperimentSession.open(spec)
+    session.run(spec.rounds)
+    return session.result()
 
 
 # ---------------------------------------------------------------------------
 # engine="sim"
 # ---------------------------------------------------------------------------
 
-def _run_sim(spec: ExperimentSpec) -> ExperimentResult:
+def build_simulation(spec: ExperimentSpec) -> "ae.FederatedSimulation":
+    """The event-driven simulation an ``engine='sim'`` spec describes."""
     cfg = spec.resolve_model()
-    strategy = spec.resolve_strategy()
     world = spec.build_world()
-    sim = ae.FederatedSimulation(cfg, world.client_arrays, world.eval_arrays,
-                                 strategy, world.profiles,
-                                 comm=spec.resolve_comm(), seed=spec.seed,
-                                 eval_fn=spec.eval_fn,
-                                 eval_every=spec.eval_every,
-                                 megastep=spec.megastep,
-                                 rounds_per_dispatch=spec.rounds_per_dispatch)
-    hist = sim.run(spec.rounds)
-    records = [RoundRecord(round=m.round, sim_time=m.sim_time,
-                           comm_time=m.comm_time, idle_time=m.idle_time,
-                           bytes_sent=m.bytes_sent,
-                           updates_applied=m.updates_applied,
-                           accept_rate=m.accept_rate, accuracy=m.accuracy,
-                           loss=m.loss)
-               for m in hist]
-    return ExperimentResult(engine="sim", strategy=spec.strategy_name(),
-                            rounds=spec.rounds, seed=spec.seed,
-                            records=records, cfg=cfg, params=sim.params,
-                            eval_arrays=world.eval_arrays,
-                            num_clients=world.num_clients,
-                            param_bytes=sim.param_bytes)
+    return ae.FederatedSimulation(cfg, world.client_arrays,
+                                  world.eval_arrays,
+                                  spec.resolve_strategy(), world.profiles,
+                                  comm=spec.resolve_comm(), seed=spec.seed,
+                                  eval_fn=spec.eval_fn,
+                                  eval_every=spec.eval_every,
+                                  megastep=spec.megastep,
+                                  rounds_per_dispatch=spec.rounds_per_dispatch,
+                                  schedule=spec.resolve_schedule())
+
+
+def record_from_metrics(m: "ae.RoundMetrics") -> RoundRecord:
+    return RoundRecord(round=m.round, sim_time=m.sim_time,
+                       comm_time=m.comm_time, idle_time=m.idle_time,
+                       bytes_sent=m.bytes_sent,
+                       updates_applied=m.updates_applied,
+                       accept_rate=m.accept_rate, accuracy=m.accuracy,
+                       loss=m.loss)
 
 
 # ---------------------------------------------------------------------------
@@ -150,12 +160,30 @@ def _build_eval(cfg, eval_fn):
     return model_api.build_default_eval(cfg)
 
 
-def _run_spmd(spec: ExperimentSpec) -> ExperimentResult:
-    comm = spec.resolve_comm()
-    st = spec.resolve_strategy()
-    world = spec.build_world()
-    C = world.num_clients
+def _account_comm_round(profiles, comm, steps, n_samples, mask,
+                        participating, payload_bytes, acc) -> None:
+    """One sync round's analytic CommModel arithmetic, shared by the
+    per-seed driver and the vmapped seed batch: each participating
+    client pays train time + transfer (full payload if its update
+    passed the mask, else the 1-bit skip beacon); the round advances at
+    the barrier (slowest arrival), idle time is the spread below it.
+    Accumulates into ``acc``'s sim/comm/idle time entries."""
+    arrivals = []
+    for cid, prof in enumerate(profiles):
+        if not participating[cid]:
+            continue        # unselected / dropped: silent this round
+        t_train = (steps * comm.t_launch
+                   + n_samples * comm.t_sample) / max(prof.speed, 1e-3)
+        payload = payload_bytes if mask[cid] > 0 else comm.beacon_bytes
+        transfer = prof.net_latency + payload / comm.bandwidth
+        acc["comm_time"] += transfer
+        arrivals.append(t_train + transfer)
+    barrier = max(arrivals) if arrivals else 0.0
+    acc["sim_time"] += barrier
+    acc["idle_time"] += sum(barrier - a for a in arrivals)
 
+
+def _spmd_loaders(spec: ExperimentSpec, st, world) -> List[ArrayLoader]:
     loaders = [ArrayLoader(arrays, st.batch_size, seed=spec.seed + cid)
                for cid, arrays in enumerate(world.client_arrays)]
     sizes = {l.batch_size for l in loaders}
@@ -164,73 +192,277 @@ def _run_spmd(spec: ExperimentSpec) -> ExperimentResult:
             f"engine='spmd' needs one cohort batch shape, but client shard "
             f"sizes clamp batch_size to {sorted(sizes)}; lower "
             f"strategy batch_size or raise data.n_samples")
-    bs = loaders[0].batch_size
-    # union of the simulator's local steps as ONE cohort gradient step;
-    # min across clients keeps the (C, steps*bs, ...) batch rectangular
-    steps = min(ae.local_step_count(l.n, bs, st) for l in loaders)
-    n_samples = steps * bs
+    return loaders
 
-    # analytic per-client round time (train + transfer) — the control
-    # plane's timeliness signal for reliability-scored selection
-    hint = [(steps * comm.t_launch + n_samples * comm.t_sample)
-            / max(p.speed, 1e-3) + p.net_latency
-            for p in world.profiles]
-    cfg, st, _opt, state, step = build_spmd_components(
-        spec, world=world, round_time_hint=hint)
 
-    evaluate = _build_eval(cfg, spec.eval_fn)
-    eval_dev = jax.tree.map(jnp.asarray, world.eval_arrays)
-    param_bytes = sum(x.size * x.dtype.itemsize
-                      for x in jax.tree.leaves(state.params))
-    payload_bytes = (compression.arena_wire_bytes(
-        arena_mod.ParamArena(state.params)) if st.quantize_updates
-        else param_bytes)
+class SpmdDriver:
+    """Stepping driver for the compiled spmd engine.
 
-    sim_time = comm_time = idle_time = bytes_sent = 0.0
-    records: List[RoundRecord] = []
-    for rnd in range(spec.rounds):
+    Owns the compiled step, the per-client host loaders (the only
+    stochastic state outside ``FLState``), and the analytic CommModel
+    accounting. ``run_rounds(n)`` advances n rounds and returns their
+    ``RoundRecord``s; ``state_dict``/``load_state_dict`` serialize
+    (FLState, loader RNG positions, accumulators) so a restored driver
+    continues bit-identically to an uninterrupted one.
+    """
+
+    def __init__(self, spec: ExperimentSpec):
+        self.spec = spec
+        self.comm = spec.resolve_comm()
+        st = spec.resolve_strategy()
+        self.world = spec.build_world()
+        self.num_clients = self.world.num_clients
+        self.loaders = _spmd_loaders(spec, st, self.world)
+        bs = self.loaders[0].batch_size
+        # union of the simulator's local steps as ONE cohort gradient
+        # step; min across clients keeps the (C, steps*bs, ...) batch
+        # rectangular
+        self.steps = min(ae.local_step_count(l.n, bs, st)
+                         for l in self.loaders)
+        self.n_samples = self.steps * bs
+
+        # analytic per-client round time (train + transfer) — the control
+        # plane's timeliness signal for reliability-scored selection
+        hint = [(self.steps * self.comm.t_launch
+                 + self.n_samples * self.comm.t_sample)
+                / max(p.speed, 1e-3) + p.net_latency
+                for p in self.world.profiles]
+        self.cfg, self.st, self._opt, self.state, self.step = \
+            build_spmd_components(spec, world=self.world,
+                                  round_time_hint=hint)
+        self.evaluate = _build_eval(self.cfg, spec.eval_fn)
+        self.eval_dev = jax.tree.map(jnp.asarray, self.world.eval_arrays)
+        self.param_bytes = sum(x.size * x.dtype.itemsize
+                               for x in jax.tree.leaves(self.state.params))
+        self.payload_bytes = (compression.arena_wire_bytes(
+            arena_mod.ParamArena(self.state.params))
+            if self.st.quantize_updates else self.param_bytes)
+        self.round_idx = 0
+        self.acc = {"sim_time": 0.0, "comm_time": 0.0, "idle_time": 0.0,
+                    "bytes_sent": 0.0}
+        self._last_accuracy = float("nan")
+
+    # ------------------------------------------------------------------
+    @property
+    def params(self):
+        return self.state.params
+
+    @property
+    def eval_arrays(self):
+        return self.world.eval_arrays
+
+    def _draw_batch(self):
         per_client = []
-        for loader in loaders:
-            draws = [loader.sample() for _ in range(steps)]
+        for loader in self.loaders:
+            draws = [loader.sample() for _ in range(self.steps)]
             per_client.append({k: np.concatenate([d[k] for d in draws])
                                for k in draws[0]})
-        batch = {k: jnp.asarray(np.stack([c[k] for c in per_client]))
-                 for k in per_client[0]}
-        state, m = step(state, batch)
+        return {k: jnp.asarray(np.stack([c[k] for c in per_client]))
+                for k in per_client[0]}
 
+    def _account(self, rnd: int, m, evaluate: bool) -> RoundRecord:
         mask = np.asarray(m["mask"])
         selected = np.asarray(m["selected"])
         delivered = np.asarray(m["delivered"])
-        participating = (selected * delivered) > 0
-        arrivals = []
-        for cid in range(C):
-            if not participating[cid]:
-                continue        # unselected / dropped: silent this round
-            prof = world.profiles[cid]
-            t_train = (steps * comm.t_launch
-                       + n_samples * comm.t_sample) / max(prof.speed, 1e-3)
-            payload = payload_bytes if mask[cid] > 0 else comm.beacon_bytes
-            transfer = prof.net_latency + payload / comm.bandwidth
-            comm_time += transfer
-            arrivals.append(t_train + transfer)
-        barrier = max(arrivals) if arrivals else 0.0
-        sim_time += barrier
-        idle_time += sum(barrier - a for a in arrivals)
-        bytes_sent += float(m["bytes_sent"])
+        acc = self.acc
+        _account_comm_round(self.world.profiles, self.comm, self.steps,
+                            self.n_samples, mask,
+                            participating=(selected * delivered) > 0,
+                            payload_bytes=self.payload_bytes, acc=acc)
+        acc["bytes_sent"] += float(m["bytes_sent"])
 
-        if rnd % spec.eval_every == 0 or rnd == spec.rounds - 1:
-            acc = float(evaluate(state.params, eval_dev))
-        else:
-            acc = records[-1].accuracy if records else float("nan")
-        records.append(RoundRecord(
-            round=rnd, sim_time=sim_time, comm_time=comm_time,
-            idle_time=idle_time, bytes_sent=bytes_sent,
-            updates_applied=int(mask.sum() > 0),
-            accept_rate=float(m["accept_rate"]), accuracy=acc,
-            loss=float(m["loss"])))
+        if evaluate:
+            self._last_accuracy = float(
+                self.evaluate(self.state.params, self.eval_dev))
+        return RoundRecord(
+            round=rnd, sim_time=acc["sim_time"],
+            comm_time=acc["comm_time"], idle_time=acc["idle_time"],
+            bytes_sent=acc["bytes_sent"],
+            # the COUNT of client updates applied this round (the sim
+            # engine's semantics), not a 0/1 any-update flag
+            updates_applied=int(mask.sum()),
+            accept_rate=float(m["accept_rate"]),
+            accuracy=self._last_accuracy, loss=float(m["loss"]))
 
-    return ExperimentResult(engine="spmd", strategy=spec.strategy_name(),
-                            rounds=spec.rounds, seed=spec.seed,
-                            records=records, cfg=cfg, params=state.params,
-                            eval_arrays=world.eval_arrays, num_clients=C,
-                            param_bytes=param_bytes)
+    def run_rounds(self, n: int, eval_final: bool = True
+                   ) -> List[RoundRecord]:
+        """Advance n rounds. Evaluation follows the ABSOLUTE eval_every
+        cadence; ``eval_final`` additionally evaluates the batch's last
+        round (so a completed run's ``result.final`` is measured) —
+        session streaming passes False on intermediate chunks to keep
+        the accuracy series identical to a single-batch run."""
+        records = []
+        first, last = self.round_idx, self.round_idx + n - 1
+        for rnd in range(first, last + 1):
+            batch = self._draw_batch()
+            self.state, m = self.step(self.state, batch)
+            evaluate = ((rnd % self.spec.eval_every == 0)
+                        or (eval_final and rnd == last))
+            records.append(self._account(rnd, m, evaluate))
+        self.round_idx = last + 1
+        return records
+
+    # ------------------------------------------------------------------
+    # serialization (ExperimentSession.checkpoint/restore)
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        return {
+            "round_idx": self.round_idx,
+            "fl_state": jax.device_get(self.state),
+            "loaders": [l.rng.bit_generator.state for l in self.loaders],
+            "acc": dict(self.acc),
+            "last_accuracy": self._last_accuracy,
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        self.round_idx = state["round_idx"]
+        self.state = jax.tree.map(jnp.asarray, state["fl_state"])
+        if len(state["loaders"]) != len(self.loaders):
+            raise ValueError(
+                f"checkpoint has {len(state['loaders'])} client loaders, "
+                f"this world has {len(self.loaders)}")
+        for l, s in zip(self.loaders, state["loaders"]):
+            g = np.random.default_rng(0)
+            g.bit_generator.state = s
+            l.rng = g
+        self.acc = dict(state["acc"])
+        self._last_accuracy = state["last_accuracy"]
+
+    def result(self, records, wall_time: float = 0.0) -> ExperimentResult:
+        return ExperimentResult(
+            engine="spmd", strategy=self.spec.strategy_name(),
+            rounds=len(records), seed=self.spec.seed, records=list(records),
+            cfg=self.cfg, params=self.state.params,
+            eval_arrays=self.world.eval_arrays,
+            num_clients=self.num_clients, param_bytes=self.param_bytes,
+            wall_time=wall_time)
+
+
+# ---------------------------------------------------------------------------
+# vectorized multi-seed execution (run_sweep's spmd fast path)
+# ---------------------------------------------------------------------------
+
+def seed_vectorizable(spec: ExperimentSpec, st=None) -> bool:
+    """True when same-shape multi-seed replicas of ``spec`` can advance
+    as ONE vmapped seed-stacked state: the compiled spmd path with an
+    INACTIVE control plane (selection / dropout / quantization /
+    per-client LR draw from a per-run PRNG whose seed is compile-time
+    static, so replicas would share draws — those sweeps run serially)."""
+    if spec.engine != "spmd":
+        return False
+    st = st or spec.resolve_strategy()
+    if st.grad_norm_selection or (st.selection and st.select_fraction < 1.0):
+        return False
+    if st.quantize_updates or st.per_client_lr:
+        return False
+    if spec.world.dropout_p > 0:
+        return False
+    return True
+
+
+def run_spmd_seed_batch(spec: ExperimentSpec,
+                        seeds: Sequence[int]) -> List[ExperimentResult]:
+    """Execute ``spec`` at every seed as ONE vmapped seed-stacked run.
+
+    Per-seed worlds (data, partition, eval split) are built on the host
+    and stacked along a leading seed axis; parameters and optimizer
+    state initialize per seed and advance through
+    ``fl_step.build_seed_batched_step`` — one compiled dispatch per
+    round for ALL seeds. Requires :func:`seed_vectorizable` specs and
+    identical cohort shapes across seeds. Each returned result's
+    ``wall_time`` is the whole batch's wall clock (the dispatches are
+    shared, so per-seed attribution is meaningless).
+    """
+    t0 = time.time()
+    st = spec.resolve_strategy()
+    if not seed_vectorizable(spec, st):
+        raise ValueError(
+            "spec is not seed-vectorizable (needs engine='spmd' with an "
+            "inactive control plane); run the seeds serially instead")
+    specs = [dataclasses.replace(spec, seed=int(s)).validate()
+             for s in seeds]
+    cfg = spec.resolve_model()
+    comm = spec.resolve_comm()
+    opt = _resolve_optimizer(spec, st)
+    worlds = [s.build_world() for s in specs]
+    C = worlds[0].num_clients
+    loaders = [_spmd_loaders(s, st, w) for s, w in zip(specs, worlds)]
+    steps_per_seed = {min(ae.local_step_count(l.n, ls[0].batch_size, st)
+                          for l in ls) for ls in loaders}
+    if len(steps_per_seed) > 1:
+        raise ValueError(
+            f"seeds produce different cohort shapes (local steps "
+            f"{sorted(steps_per_seed)}); the vmapped sweep needs one — "
+            f"raise data.n_samples or run serially")
+    steps = steps_per_seed.pop()
+    bs = loaders[0][0].batch_size
+    n_samples = steps * bs
+
+    state = fl_step.init_seed_batched_state(
+        [s.seed for s in specs], cfg, opt)
+    vstep = fl_step.build_seed_batched_step(
+        cfg, opt, theta=st.theta, lr_schedule=spec.lr_schedule,
+        beacon_bytes=comm.beacon_bytes)
+    evaluate = _build_eval(cfg, spec.eval_fn)
+    veval = jax.jit(jax.vmap(evaluate))
+    eval_dev = jax.tree.map(
+        lambda *xs: jnp.asarray(np.stack(xs)),
+        *[w.eval_arrays for w in worlds])
+    param_bytes = sum(x.size * x.dtype.itemsize
+                      for x in jax.tree.leaves(state.params)) // len(specs)
+
+    S = len(specs)
+    acc = [{"sim_time": 0.0, "comm_time": 0.0, "idle_time": 0.0,
+            "bytes_sent": 0.0} for _ in range(S)]
+    last_acc = [float("nan")] * S
+    records: List[List[RoundRecord]] = [[] for _ in range(S)]
+    for rnd in range(spec.rounds):
+        stacked = []
+        for ls in loaders:
+            per_client = []
+            for loader in ls:
+                draws = [loader.sample() for _ in range(steps)]
+                per_client.append({k: np.concatenate([d[k] for d in draws])
+                                   for k in draws[0]})
+            stacked.append({k: np.stack([c[k] for c in per_client])
+                            for k in per_client[0]})
+        batch = {k: jnp.asarray(np.stack([s[k] for s in stacked]))
+                 for k in stacked[0]}
+        state, m = vstep(state, batch)
+
+        mask = np.asarray(m["mask"])                       # (S, C)
+        bytes_sent = np.asarray(m["bytes_sent"])
+        accept = np.asarray(m["accept_rate"])
+        loss = np.asarray(m["loss"])
+        do_eval = (rnd % spec.eval_every == 0) or (rnd == spec.rounds - 1)
+        if do_eval:
+            accs = np.asarray(veval(state.params, eval_dev))
+        for i in range(S):
+            a = acc[i]
+            # seed_vectorizable guarantees no selection/dropout (all
+            # clients participate) and no quantization (full payload)
+            _account_comm_round(worlds[i].profiles, comm, steps,
+                                n_samples, mask[i],
+                                participating=np.ones(C, bool),
+                                payload_bytes=param_bytes, acc=a)
+            a["bytes_sent"] += float(bytes_sent[i])
+            if do_eval:
+                last_acc[i] = float(accs[i])
+            records[i].append(RoundRecord(
+                round=rnd, sim_time=a["sim_time"],
+                comm_time=a["comm_time"], idle_time=a["idle_time"],
+                bytes_sent=a["bytes_sent"],
+                updates_applied=int(mask[i].sum()),
+                accept_rate=float(accept[i]), accuracy=last_acc[i],
+                loss=float(loss[i])))
+
+    elapsed = time.time() - t0
+    out = []
+    for i, s in enumerate(specs):
+        params_i = jax.tree.map(lambda x: x[i], state.params)
+        out.append(ExperimentResult(
+            engine="spmd", strategy=s.strategy_name(), rounds=s.rounds,
+            seed=s.seed, records=records[i], cfg=cfg, params=params_i,
+            eval_arrays=worlds[i].eval_arrays, num_clients=C,
+            param_bytes=param_bytes, wall_time=elapsed))
+    return out

@@ -1,0 +1,296 @@
+"""ExperimentSession — the resumable, streaming experiment driver.
+
+``run_experiment`` is a one-shot call; the paper's statistical apparatus
+(repeated runs, Mann-Whitney validation) and any long-lived deployment
+need a *driver*: open an experiment, advance it round by round, observe
+records as they happen, checkpoint mid-flight, resume bit-identically.
+
+    session = ExperimentSession.open(spec)
+    for record in session.stream(spec.rounds):     # RoundRecord stream
+        print(record.round, record.accuracy)
+    session.checkpoint("run.ckpt")                 # full device state
+    ...
+    session = ExperimentSession.restore("run.ckpt")
+    session.run(10)                                # continues exactly
+
+Resume bit-exactness: a checkpoint serializes the COMPLETE state of the
+underlying engine — parameters (arena matrix or pytree), optimizer
+state, the device ``ControlState``, every numpy Generator position
+(engine, loaders, selector) and the scanned path's PRNG key / absolute
+round counter — so a restored session's subsequent records and final
+parameters are bit-identical to an uninterrupted run on BOTH engines,
+including ``rounds_per_dispatch > 1`` (tests/test_session.py).
+Checkpoints do NOT store training data; worlds rebuild deterministically
+from the spec's seed. Restoring onto a spec whose trajectory-relevant
+fields differ raises :class:`CheckpointMismatchError` naming them. One
+nuance under ``eval_every > 1``: each ``run()`` call evaluates its own
+final round (so ``result.final`` is always measured), which means a
+checkpoint boundary adds one accuracy SAMPLE at the boundary round —
+the trajectory and every other record field are unaffected, and with
+the default ``eval_every=1`` the record series is bit-identical too.
+
+Callbacks: ``session.add_callback(fn)`` registers ``fn(record)``; return
+``False`` (or call ``session.request_stop()``) to stop the run early.
+``run(n)`` computes its rounds as one engine batch (fastest; callbacks
+observe records afterwards, early-stop takes effect at batch end), while
+``stream(n)`` computes dispatch-sized chunks and reacts between chunks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import time
+from typing import Any, Callable, Dict, Iterator, List, Optional
+
+from repro.api import runner as runner_mod
+from repro.api.result import ExperimentResult, RoundRecord
+from repro.api.spec import ExperimentSpec
+
+CHECKPOINT_FORMAT = 1
+
+# spec fields that identify a trajectory — a checkpoint refuses to
+# restore onto a spec that changes any of these (see _spec_fingerprint).
+# `rounds` is NOT one of them: the round budget is a session argument,
+# and extending a restored run is exactly what sessions are for.
+_FINGERPRINT_DOC = ("engine", "model", "strategy", "schedule", "data",
+                    "world", "comm", "seed", "eval_every", "megastep",
+                    "rounds_per_dispatch", "optimizer", "lr_schedule",
+                    "eval_fn")
+
+
+class CheckpointMismatchError(ValueError):
+    """Restoring a checkpoint onto a spec describing a different
+    trajectory. ``.mismatches`` maps field -> (checkpoint, requested)."""
+
+    def __init__(self, mismatches: Dict[str, tuple]):
+        self.mismatches = dict(mismatches)
+        detail = "; ".join(f"{k}: checkpoint={a!r} vs spec={b!r}"
+                           for k, (a, b) in self.mismatches.items())
+        super().__init__(
+            "checkpoint does not match the spec it is being restored "
+            f"onto — differing fields: {detail}")
+
+
+def _spec_fingerprint(spec: ExperimentSpec) -> Dict[str, Any]:
+    """Plain-data identity of the trajectory a spec describes.
+
+    Callables (data factory, eval_fn, lr_schedule, optimizer objects)
+    cannot be content-compared across processes — they contribute a
+    stable presence/type marker only, never a repr with a memory
+    address (which would spuriously mismatch a faithfully
+    reconstructed spec in a new process)."""
+    def _marker(obj):
+        if obj is None or isinstance(obj, str):
+            return obj
+        return type(obj).__name__        # stable across processes
+
+    cfg = spec.resolve_model()
+    data = dataclasses.asdict(spec.data)
+    data["factory"] = spec.data.factory is not None   # presence only
+    return {
+        "engine": spec.engine,
+        "model": getattr(cfg, "name", str(spec.model)),
+        "strategy": dataclasses.asdict(spec.resolve_strategy()),
+        "schedule": dataclasses.asdict(spec.resolve_schedule()),
+        "data": data,
+        "world": dataclasses.asdict(spec.world),
+        "comm": dataclasses.asdict(spec.resolve_comm()),
+        "seed": spec.seed,
+        "eval_every": spec.eval_every,
+        "megastep": spec.megastep,
+        "rounds_per_dispatch": spec.rounds_per_dispatch,
+        "optimizer": _marker(spec.optimizer),
+        "lr_schedule": spec.lr_schedule is not None,
+        "eval_fn": spec.eval_fn is not None,
+    }
+
+
+class _SimDriver:
+    """Session driver for engine='sim' — wraps FederatedSimulation."""
+
+    engine = "sim"
+
+    def __init__(self, spec: ExperimentSpec):
+        self.spec = spec
+        self.sim = runner_mod.build_simulation(spec)
+
+    def run_rounds(self, n: int, eval_final: bool = True
+                   ) -> List[RoundRecord]:
+        prev = len(self.sim.history)
+        self.sim.run(n, eval_final=eval_final)
+        return [runner_mod.record_from_metrics(m)
+                for m in self.sim.history[prev:]]
+
+    def state_dict(self) -> dict:
+        return self.sim.state_dict()
+
+    def load_state_dict(self, state: dict) -> None:
+        self.sim.load_state_dict(state)
+
+    def result(self, records, wall_time: float = 0.0) -> ExperimentResult:
+        return ExperimentResult(
+            engine="sim", strategy=self.spec.strategy_name(),
+            rounds=len(records), seed=self.spec.seed,
+            records=list(records), cfg=self.sim.cfg,
+            params=self.sim.params, eval_arrays=self.sim.eval_arrays,
+            num_clients=self.sim.num_clients,
+            param_bytes=self.sim.param_bytes, wall_time=wall_time)
+
+
+class ExperimentSession:
+    """Open with :meth:`open` or :meth:`restore` — not the constructor."""
+
+    def __init__(self, spec: ExperimentSpec, driver):
+        self.spec = spec
+        self._driver = driver
+        self.records: List[RoundRecord] = []
+        self.callbacks: List[Callable[[RoundRecord], Any]] = []
+        self._stopped = False
+        self._wall = 0.0
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+    @classmethod
+    def open(cls, spec: ExperimentSpec) -> "ExperimentSession":
+        spec.validate()
+        t0 = time.time()
+        if spec.engine == "sim":
+            driver = _SimDriver(spec)
+        else:
+            driver = runner_mod.SpmdDriver(spec)
+        session = cls(spec, driver)
+        session._wall += time.time() - t0
+        return session
+
+    @classmethod
+    def restore(cls, path: str,
+                spec: Optional[ExperimentSpec] = None) -> "ExperimentSession":
+        """Rebuild a session from :meth:`checkpoint` output and continue
+        bit-identically. ``spec`` is only needed when the checkpointed
+        spec contained unpicklable callables (eval_fn / data factory /
+        lr_schedule); when given, it must describe the SAME trajectory."""
+        with open(path, "rb") as f:
+            payload = pickle.load(f)
+        if payload.get("format") != CHECKPOINT_FORMAT:
+            raise ValueError(
+                f"unknown session checkpoint format "
+                f"{payload.get('format')!r} (expected {CHECKPOINT_FORMAT})")
+        if spec is None:
+            spec = payload["spec"]
+            if spec is None:
+                raise ValueError(
+                    "this checkpoint does not embed its spec (it held "
+                    "unpicklable callables); pass the original spec: "
+                    "ExperimentSession.restore(path, spec=...)")
+        theirs, ours = payload["fingerprint"], _spec_fingerprint(spec)
+        mismatches = {k: (theirs.get(k), ours.get(k))
+                      for k in sorted(set(theirs) | set(ours))
+                      if theirs.get(k) != ours.get(k)}
+        if mismatches:
+            raise CheckpointMismatchError(mismatches)
+        session = cls.open(spec)
+        session._driver.load_state_dict(payload["driver"])
+        session.records = [RoundRecord(**r) for r in payload["records"]]
+        session._wall = payload["wall_time"]
+        return session
+
+    # ------------------------------------------------------------------
+    # driving
+    # ------------------------------------------------------------------
+    @property
+    def rounds_done(self) -> int:
+        return len(self.records)
+
+    @property
+    def stopped(self) -> bool:
+        return self._stopped
+
+    def request_stop(self) -> None:
+        """Ask the session to stop after the current round/chunk —
+        callable from inside a callback (the early-stop hook)."""
+        self._stopped = True
+
+    def add_callback(self, fn: Callable[[RoundRecord], Any]) -> None:
+        """Register ``fn(record)``, fired for every new RoundRecord in
+        order; returning ``False`` requests an early stop."""
+        self.callbacks.append(fn)
+
+    def _fire(self, records: List[RoundRecord]) -> None:
+        for rec in records:
+            for cb in self.callbacks:
+                if cb(rec) is False:
+                    self._stopped = True
+
+    def _remaining(self, rounds: Optional[int]) -> int:
+        if rounds is not None:
+            return max(0, int(rounds))
+        return max(0, self.spec.rounds - self.rounds_done)
+
+    def run(self, rounds: Optional[int] = None) -> List[RoundRecord]:
+        """Advance ``rounds`` more rounds (default: the spec's remaining
+        budget) as ONE engine batch and return their records."""
+        n = self._remaining(rounds)
+        if n == 0 or self._stopped:
+            return []
+        t0 = time.time()
+        new = self._driver.run_rounds(n)
+        self._wall += time.time() - t0
+        self.records.extend(new)
+        self._fire(new)
+        return new
+
+    def stream(self, rounds: Optional[int] = None) -> Iterator[RoundRecord]:
+        """Yield records as they are produced. Chunk size follows the
+        engine's dispatch granularity (``rounds_per_dispatch`` on the
+        scanned sim path, else 1), so streaming keeps the compiled-path
+        amortization; early stop takes effect between chunks. The
+        ``eval_every`` cadence is absolute, and only the FINAL round of
+        the whole stream gets the extra end-of-run evaluation — the
+        accuracy series is identical to a single ``run(n)`` batch."""
+        n = self._remaining(rounds)
+        chunk = self.spec.rounds_per_dispatch or 1
+        done = 0
+        while done < n and not self._stopped:
+            step = min(chunk, n - done)
+            t0 = time.time()
+            new = self._driver.run_rounds(step,
+                                          eval_final=(done + step >= n))
+            self._wall += time.time() - t0
+            self.records.extend(new)
+            done += len(new)
+            self._fire(new)
+            yield from new
+
+    def __iter__(self) -> Iterator[RoundRecord]:
+        return self.stream()
+
+    def result(self) -> ExperimentResult:
+        """The normalized ExperimentResult over everything run so far."""
+        return self._driver.result(self.records, wall_time=self._wall)
+
+    # ------------------------------------------------------------------
+    # persistence
+    # ------------------------------------------------------------------
+    def checkpoint(self, path: str) -> str:
+        """Serialize the full session state to ``path`` (atomic write).
+        The training data is NOT stored — worlds rebuild from the seed."""
+        try:
+            pickle.dumps(self.spec)
+            spec_blob = self.spec
+        except Exception:
+            spec_blob = None          # unpicklable callables in the spec
+        payload = {
+            "format": CHECKPOINT_FORMAT,
+            "fingerprint": _spec_fingerprint(self.spec),
+            "spec": spec_blob,
+            "records": [dataclasses.asdict(r) for r in self.records],
+            "wall_time": self._wall,
+            "driver": self._driver.state_dict(),
+        }
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            pickle.dump(payload, f)
+        os.replace(tmp, path)   # a crash never corrupts the checkpoint
+        return path

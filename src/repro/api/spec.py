@@ -16,16 +16,41 @@ so benchmark tables are spec sweeps instead of hand-wired setups.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Union
+from typing import Any, Callable, Dict, List, Optional, Union
 
 from repro.api import strategies as strategies_mod
 from repro.api import world as world_mod
 from repro.core.async_engine import CommModel, StrategyConfig
+from repro.core.schedule import ScheduleSpec, resolve_schedule
 
 ENGINES = ("sim", "spmd")
 DATASETS = ("auto", "unsw", "road", "lm")
 PARTITIONS = ("dirichlet", "iid")
 PROFILES = ("heterogeneous", "uniform")
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecIssue:
+    """One validation violation: the field, its offending value, a hint."""
+    field: str
+    value: Any
+    hint: str
+
+    def __str__(self):
+        return f"{self.field}={self.value!r}: {self.hint}"
+
+
+class SpecError(ValueError):
+    """Raised by ``ExperimentSpec.validate()`` with EVERY violation at
+    once (``.issues``), not just the first — a sweep over hundreds of
+    generated specs should surface all problems in one round trip."""
+
+    def __init__(self, issues: List[SpecIssue]):
+        self.issues = list(issues)
+        detail = "; ".join(str(i) for i in self.issues)
+        super().__init__(
+            f"invalid ExperimentSpec — {len(self.issues)} problem"
+            f"{'s' if len(self.issues) != 1 else ''}: {detail}")
 
 
 @dataclasses.dataclass
@@ -58,6 +83,12 @@ class ExperimentSpec:
     comm: Optional[CommModel] = None           # None -> CommModel() defaults
     strategy: Union[str, StrategyConfig, Any] = "ours"
     strategy_kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    schedule: Union[str, ScheduleSpec, None] = None
+    # the server-coordination axis (core/schedule.py): None derives the
+    # schedule from the strategy's legacy ``mode`` field (the shim that
+    # keeps every preset working); "sync" | "async" | "semi-async" or a
+    # full ScheduleSpec overrides it — e.g. fedavg under an async quorum,
+    # or "ours" with a bounded-staleness semi-async server
     engine: str = "sim"
     rounds: int = 5
     seed: int = 0
@@ -104,6 +135,9 @@ class ExperimentSpec:
         return strategies_mod.resolve_strategy(self.strategy,
                                                **self.strategy_kwargs)
 
+    def resolve_schedule(self) -> ScheduleSpec:
+        return resolve_schedule(self.schedule, self.resolve_strategy())
+
     def resolve_comm(self) -> CommModel:
         return self.comm or CommModel()
 
@@ -119,54 +153,87 @@ class ExperimentSpec:
     # validation
     # ------------------------------------------------------------------
     def validate(self) -> "ExperimentSpec":
+        """Raise :class:`SpecError` listing EVERY violation (field name,
+        offending value, hint) — not just the first one found."""
+        issues: List[SpecIssue] = []
         if self.engine not in ENGINES:
-            raise ValueError(f"unknown engine {self.engine!r}; "
-                             f"expected one of {ENGINES}")
+            issues.append(SpecIssue(
+                "engine", self.engine,
+                f"unknown engine; expected one of {ENGINES}"))
         if self.rounds < 1:
-            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+            issues.append(SpecIssue("rounds", self.rounds,
+                                    "rounds must be >= 1"))
         if self.eval_every < 1:
-            raise ValueError(
-                f"eval_every must be >= 1, got {self.eval_every}")
+            issues.append(SpecIssue("eval_every", self.eval_every,
+                                    "eval_every must be >= 1"))
         if self.rounds_per_dispatch is not None:
             if self.rounds_per_dispatch < 1:
-                raise ValueError("rounds_per_dispatch must be >= 1, got "
-                                 f"{self.rounds_per_dispatch}")
+                issues.append(SpecIssue(
+                    "rounds_per_dispatch", self.rounds_per_dispatch,
+                    "rounds_per_dispatch must be >= 1"))
             if self.engine != "sim":
-                raise ValueError("rounds_per_dispatch is a sim-engine "
-                                 "knob (the spmd step is already one "
-                                 "compiled round)")
+                issues.append(SpecIssue(
+                    "rounds_per_dispatch", self.rounds_per_dispatch,
+                    "rounds_per_dispatch is a sim-engine knob (the spmd "
+                    "step is already one compiled round)"))
             if not self.megastep:
-                raise ValueError("rounds_per_dispatch requires "
-                                 "megastep=True")
+                issues.append(SpecIssue(
+                    "megastep", self.megastep,
+                    "rounds_per_dispatch requires megastep=True (the "
+                    "scanned path runs on the parameter arena)"))
         if self.world.num_clients < 1:
-            raise ValueError("world.num_clients must be >= 1, got "
-                             f"{self.world.num_clients}")
+            issues.append(SpecIssue("world.num_clients",
+                                    self.world.num_clients,
+                                    "world.num_clients must be >= 1"))
         if self.data.dataset not in DATASETS and self.data.factory is None:
-            raise ValueError(f"unknown dataset {self.data.dataset!r}; "
-                             f"expected one of {DATASETS} or a factory")
+            issues.append(SpecIssue(
+                "data.dataset", self.data.dataset,
+                f"unknown dataset; expected one of {DATASETS} or a "
+                "factory"))
         if self.data.partition not in PARTITIONS:
-            raise ValueError(f"unknown partition {self.data.partition!r}; "
-                             f"expected one of {PARTITIONS}")
+            issues.append(SpecIssue(
+                "data.partition", self.data.partition,
+                f"unknown partition; expected one of {PARTITIONS}"))
         if self.world.profile not in PROFILES:
-            raise ValueError(f"unknown profile {self.world.profile!r}; "
-                             f"expected one of {PROFILES}")
-        strategy = self.resolve_strategy()     # raises on unknown names
-        if self.engine == "spmd":
-            self._validate_spmd(strategy)
+            issues.append(SpecIssue(
+                "world.profile", self.world.profile,
+                f"unknown profile; expected one of {PROFILES}"))
+        strategy = schedule = None
+        try:
+            strategy = self.resolve_strategy()
+        except (ValueError, TypeError) as e:
+            issues.append(SpecIssue("strategy", self.strategy_name(),
+                                    str(e)))
+        if strategy is not None:
+            try:
+                schedule = self.resolve_schedule()
+            except TypeError as e:
+                issues.append(SpecIssue("schedule", self.schedule, str(e)))
+        if schedule is not None:
+            issues.extend(SpecIssue(f, v, h) for f, v, h
+                          in schedule.issues())
+            if self.engine == "spmd":
+                issues.extend(self._validate_spmd(strategy, schedule))
+        if issues:
+            raise SpecError(issues)
         return self
 
-    def _validate_spmd(self, st: StrategyConfig) -> None:
+    def _validate_spmd(self, st: StrategyConfig,
+                       schedule: ScheduleSpec) -> List[SpecIssue]:
         """The compiled path is a synchronous cohort step. Selection,
         dropout, per-client LR scaling and quantized updates are all
         handled by the device-resident control plane as cohort MASKING
         (core/control.py routed through core/fl_step.py), so only knobs
         that genuinely need the event-driven simulator are rejected."""
-        unsupported = []
-        if st.mode != "sync":
-            unsupported.append("mode='async' (use engine='sim')")
+        issues = []
+        if not schedule.is_sync:
+            issues.append(SpecIssue(
+                "schedule.kind", schedule.kind,
+                "engine='spmd' does not support asynchronous schedules — "
+                "the quorum clock is event-driven (use engine='sim')"))
         if st.dynamic_batch:
-            unsupported.append("dynamic_batch (per-round shape changes "
-                               "would retrace the compiled step)")
-        if unsupported:
-            raise ValueError("engine='spmd' does not support: "
-                             + "; ".join(unsupported))
+            issues.append(SpecIssue(
+                "strategy.dynamic_batch", st.dynamic_batch,
+                "engine='spmd' does not support dynamic_batch (per-round "
+                "shape changes would retrace the compiled step)"))
+        return issues

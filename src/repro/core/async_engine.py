@@ -57,6 +57,7 @@ from repro.core import control as control_mod
 from repro.core import megastep as megastep_mod
 from repro.core.batchsize import BatchSizeController, ClientMetrics
 from repro.core.checkpoint_policy import fit_weibull, optimal_interval
+from repro.core.schedule import ScheduleSpec
 from repro.core.selection import AdaptiveClientSelector
 from repro.data.loader import ArrayLoader
 from repro.kernels import arena as arena_mod
@@ -88,6 +89,10 @@ class ClientProfile:
 
 @dataclasses.dataclass
 class StrategyConfig:
+    # mode / quorum / alpha0 are the LEGACY spelling of the server
+    # schedule axis — engines consume a ScheduleSpec (core/schedule.py),
+    # derived from these fields via ScheduleSpec.from_strategy when no
+    # explicit schedule is given (see the CHANGES.md migration table)
     mode: str = "async"                   # async | sync
     theta: Optional[float] = 0.65         # None -> no filtering
     selection: bool = True
@@ -155,9 +160,13 @@ class FederatedSimulation:
                  comm: CommModel = None, seed: int = 0,
                  eval_fn: Callable = None, eval_every: int = 1,
                  megastep: bool = True,
-                 rounds_per_dispatch: Optional[int] = None):
+                 rounds_per_dispatch: Optional[int] = None,
+                 schedule: Optional[ScheduleSpec] = None):
         self.cfg = cfg
         self.strategy = strategy
+        # schedule=None -> legacy StrategyConfig.mode shim
+        self.schedule = (schedule if schedule is not None
+                         else ScheduleSpec.from_strategy(strategy)).validate()
         self.comm = comm or CommModel()
         self.profiles = profiles
         self.rng = np.random.default_rng(seed)
@@ -237,7 +246,7 @@ class FederatedSimulation:
         # τ < #arrivals <= N, so one table lookup replaces the per-arrival
         # host formula — identical values on every execution path
         self._alpha_table = aggregation.staleness_weights_np(
-            np.arange(self.num_clients + 1), strategy.alpha0)
+            np.arange(self.num_clients + 1), self.schedule.alpha0)
 
         # --- device-resident control plane (scanned path, built lazily) ---
         self._scan_fns: Dict[int, Callable] = {}   # R -> jitted scan
@@ -253,6 +262,10 @@ class FederatedSimulation:
         self.idle_time = 0.0
         self.bytes_sent = 0.0
         self.server_step = 0
+        self.round_idx = 0            # absolute rounds completed — run()
+                                      # calls CONTINUE numbering, so a
+                                      # checkpointed/resumed session is
+                                      # label-identical to an unbroken one
         self.history: List[RoundMetrics] = []
 
     # ------------------------------------------------------------------
@@ -371,6 +384,7 @@ class FederatedSimulation:
         return list(range(self.num_clients))
 
     def run_round(self, rnd: int, evaluate: bool = True) -> RoundMetrics:
+        self.round_idx += 1
         if self.megastep:
             return self._run_round_mega(rnd, evaluate)
         return self._run_round_loop(rnd, evaluate)
@@ -514,30 +528,36 @@ class FederatedSimulation:
 
         arrivals.sort(key=lambda a: a[0])
         updates_applied = 0
+        sched = self.schedule
         weights: Dict[int, float] = {}    # cid -> aggregation weight
 
-        if st.mode == "sync":
+        if sched.is_sync:
             senders = [cid for (_, cid, sent) in arrivals if sent]
             if senders:
                 w = 1.0 / len(senders)
                 weights = {cid: w for cid in senders}
                 self.server_step += 1
-                updates_applied = 1
+                updates_applied = len(senders)
             if arrivals:
                 barrier = arrivals[-1][0]
                 self.idle_time += sum(barrier - a for (a, *_r) in arrivals)
                 self.sim_time = barrier
         else:
             # async: quorum clock + FedBuff-style buffered mean of
-            # staleness-discounted deltas (see the loop path's notes)
+            # staleness-discounted deltas (see the loop path's notes);
+            # semi-async DROPS arrivals staler than the bound instead of
+            # discounting them (bounded-staleness aggregation)
             if arrivals:
-                q_idx = max(0, math.ceil(st.quorum * len(arrivals)) - 1)
+                q_idx = max(0, math.ceil(sched.quorum * len(arrivals)) - 1)
                 self.sim_time = arrivals[q_idx][0]
                 buf = []
                 for i, (_arrive, cid, sent) in enumerate(arrivals):
                     if not sent:
                         continue
                     tau = max(0, i - q_idx)
+                    if (sched.max_staleness is not None
+                            and tau > sched.max_staleness):
+                        continue          # too stale: transmitted, dropped
                     alpha = float(self._alpha_table[tau])
                     buf.append((cid, alpha))
                     self.server_step += 1
@@ -620,15 +640,16 @@ class FederatedSimulation:
 
         arrivals.sort(key=lambda a: a[0])
         updates_applied = 0
+        sched = self.schedule
 
-        if st.mode == "sync":
+        if sched.is_sync:
             sent_params = [p for (_, _, p, sent, _) in arrivals if sent]
             if sent_params:
                 stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *sent_params)
                 self.params = aggregation.fedavg(stacked)
                 self.dispatches += 1
                 self.server_step += 1
-                updates_applied = 1
+                updates_applied = len(sent_params)
             if arrivals:
                 barrier = arrivals[-1][0]
                 self.idle_time += sum(barrier - a for (a, *_r) in arrivals)
@@ -639,21 +660,26 @@ class FederatedSimulation:
             # Aggregation is FedBuff-style BUFFERED (mean of staleness-
             # discounted deltas): sequential convex mixing over-weights the
             # last arrival and destabilizes the θ-filter (EXPERIMENTS §Sim).
+            # semi-async drops arrivals staler than the bound entirely.
             if arrivals:
-                q_idx = max(0, math.ceil(st.quorum * len(arrivals)) - 1)
+                q_idx = max(0, math.ceil(sched.quorum * len(arrivals)) - 1)
                 self.sim_time = arrivals[q_idx][0]
                 buf = []
                 for i, (arrive, cid, new_params, sent, _t) in enumerate(arrivals):
                     if not sent:
                         continue
                     tau = max(0, i - q_idx)
+                    if (sched.max_staleness is not None
+                            and tau > sched.max_staleness):
+                        continue          # too stale: transmitted, dropped
                     alpha = float(self._alpha_table[tau])
                     buf.append((alpha, new_params))
                     self.server_step += 1
                     updates_applied += 1
-                self.params = aggregation.buffered_async_update(
-                    self.params, buf)
-                self.dispatches += 1
+                if buf:
+                    self.params = aggregation.buffered_async_update(
+                        self.params, buf)
+                    self.dispatches += 1
 
         # reference direction = sign of the global movement this round
         if updates_applied and st.theta is not None:
@@ -721,16 +747,19 @@ class FederatedSimulation:
                 rounds_per_dispatch=R, param_bytes=self.param_bytes,
                 wire_bytes=self._wire_bytes,
                 recovery_time=self.recovery_time,
-                restart_time=self.restart_time)
+                restart_time=self.restart_time,
+                schedule=self.schedule)
         return self._scan_fns[R]
 
-    def _run_scanned(self, num_rounds: int) -> List[RoundMetrics]:
+    def _run_scanned(self, num_rounds: int,
+                     eval_final: bool = True) -> List[RoundMetrics]:
         data, sizes, speed, latency, dropout_p = self._scan_setup()
         R = self.rounds_per_dispatch
         ref_mat = self._ref_mat
         if ref_mat is None:      # no reference yet; gated by ref_valid
             ref_mat = jnp.where(jnp.asarray(self._arena.valid_mask()),
                                 jnp.int8(0), jnp.int8(-2))
+        start = self.round_idx   # absolute round labels across run() calls
         done = 0
         while done < num_rounds:
             Rg = min(R, num_rounds - done)
@@ -747,14 +776,14 @@ class FederatedSimulation:
             self._params_tree = None          # pytree view now stale
             ms = {k: np.asarray(v) for k, v in ms.items()}
 
-            last = done + Rg - 1
+            last = start + done + Rg - 1
             # evaluate once per dispatch (at its last round) when the
             # eval cadence lands inside the dispatch or the run ends —
-            # cadence over THIS run()'s relative round index, exactly
-            # like the host reference paths
+            # cadence over the ABSOLUTE round index, so a resumed
+            # session keeps the uninterrupted run's eval rounds
             do_eval = (any(r % self.eval_every == 0
-                           for r in range(done, done + Rg))
-                       or last == num_rounds - 1)
+                           for r in range(start + done, start + done + Rg))
+                       or (eval_final and last == start + num_rounds - 1))
             if do_eval:
                 acc_val = float(self._eval(self.params, self._eval_dev))
                 self.dispatches += 1
@@ -765,7 +794,7 @@ class FederatedSimulation:
             for j in range(Rg):
                 is_last = j == Rg - 1
                 self.history.append(RoundMetrics(
-                    round=done + j,
+                    round=start + done + j,
                     sim_time=float(ms["sim_time"][j]),
                     comm_time=float(ms["comm_time"][j]),
                     idle_time=float(ms["idle_time"][j]),
@@ -788,18 +817,135 @@ class FederatedSimulation:
             self.idle_time = float(ms["idle_time"][-1])
             self.bytes_sent = float(ms["bytes_sent"][-1])
             self._scan_round0 += Rg
+            self.round_idx += Rg
             done += Rg
         self._ref_mat = (ref_mat if bool(self._scan_ref_valid) else None)
         return self.history
 
-    def run(self, num_rounds: int) -> List[RoundMetrics]:
+    # ------------------------------------------------------------------
+    # full-state serialization (ExperimentSession.checkpoint/restore)
+    # ------------------------------------------------------------------
+    def state_dict(self) -> dict:
+        """Everything a bit-identical resume needs, as host (picklable)
+        values: parameters (arena matrix or pytree), the θ reference,
+        every numpy Generator position (engine, loaders, selector), the
+        control statistics of BOTH control planes (host EMAs and the
+        scanned ``ControlState``), error-feedback buffers, fault/ckpt
+        bookkeeping, accounting accumulators and round history. The
+        training data itself is NOT stored — it is rebuilt
+        deterministically from the spec's seed."""
+        dev = jax.device_get
+        return {
+            "round_idx": self.round_idx,
+            "rng": self.rng.bit_generator.state,
+            "loaders": [{"batch_size": l.batch_size,
+                         "rng": l.rng.bit_generator.state}
+                        for l in self.loaders],
+            "selector": {
+                "rng": self.selector.rng.bit_generator.state,
+                "records": {cid: dataclasses.asdict(r)
+                            for cid, r in self.selector.records.items()}},
+            "batch_assignment": dict(self.batch_ctrl.assignment),
+            "client_lr_scale": np.array(self.client_lr_scale),
+            "grad_norms": np.array(self.grad_norms),
+            "failure_log": list(self.failure_log),
+            "checkpoints": dict(self.checkpoints),
+            "ckpt_interval": float(self.ckpt_interval),
+            "ef_state": {cid: dev(t) for cid, t in self._ef_state.items()},
+            "ef_arena": (None if self._ef_arena is None
+                         else dev(self._ef_arena)),
+            "wire_bytes": self._wire_bytes,
+            "params_mat": (dev(self._params_mat) if self.megastep
+                           else None),
+            "params_tree": (None if self.megastep
+                            else dev(self._params_tree)),
+            "ref_mat": (None if self._ref_mat is None
+                        else dev(self._ref_mat)),
+            "ref_sign": (None if self.ref_sign is None
+                         else dev(self.ref_sign)),
+            "scan": {
+                "ctl": (None if self._scan_ctl is None
+                        else dev(self._scan_ctl)),
+                "ref_valid": dev(self._scan_ref_valid),
+                "round0": int(self._scan_round0),
+                "key": dev(self._scan_key)},
+            "sim_time": self.sim_time, "comm_time": self.comm_time,
+            "idle_time": self.idle_time, "bytes_sent": self.bytes_sent,
+            "server_step": self.server_step,
+            "dispatches": self.dispatches,
+            "history": [dataclasses.asdict(m) for m in self.history],
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        """Restore :meth:`state_dict` output into a freshly-constructed
+        simulation (same cfg/strategy/world/seed spec)."""
+        def _gen(saved):
+            g = np.random.default_rng(0)
+            g.bit_generator.state = saved
+            return g
+
+        self.round_idx = state["round_idx"]
+        self.rng = _gen(state["rng"])
+        if len(state["loaders"]) != len(self.loaders):
+            raise ValueError(
+                f"checkpoint has {len(state['loaders'])} client loaders, "
+                f"this world has {len(self.loaders)}")
+        for l, s in zip(self.loaders, state["loaders"]):
+            l.batch_size = s["batch_size"]
+            l.rng = _gen(s["rng"])
+        self.selector.rng = _gen(state["selector"]["rng"])
+        from repro.core.selection import ClientRecord
+        self.selector.records = {
+            cid: ClientRecord(**r)
+            for cid, r in state["selector"]["records"].items()}
+        self.batch_ctrl.assignment = dict(state["batch_assignment"])
+        self.client_lr_scale = np.array(state["client_lr_scale"])
+        self.grad_norms = np.array(state["grad_norms"])
+        self.failure_log = list(state["failure_log"])
+        self.checkpoints = dict(state["checkpoints"])
+        self.ckpt_interval = state["ckpt_interval"]
+        self._ef_state = {cid: jax.tree.map(jnp.asarray, t)
+                          for cid, t in state["ef_state"].items()}
+        self._ef_arena = (None if state["ef_arena"] is None
+                          else jnp.asarray(state["ef_arena"]))
+        self._wire_bytes = state["wire_bytes"]
+        if self.megastep:
+            self._params_mat = jnp.asarray(state["params_mat"])
+            self._params_tree = None
+        else:
+            self._params_tree = jax.tree.map(jnp.asarray,
+                                             state["params_tree"])
+        self._ref_mat = (None if state["ref_mat"] is None
+                         else jnp.asarray(state["ref_mat"]))
+        self.ref_sign = (None if state["ref_sign"] is None
+                         else jax.tree.map(jnp.asarray, state["ref_sign"]))
+        scan = state["scan"]
+        if scan["ctl"] is not None:
+            self._scan_setup()        # rebuild the device world and shapes
+            self._scan_ctl = jax.tree.map(jnp.asarray, scan["ctl"])
+        self._scan_ref_valid = jnp.asarray(scan["ref_valid"])
+        self._scan_round0 = scan["round0"]
+        self._scan_key = jnp.asarray(scan["key"])
+        self.sim_time = state["sim_time"]
+        self.comm_time = state["comm_time"]
+        self.idle_time = state["idle_time"]
+        self.bytes_sent = state["bytes_sent"]
+        self.server_step = state["server_step"]
+        self.dispatches = state["dispatches"]
+        self.history = [RoundMetrics(**m) for m in state["history"]]
+
+    def run(self, num_rounds: int,
+            eval_final: bool = True) -> List[RoundMetrics]:
         if self.rounds_per_dispatch:
-            return self._run_scanned(num_rounds)
-        for r in range(num_rounds):
+            return self._run_scanned(num_rounds, eval_final=eval_final)
+        first = self.round_idx          # absolute: resumes keep numbering
+        for r in range(first, first + num_rounds):
             # eval_every > 1 skips the eval dispatch on off-rounds (the
             # previous accuracy is carried forward); the final round is
-            # always evaluated so ``result.final`` stays meaningful
-            evaluate = (r % self.eval_every == 0) or (r == num_rounds - 1)
+            # evaluated too (unless eval_final=False — session streaming
+            # chunks) so ``result.final`` stays meaningful
+            evaluate = ((r % self.eval_every == 0)
+                        or (eval_final and r == first + num_rounds - 1))
             self.run_round(r, evaluate=evaluate)
         return self.history
 

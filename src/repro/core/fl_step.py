@@ -286,6 +286,34 @@ def build_fl_train_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
     return jax.jit(step)
 
 
+def init_seed_batched_state(seeds, cfg, optimizer=None) -> FLState:
+    """Stack per-seed ``init_state`` results along a leading seed axis.
+
+    The returned ``FLState`` has every leaf shaped ``(S, ...)`` and is
+    consumed by :func:`build_seed_batched_step` — S independent
+    replicas, one compiled program (``run_sweep``'s vectorized
+    multi-seed path). Control planes are not supported: their PRNG seed
+    is compile-time static, so replicas would share draws.
+    """
+    states = [init_state(jax.random.PRNGKey(int(s)), cfg, optimizer)
+              for s in seeds]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+
+
+def build_seed_batched_step(cfg, optimizer=None,
+                            theta: Optional[float] = 0.65,
+                            lr_schedule=None, beacon_bytes: float = 0.125):
+    """jit(vmap) of the raw FL step over a leading seed axis.
+
+    ``step(batched_state, batch)`` with batch leaves ``(S, C, B, ...)``
+    advances S independent FL runs in ONE dispatch; metrics come back
+    seed-stacked (every leaf gains a leading S dim).
+    """
+    step = make_raw_step(cfg, optimizer, theta, lr_schedule,
+                         beacon_bytes=beacon_bytes)
+    return jax.jit(jax.vmap(step))
+
+
 def _update_bytes(params) -> jnp.ndarray:
     n = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
     return jnp.float32(n)

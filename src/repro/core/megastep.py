@@ -138,7 +138,7 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
                          rounds_per_dispatch: int, param_bytes: float,
                          wire_bytes=None, epsilon: float = 0.1,
                          ema: float = 0.8, recovery_time: float = 0.2,
-                         restart_time: float = 1.0):
+                         restart_time: float = 1.0, schedule=None):
     """Compile ``rounds_per_dispatch`` full FL rounds — {select → train
     cohort → θ-filter → staleness-weighted arena aggregate → control
     update} — into one jitted ``lax.scan``.
@@ -172,6 +172,8 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
     ``acc`` is the (sim_time, comm_time, idle_time, bytes_sent) f32
     accumulator vector.
     """
+    from repro.core.schedule import ScheduleSpec
+    sched = schedule if schedule is not None else ScheduleSpec.from_strategy(st)
     N, K, R = int(num_clients), int(select_k), int(rounds_per_dispatch)
     theta_on = st.theta is not None
     payload = float(wire_bytes if (st.quantize_updates and wire_bytes)
@@ -257,28 +259,34 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
         bytes_s = bytes_s + jnp.sum(jnp.where(active, msg_bytes, 0.0))
 
         # --- aggregation weights: sync barrier / async quorum -----------
-        if st.mode == "sync":
+        if sched.is_sync:
             barrier = jnp.max(jnp.where(active, arrive, -jnp.inf))
             sim_t = jnp.where(n_active > 0, sim_t + barrier, sim_t)
             idle_t = idle_t + jnp.sum(
                 jnp.where(active, barrier - arrive, 0.0))
             w = sent.astype(jnp.float32) \
                 / jnp.maximum(n_sent.astype(jnp.float32), 1.0)
-            updates_applied = (n_sent > 0).astype(jnp.int32)
+            updates_applied = n_sent
         else:
             t_act = jnp.where(active, arrive, jnp.inf)
             q_idx = jnp.maximum(
-                0, jnp.ceil(st.quorum * n_active.astype(jnp.float32))
+                0, jnp.ceil(sched.quorum * n_active.astype(jnp.float32))
                 .astype(jnp.int32) - 1)
             sim_t = jnp.where(n_active > 0,
                               sim_t + jnp.sort(t_act)[q_idx], sim_t)
             rank = jnp.argsort(jnp.argsort(t_act, stable=True),
                                stable=True)
             tau = jnp.maximum(0, rank - q_idx)
-            alphas = aggregation.staleness_weight(tau, st.alpha0)
-            w = jnp.where(sent, alphas, 0.0) \
-                / jnp.maximum(n_sent.astype(jnp.float32), 1.0)
-            updates_applied = n_sent
+            alphas = aggregation.staleness_weight(tau, sched.alpha0)
+            applied_mask = sent
+            if sched.max_staleness is not None:
+                # semi-async: bounded staleness — arrivals beyond the
+                # cutoff transmitted (bytes already charged) but dropped
+                applied_mask = sent & (tau <= sched.max_staleness)
+            n_applied = applied_mask.sum().astype(jnp.int32)
+            w = jnp.where(applied_mask, alphas, 0.0) \
+                / jnp.maximum(n_applied.astype(jnp.float32), 1.0)
+            updates_applied = n_applied
 
         # --- one weighted arena sum applies the round ------------------
         new_mat = params_mat + arena_ops.weighted_sum(deltas, w)

@@ -6,9 +6,9 @@ import numpy as np
 import pytest
 
 from repro.api import (ROUND_FIELDS, CommModel, DataSpec, ExperimentSpec,
-                       STRATEGY_REGISTRY, StrategyConfig, WorldSpec,
-                       get_strategy, list_strategies, register_strategy,
-                       run_experiment)
+                       STRATEGY_REGISTRY, ScheduleSpec, SpecError,
+                       StrategyConfig, WorldSpec, get_strategy,
+                       list_strategies, register_strategy, run_experiment)
 
 SMALL = dict(model="anomaly-mlp-smoke",
              data=DataSpec(n_samples=1200, eval_samples=300),
@@ -90,6 +90,103 @@ def test_lm_needs_iid_partition():
         spec.build_world()
 
 
+def test_spec_error_collects_every_violation():
+    """validate() must report ALL problems at once — field, offending
+    value and a hint each — not fail on the first bad field."""
+    with pytest.raises(SpecError) as ei:
+        _spec(engine="ray", rounds=0, eval_every=0,
+              data=DataSpec(partition="zipf"),
+              world=WorldSpec(num_clients=0, profile="exotic"),
+              strategy="no-such-strategy").validate()
+    err = ei.value
+    fields = {i.field for i in err.issues}
+    assert fields == {"engine", "rounds", "eval_every", "data.partition",
+                      "world.num_clients", "world.profile", "strategy"}
+    by_field = {i.field: i for i in err.issues}
+    assert by_field["engine"].value == "ray"
+    assert "sim" in by_field["engine"].hint
+    # every issue is in the message, with its hint
+    for issue in err.issues:
+        assert issue.field in str(err)
+    # SpecError stays a ValueError: legacy except-clauses keep working
+    assert isinstance(err, ValueError)
+
+
+def test_spec_error_includes_engine_knob_hints():
+    with pytest.raises(SpecError) as ei:
+        _spec(engine="spmd", strategy="ours",
+              rounds_per_dispatch=4).validate()
+    hints = " ".join(i.hint for i in ei.value.issues)
+    assert "sim-engine" in hints          # rounds_per_dispatch hint
+    assert "engine='sim'" in hints        # async-schedule hint
+
+
+# ---------------------------------------------------------------------------
+# ScheduleSpec: the explicit server-coordination axis
+# ---------------------------------------------------------------------------
+
+def test_schedule_defaults_to_strategy_mode_shim():
+    """Legacy StrategyConfig.mode keeps working: the derived schedule
+    mirrors mode/quorum/alpha0, and explicit ScheduleSpec equals it."""
+    spec = _spec(strategy="ours")
+    sched = spec.resolve_schedule()
+    st = spec.resolve_strategy()
+    assert sched.kind == st.mode == "async"
+    assert sched.quorum == st.quorum and sched.alpha0 == st.alpha0
+    explicit = _spec(strategy="ours",
+                     schedule=ScheduleSpec.from_strategy(st))
+    a = run_experiment(dataclasses.replace(spec, rounds=2))
+    b = run_experiment(dataclasses.replace(explicit, rounds=2))
+    assert a.records == b.records
+
+
+def test_schedule_string_overrides_strategy_mode():
+    # fedavg (a sync preset) under an async quorum — previously
+    # unspellable without editing the preset
+    spec = _spec(strategy="fedavg", schedule="async",
+                 world=WorldSpec(num_clients=4, profile="heterogeneous"))
+    assert spec.resolve_schedule().kind == "async"
+    res = run_experiment(spec)
+    assert res.final.idle_time == 0.0          # no sync barrier
+
+
+def test_semi_async_requires_max_staleness():
+    with pytest.raises(SpecError, match="max_staleness"):
+        _spec(schedule=ScheduleSpec(kind="semi-async")).validate()
+    with pytest.raises(SpecError, match="max_staleness"):
+        _spec(schedule=ScheduleSpec(kind="sync",
+                                    max_staleness=2)).validate()
+    _spec(schedule=ScheduleSpec(kind="semi-async",
+                                max_staleness=2)).validate()
+
+
+def test_semi_async_drops_stale_updates():
+    """Bounded staleness: a zero-staleness budget applies only the
+    arrivals at/before the quorum rank, strictly fewer than plain async
+    under straggler spread; trajectories stay deterministic."""
+    world = WorldSpec(num_clients=6, profile="heterogeneous")
+    base = _spec(strategy="ours",
+                 strategy_kwargs=dict(batch_size=32, dynamic_batch=False),
+                 world=world, rounds=3)
+    plain = run_experiment(base)
+    semi = run_experiment(dataclasses.replace(
+        base, schedule=ScheduleSpec(kind="semi-async", quorum=0.5,
+                                    max_staleness=0)))
+    assert sum(r.updates_applied for r in semi.records) \
+        < sum(r.updates_applied for r in plain.records)
+    # round 0 (identical pre-aggregation state): dropped updates were
+    # still transmitted, so the byte accounting matches exactly
+    assert semi.records[0].bytes_sent == plain.records[0].bytes_sent
+    assert semi.records[0].updates_applied \
+        < plain.records[0].updates_applied
+
+
+def test_spmd_rejects_async_schedule_axis():
+    with pytest.raises(SpecError, match="schedule.kind"):
+        _spec(engine="spmd", strategy=_degenerate_strategy(),
+              schedule="async").validate()
+
+
 # ---------------------------------------------------------------------------
 # registry round-trip
 # ---------------------------------------------------------------------------
@@ -138,7 +235,9 @@ def test_sim_spmd_parity_degenerate():
         assert a.comm_time == b.comm_time
         assert a.idle_time == b.idle_time
         assert a.bytes_sent == b.bytes_sent
-        assert a.updates_applied == b.updates_applied
+        # updates_applied is the COUNT of applied client updates on both
+        # engines (the spmd runner used to record a 0/1 any-update flag)
+        assert a.updates_applied == b.updates_applied == sim.num_clients
         assert a.accept_rate == b.accept_rate
         # fp32 trajectories coincide up to reduction order
         np.testing.assert_allclose(a.accuracy, b.accuracy, atol=1e-6)

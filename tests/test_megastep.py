@@ -75,6 +75,16 @@ def test_megastep_matches_loop_quantized():
                                    quantize_updates=True)))
 
 
+def test_megastep_matches_loop_semi_async():
+    """Bounded-staleness (semi-async) aggregation: both host paths drop
+    the same too-stale arrivals and stay trajectory-equivalent."""
+    from repro.api import ScheduleSpec
+    _assert_equivalent(*_pair(
+        get_strategy("ours").build(batch_size=32, dynamic_batch=False),
+        schedule=ScheduleSpec(kind="semi-async", quorum=0.5,
+                              max_staleness=1)))
+
+
 def test_megastep_dispatch_count_is_o1():
     """The whole point: compiled dispatches per round must not scale with
     the client count (the loop path pays >= 1 per client per round).
@@ -168,6 +178,16 @@ def test_scanned_grouping_invariant_quantized():
     _assert_scan_equivalent(*_scan_pair(
         get_strategy("ours").build(batch_size=32, dynamic_batch=False,
                                    quantize_updates=True)))
+
+
+def test_scanned_grouping_invariant_semi_async():
+    """The device control plane honors the semi-async staleness cutoff
+    identically at any dispatch grouping."""
+    from repro.api import ScheduleSpec
+    _assert_scan_equivalent(*_scan_pair(
+        get_strategy("ours").build(batch_size=32, dynamic_batch=False),
+        schedule=ScheduleSpec(kind="semi-async", quorum=0.5,
+                              max_staleness=1)))
 
 
 def test_scanned_partial_final_dispatch():

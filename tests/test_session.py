@@ -1,0 +1,206 @@
+"""ExperimentSession: streaming, callbacks, and bit-exact
+checkpoint/resume on both engines (including the scanned
+rounds_per_dispatch path and quantized error-feedback state)."""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (CheckpointMismatchError, DataSpec, ExperimentSession,
+                       ExperimentSpec, StrategyConfig, WorldSpec,
+                       get_strategy, run_experiment)
+
+SMALL = dict(model="anomaly-mlp-smoke",
+             data=DataSpec(n_samples=1500, eval_samples=300),
+             rounds=6, seed=0)
+
+
+def _sim_spec(**kw):
+    """Full-feature sim spec: selection + dropout + θ + dynamic batch +
+    checkpointing — every piece of engine state a resume must restore."""
+    base = dict(SMALL,
+                world=WorldSpec(num_clients=5, profile="heterogeneous",
+                                dropout_p=0.25),
+                strategy=get_strategy("ours").build(batch_size=32,
+                                                    select_fraction=0.8))
+    return ExperimentSpec(**{**base, **kw})
+
+
+def _spmd_spec(**kw):
+    st = StrategyConfig(mode="sync", theta=0.65, selection=True,
+                        select_fraction=0.5, dynamic_batch=False,
+                        checkpointing=False, batch_size=32, lr=3e-2,
+                        max_samples_per_round=64)
+    base = dict(SMALL, engine="spmd", strategy=st,
+                world=WorldSpec(num_clients=4, profile="heterogeneous",
+                                dropout_p=0.2))
+    return ExperimentSpec(**{**base, **kw})
+
+
+def _assert_records_equal(a, b):
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        fx, fy = dataclasses.astuple(x), dataclasses.astuple(y)
+        # exact equality, NaN-tolerant (pre-first-eval scanned rounds)
+        np.testing.assert_equal(fx, fy)
+
+
+def _assert_params_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def _resume_case(spec, k, tmp_path, total=None):
+    total = total or spec.rounds
+    full = ExperimentSession.open(spec)
+    full.run(total)
+
+    part = ExperimentSession.open(spec)
+    part.run(k)
+    path = str(tmp_path / "session.ckpt")
+    part.checkpoint(path)
+
+    resumed = ExperimentSession.restore(path)
+    assert resumed.rounds_done == k
+    resumed.run(total - k)
+    _assert_records_equal(full.records, resumed.records)
+    _assert_params_equal(full.result().params, resumed.result().params)
+
+
+# ---------------------------------------------------------------------------
+# bit-exact resume: engine x execution path
+# ---------------------------------------------------------------------------
+
+def test_resume_bit_exact_sim_megastep(tmp_path):
+    _resume_case(_sim_spec(), k=3, tmp_path=tmp_path)
+
+
+def test_resume_bit_exact_sim_loop(tmp_path):
+    _resume_case(_sim_spec(megastep=False), k=3, tmp_path=tmp_path)
+
+
+def test_resume_bit_exact_sim_scanned_r4(tmp_path):
+    # checkpoint at a dispatch boundary: records (incl. the amortized
+    # per-dispatch accuracy samples) match the uninterrupted run exactly
+    _resume_case(_sim_spec(rounds_per_dispatch=4, rounds=8), k=4,
+                 tmp_path=tmp_path)
+
+
+def test_resume_bit_exact_sim_quantized(tmp_path):
+    # int8 + error-feedback arenas are part of the serialized state
+    _resume_case(ExperimentSpec(
+        **SMALL, world=WorldSpec(num_clients=4, profile="uniform"),
+        strategy=get_strategy("ours").build(batch_size=32,
+                                            dynamic_batch=False,
+                                            quantize_updates=True)),
+        k=3, tmp_path=tmp_path)
+
+
+def test_resume_bit_exact_spmd(tmp_path):
+    _resume_case(_spmd_spec(), k=3, tmp_path=tmp_path)
+
+
+def test_resume_scanned_midchunk_trajectory(tmp_path):
+    """Checkpointing INSIDE a dispatch group (k not a multiple of R):
+    the trajectory — every scan-computed field and the final params —
+    is still bit-identical (per-round keys fold from the absolute round
+    index); only the accuracy SAMPLING points may shift, because eval
+    is amortized once per dispatch."""
+    spec = _sim_spec(rounds_per_dispatch=4, rounds=8)
+    full = ExperimentSession.open(spec)
+    full.run(8)
+    part = ExperimentSession.open(spec)
+    part.run(3)                                   # mid-dispatch
+    path = str(tmp_path / "mid.ckpt")
+    part.checkpoint(path)
+    resumed = ExperimentSession.restore(path)
+    resumed.run(5)
+    for a, b in zip(full.records, resumed.records):
+        for f in ("round", "sim_time", "comm_time", "idle_time",
+                  "bytes_sent", "updates_applied", "accept_rate", "loss"):
+            assert getattr(a, f) == getattr(b, f), f
+    _assert_params_equal(full.result().params, resumed.result().params)
+
+
+# ---------------------------------------------------------------------------
+# restore validation
+# ---------------------------------------------------------------------------
+
+def test_restore_mismatched_spec_raises(tmp_path):
+    spec = _sim_spec(rounds=2)
+    s = ExperimentSession.open(spec)
+    s.run(2)
+    path = str(tmp_path / "m.ckpt")
+    s.checkpoint(path)
+    with pytest.raises(CheckpointMismatchError, match="seed"):
+        ExperimentSession.restore(path, dataclasses.replace(spec, seed=7))
+    with pytest.raises(CheckpointMismatchError, match="engine"):
+        ExperimentSession.restore(
+            path, _spmd_spec(rounds=2, seed=0))
+    # a different round BUDGET is not a mismatch (sessions extend runs)
+    resumed = ExperimentSession.restore(
+        path, dataclasses.replace(spec, rounds=5))
+    resumed.run(3)
+    assert resumed.rounds_done == 5
+
+
+def test_checkpoint_is_atomic_and_restorable_without_spec(tmp_path):
+    spec = _sim_spec(rounds=2)
+    s = ExperimentSession.open(spec)
+    s.run(1)
+    path = str(tmp_path / "a.ckpt")
+    s.checkpoint(path)
+    assert os.path.exists(path) and not os.path.exists(path + ".tmp")
+    # plain specs are embedded: restore() needs no spec argument
+    assert ExperimentSession.restore(path).rounds_done == 1
+
+
+# ---------------------------------------------------------------------------
+# streaming + callbacks
+# ---------------------------------------------------------------------------
+
+def test_stream_yields_rounds_in_order():
+    s = ExperimentSession.open(_sim_spec(rounds=4))
+    rounds = [r.round for r in s.stream(4)]
+    assert rounds == [0, 1, 2, 3]
+    assert s.rounds_done == 4
+
+
+def test_iter_runs_spec_budget():
+    s = ExperimentSession.open(_sim_spec(rounds=3))
+    assert len(list(s)) == 3
+
+
+def test_callback_early_stop():
+    s = ExperimentSession.open(_sim_spec(rounds=6))
+    seen = []
+
+    def stop_after_two(rec):
+        seen.append(rec.round)
+        if rec.round >= 1:
+            return False                      # early-stop hook
+
+    s.add_callback(stop_after_two)
+    list(s.stream(6))
+    assert s.stopped
+    assert s.rounds_done == 2 and seen == [0, 1]
+    assert s.run(4) == []                     # stopped sessions stay put
+
+
+def test_run_then_more_rounds_continues_numbering():
+    s = ExperimentSession.open(_sim_spec(rounds=4))
+    s.run(2)
+    more = s.run(2)
+    assert [r.round for r in more] == [2, 3]
+    assert [r.round for r in s.records] == [0, 1, 2, 3]
+
+
+def test_run_experiment_is_session_wrapper():
+    spec = _sim_spec(rounds=3)
+    res = run_experiment(spec)
+    sess = ExperimentSession.open(spec)
+    sess.run(3)
+    _assert_records_equal(res.records, sess.result().records)
+    _assert_params_equal(res.params, sess.result().params)

@@ -1,0 +1,154 @@
+"""run_sweep + api.stats: declarative cross-products, the vectorized
+(vmapped seed-stacked) spmd multi-seed path, and the Mann-Whitney U
+implementation (pinned to scipy's asymptotic method)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.api import (DataSpec, ExperimentSpec, StrategyConfig, WorldSpec,
+                       mann_whitney_u, run_experiment, run_spmd_seed_batch,
+                       run_sweep, seed_vectorizable)
+from repro.api import stats
+
+SMALL = dict(model="anomaly-mlp-smoke",
+             data=DataSpec(n_samples=1500, eval_samples=300),
+             rounds=3, seed=0)
+
+
+def _degenerate(bs=32, **kw):
+    return StrategyConfig(mode="sync", theta=None, selection=False,
+                          dynamic_batch=False, checkpointing=False,
+                          batch_size=bs, lr=3e-2, local_epochs=1,
+                          max_samples_per_round=2 * bs, **kw)
+
+
+def _spmd_spec(**kw):
+    base = dict(SMALL, engine="spmd", strategy=_degenerate(),
+                world=WorldSpec(num_clients=4, profile="heterogeneous"))
+    return ExperimentSpec(**{**base, **kw})
+
+
+# ---------------------------------------------------------------------------
+# stats: Mann-Whitney U pinned to scipy, summaries
+# ---------------------------------------------------------------------------
+
+def test_mann_whitney_matches_scipy_asymptotic():
+    scipy_stats = pytest.importorskip("scipy.stats")
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        n1, n2 = rng.integers(3, 16, 2)
+        a = rng.normal(0.0, 1.0, n1).round(1)      # rounding forces ties
+        b = rng.normal(0.3, 1.0, n2).round(1)
+        for alt in ("two-sided", "greater", "less"):
+            ours = mann_whitney_u(a, b, alternative=alt)
+            ref = scipy_stats.mannwhitneyu(a, b, alternative=alt,
+                                           method="asymptotic")
+            np.testing.assert_allclose(ours.u, ref.statistic, atol=1e-12)
+            np.testing.assert_allclose(ours.p_value, ref.pvalue,
+                                       atol=1e-12)
+
+
+def test_mann_whitney_direction_and_validation():
+    lo, hi = [0.1, 0.2, 0.3, 0.25, 0.15], [0.8, 0.9, 0.85, 0.95, 0.7]
+    assert mann_whitney_u(hi, lo, "greater").significant(0.05)
+    assert not mann_whitney_u(lo, hi, "greater").significant(0.05)
+    with pytest.raises(ValueError, match="alternative"):
+        mann_whitney_u(lo, hi, "sideways")
+    with pytest.raises(ValueError, match="samples"):
+        mann_whitney_u([], hi)
+
+
+def test_rankdata_average_ties():
+    np.testing.assert_allclose(stats.rankdata([10.0, 20.0, 20.0, 30.0]),
+                               [1.0, 2.5, 2.5, 4.0])
+
+
+def test_median_iqr():
+    med, q1, q3 = stats.median_iqr(range(1, 10))
+    assert med == 5.0 and q1 == 3.0 and q3 == 7.0
+
+
+# ---------------------------------------------------------------------------
+# vectorized multi-seed spmd execution
+# ---------------------------------------------------------------------------
+
+def test_seed_batch_matches_serial_runs():
+    """ONE vmapped seed-stacked state must reproduce the serial per-seed
+    loop: exact event accounting, fp trajectories to vmap tolerance."""
+    spec = _spmd_spec()
+    seeds = [0, 1, 2]
+    batch = run_spmd_seed_batch(spec, seeds)
+    for s, res in zip(seeds, batch):
+        serial = run_experiment(dataclasses.replace(spec, seed=s))
+        assert res.seed == s and len(res.records) == len(serial.records)
+        for a, b in zip(res.records, serial.records):
+            assert a.round == b.round
+            assert a.updates_applied == b.updates_applied
+            np.testing.assert_allclose(a.sim_time, b.sim_time, rtol=1e-9)
+            np.testing.assert_allclose(a.bytes_sent, b.bytes_sent,
+                                       rtol=1e-9)
+            np.testing.assert_allclose(a.accuracy, b.accuracy, atol=1e-5)
+            np.testing.assert_allclose(a.loss, b.loss, rtol=1e-4)
+
+
+def test_seed_batch_rejects_active_control_plane():
+    spec = _spmd_spec(strategy=dataclasses.replace(
+        _degenerate(), selection=True, select_fraction=0.5))
+    assert not seed_vectorizable(spec)
+    with pytest.raises(ValueError, match="vectoriz"):
+        run_spmd_seed_batch(spec, [0, 1])
+
+
+# ---------------------------------------------------------------------------
+# run_sweep
+# ---------------------------------------------------------------------------
+
+def test_sweep_vectorizes_spmd_seed_groups():
+    sweep = run_sweep(_spmd_spec(), axes={"seed": range(3)})
+    assert sweep.vectorized_groups == 1
+    assert all(p.vectorized for p in sweep.points)
+    assert len(sweep.values("accuracy")) == 3
+
+
+def test_sweep_five_seeds_ours_vs_fedavg_has_p_value():
+    """The acceptance shape: >=5 seeds of ours vs fedavg on the sim
+    engine -> a Mann-Whitney p-value + a comparison report."""
+    spec = ExperimentSpec(**SMALL, strategy="ours",
+                          strategy_kwargs=dict(batch_size=32),
+                          world=WorldSpec(num_clients=4,
+                                          profile="heterogeneous"))
+    sweep = run_sweep(spec, axes={"strategy": ["ours", "fedavg"],
+                                  "seed": range(5)})
+    assert len(sweep.points) == 10
+    r = sweep.mann_whitney_u("strategy", "ours", "fedavg",
+                             metric="accuracy", alternative="greater")
+    assert r.n_a == r.n_b == 5
+    assert 0.0 <= r.p_value <= 1.0
+    report = sweep.report("accuracy", baseline="fedavg")
+    assert "strategy=ours" in report and "p_vs_fedavg" in report
+    # bytes comparison too (the overhead-reduction claim's metric)
+    assert len(sweep.values("bytes_sent", strategy="ours")) == 5
+
+
+def test_sweep_dotted_axes_and_filter():
+    spec = ExperimentSpec(**SMALL, strategy=_degenerate(),
+                          world=WorldSpec(num_clients=4, profile="uniform"))
+    sweep = run_sweep(spec, axes={"data.alpha": [0.1, 1.0],
+                                  "seed": [0, 1]})
+    assert len(sweep.points) == 4
+    pts = sweep.filter(**{"data.alpha": 0.1})
+    assert len(pts) == 2
+    assert all(p.spec.data.alpha == 0.1 for p in pts)
+
+
+def test_sweep_validates_points_up_front():
+    from repro.api import SpecError
+    with pytest.raises(SpecError):
+        run_sweep(_spmd_spec(), axes={"engine": ["sim", "ray"],
+                                      "seed": [0]})
+
+
+def test_sweep_requires_axes():
+    with pytest.raises(ValueError, match="axes"):
+        run_sweep(_spmd_spec(), axes={})
