@@ -59,6 +59,12 @@ def list_strategies() -> None:
 
 
 SCAN_R = 8          # rounds per dispatch on the scanned control plane
+SCENARIO_PRESET = "dynamic"   # the scenario config timed on the scanned
+                              # path (drift + churn + link walks + dropout
+                              # regimes — core/scenario.py); the world
+                              # transitions run INSIDE the lax.scan, so
+                              # their overhead must stay <10% of the
+                              # static scanned path (ISSUE 5 acceptance)
 
 # multi-seed sweep protocol (--sweep): the Table VII regime — MANY small
 # repeated runs — where per-seed dispatch overhead dominates and folding
@@ -190,16 +196,20 @@ def bench_sim(json_path: str, rounds: int = 20, clients: int = 32,
                       "rounds": rounds, "strategy": "ours",
                       "batch_size": 64, "max_samples_per_round": 64,
                       "local_steps": 1, "profile": "heterogeneous",
-                      "scan_rounds_per_dispatch": SCAN_R}}
+                      "scan_rounds_per_dispatch": SCAN_R,
+                      "scenario": SCENARIO_PRESET}}
     for name, kwargs in (("loop", dict(megastep=False)),
                          ("megastep", dict(megastep=True)),
                          ("scanned", dict(megastep=True,
-                                          rounds_per_dispatch=SCAN_R))):
+                                          rounds_per_dispatch=SCAN_R)),
+                         ("scanned_scenario",
+                          dict(megastep=True, rounds_per_dispatch=SCAN_R,
+                               scenario=SCENARIO_PRESET))):
         sim = ae.FederatedSimulation(cfg, world.client_arrays,
                                      world.eval_arrays,
                                      spec.resolve_strategy(), world.profiles,
                                      seed=0, **kwargs)
-        if name == "scanned":
+        if name.startswith("scanned"):
             # warmup compiles BOTH trace lengths the timed run will use
             # (full R-dispatches plus the remainder-length scan, if any)
             sim.run(SCAN_R + rounds % SCAN_R)
@@ -230,6 +240,11 @@ def bench_sim(json_path: str, rounds: int = 20, clients: int = 32,
                            / out["loop"]["rounds_per_sec"], 2)
     out["scan_speedup"] = round(out["scanned"]["rounds_per_sec"]
                                 / out["loop"]["rounds_per_sec"], 2)
+    # dynamic-world cost on the scanned path: static/scenario rounds-per-
+    # sec ratio (>1 means the scenario is slower; acceptance bound 1.10)
+    out["scenario_overhead"] = round(
+        out["scanned"]["rounds_per_sec"]
+        / out["scanned_scenario"]["rounds_per_sec"], 3)
     with open(json_path, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")
@@ -238,7 +253,9 @@ def bench_sim(json_path: str, rounds: int = 20, clients: int = 32,
           f"{out['scan_speedup']}x rounds/sec vs loop "
           f"({out['loop']['dispatches_per_round']:.1f} -> "
           f"{out['megastep']['dispatches_per_round']:.1f} -> "
-          f"{out['scanned']['dispatches_per_round']:.2f} dispatches/round)")
+          f"{out['scanned']['dispatches_per_round']:.2f} dispatches/round); "
+          f"'{SCENARIO_PRESET}' scenario overhead "
+          f"{out['scenario_overhead']}x on the scanned path")
     if check_against:
         _check_regression(out, check_against)
     return out
@@ -299,7 +316,7 @@ def _check_regression(out: dict, committed_path: str,
     # length / eval amortization and a different client count changes
     # every path's work — refuse rather than spuriously pass or fail
     proto = ["clients", "rounds", "batch_size", "max_samples_per_round",
-             "scan_rounds_per_dispatch"]
+             "scan_rounds_per_dispatch", "scenario"]
     if "sweep" in out and "sweep" in committed:
         proto += ["sweep_seeds", "sweep_clients", "sweep_batch",
                   "sweep_rounds"]
@@ -314,7 +331,17 @@ def _check_regression(out: dict, committed_path: str,
     scale = (out["loop"]["rounds_per_sec"]
              / max(committed["loop"]["rounds_per_sec"], 1e-9))
     failures = []
-    for path in ("megastep", "scanned", "spmd"):
+    # the ISSUE 5 acceptance bound: world transitions inside the scan
+    # must cost <10% of the static scanned path's rounds/sec — a same-
+    # machine ratio, so no normalization is needed
+    overhead = out.get("scenario_overhead")
+    if overhead is not None:
+        status = "ok" if overhead <= 1.10 else "REGRESSION"
+        print(f"# bench-guard [scenario] scanned overhead x{overhead:.3f} "
+              f"(bound x1.10) {status}")
+        if overhead > 1.10:
+            failures.append("scenario_overhead")
+    for path in ("megastep", "scanned", "scanned_scenario", "spmd"):
         if path not in committed or path not in out:
             continue
         floor = (1.0 - tolerance) * committed[path]["rounds_per_sec"] * scale

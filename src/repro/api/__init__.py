@@ -33,16 +33,22 @@ from repro.api.sweep import SweepPoint, SweepResult, run_sweep
 from repro.api.world import World, build_world
 from repro.core.async_engine import (ClientProfile, CommModel,
                                      StrategyConfig)
+from repro.core.scenario import (SCENARIO_PRESETS, ByzantineSpec, ChurnSpec,
+                                 DriftSpec, DropoutSchedule, LinkSpec,
+                                 ScenarioSpec, WorldState, resolve_scenario)
 from repro.core.schedule import ScheduleSpec
 
 __all__ = [
-    "CheckpointMismatchError", "ClientProfile", "CommModel", "DataSpec",
-    "ExperimentResult", "ExperimentSession", "ExperimentSpec",
-    "MannWhitneyResult", "PRESETS", "ROUND_FIELDS", "RoundRecord",
-    "STRATEGY_REGISTRY", "ScheduleSpec", "SpecError", "SpecIssue",
-    "Strategy", "StrategyConfig", "SweepPoint", "SweepResult", "World",
-    "WorldSpec", "build_spmd_components", "build_world", "get_strategy",
+    "ByzantineSpec", "CheckpointMismatchError", "ChurnSpec",
+    "ClientProfile", "CommModel", "DataSpec", "DriftSpec",
+    "DropoutSchedule", "ExperimentResult", "ExperimentSession",
+    "ExperimentSpec", "LinkSpec", "MannWhitneyResult", "PRESETS",
+    "ROUND_FIELDS", "RoundRecord", "SCENARIO_PRESETS", "STRATEGY_REGISTRY",
+    "ScenarioSpec", "ScheduleSpec", "SpecError", "SpecIssue", "Strategy",
+    "StrategyConfig", "SweepPoint", "SweepResult", "World", "WorldSpec",
+    "WorldState", "build_spmd_components", "build_world", "get_strategy",
     "list_strategies", "mann_whitney_u", "median_iqr",
-    "register_strategy", "resolve_strategy", "run_experiment",
-    "run_spmd_seed_batch", "run_sweep", "seed_vectorizable",
+    "register_strategy", "resolve_scenario", "resolve_strategy",
+    "run_experiment", "run_spmd_seed_batch", "run_sweep",
+    "seed_vectorizable",
 ]

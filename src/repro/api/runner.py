@@ -43,6 +43,7 @@ from repro.api.result import ExperimentResult, RoundRecord
 from repro.api.spec import ExperimentSpec
 from repro.core import async_engine as ae
 from repro.core import compression, fl_step
+from repro.core import scenario as scenario_mod
 from repro.data.loader import ArrayLoader
 from repro.kernels import arena as arena_mod
 from repro.models import api as model_api
@@ -76,7 +77,8 @@ def build_simulation(spec: ExperimentSpec) -> "ae.FederatedSimulation":
                                   eval_every=spec.eval_every,
                                   megastep=spec.megastep,
                                   rounds_per_dispatch=spec.rounds_per_dispatch,
-                                  schedule=spec.resolve_schedule())
+                                  schedule=spec.resolve_schedule(),
+                                  scenario=spec.resolve_scenario())
 
 
 def record_from_metrics(m: "ae.RoundMetrics") -> RoundRecord:
@@ -142,15 +144,23 @@ def build_spmd_components(spec: ExperimentSpec, world=None,
     comm = spec.resolve_comm()
     opt = _resolve_optimizer(spec, st)
     cp = _spmd_control_plane(spec, st, world, round_time_hint)
+    C = cp.num_clients
     if not cp.active():
         cp = None
+    scn = spec.resolve_scenario()
+    dirs = None
+    if scn is not None and scn.drift is not None:
+        dirs = scenario_mod.drift_directions(scn.drift, cfg.num_classes,
+                                             cfg.num_features)
     state = fl_step.init_state(jax.random.PRNGKey(spec.seed), cfg, opt,
-                               control_plane=cp)
+                               control_plane=cp, scenario=scn,
+                               num_clients=C)
     step = fl_step.build_fl_train_step(cfg, opt, theta=st.theta,
                                        lr_schedule=spec.lr_schedule,
                                        donate=False,
                                        beacon_bytes=comm.beacon_bytes,
-                                       control_plane=cp)
+                                       control_plane=cp,
+                                       scenario=scn, drift_dirs=dirs)
     return cfg, st, opt, state, step
 
 
@@ -161,21 +171,28 @@ def _build_eval(cfg, eval_fn):
 
 
 def _account_comm_round(profiles, comm, steps, n_samples, mask,
-                        participating, payload_bytes, acc) -> None:
+                        participating, payload_bytes, acc,
+                        lat_scale=None, bw_scale=None) -> None:
     """One sync round's analytic CommModel arithmetic, shared by the
     per-seed driver and the vmapped seed batch: each participating
     client pays train time + transfer (full payload if its update
     passed the mask, else the 1-bit skip beacon); the round advances at
     the barrier (slowest arrival), idle time is the spread below it.
+    ``lat_scale``/``bw_scale`` are this round's per-client link-quality
+    multipliers (scenario link walks; None -> static links).
     Accumulates into ``acc``'s sim/comm/idle time entries."""
     arrivals = []
     for cid, prof in enumerate(profiles):
         if not participating[cid]:
-            continue        # unselected / dropped: silent this round
+            continue        # unselected / dropped / churned: silent
         t_train = (steps * comm.t_launch
                    + n_samples * comm.t_sample) / max(prof.speed, 1e-3)
         payload = payload_bytes if mask[cid] > 0 else comm.beacon_bytes
-        transfer = prof.net_latency + payload / comm.bandwidth
+        lat = prof.net_latency * (float(lat_scale[cid])
+                                  if lat_scale is not None else 1.0)
+        bw = comm.bandwidth * (float(bw_scale[cid])
+                               if bw_scale is not None else 1.0)
+        transfer = lat + payload / bw
         acc["comm_time"] += transfer
         arrivals.append(t_train + transfer)
     barrier = max(arrivals) if arrivals else 0.0
@@ -237,6 +254,8 @@ class SpmdDriver:
         self.payload_bytes = (compression.arena_wire_bytes(
             arena_mod.ParamArena(self.state.params))
             if self.st.quantize_updates else self.param_bytes)
+        scn = spec.resolve_scenario()
+        self._has_link_walks = scn is not None and scn.links is not None
         self.round_idx = 0
         self.acc = {"sim_time": 0.0, "comm_time": 0.0, "idle_time": 0.0,
                     "bytes_sent": 0.0}
@@ -264,11 +283,21 @@ class SpmdDriver:
         mask = np.asarray(m["mask"])
         selected = np.asarray(m["selected"])
         delivered = np.asarray(m["delivered"])
+        lat_scale = bw_scale = None
+        if self._has_link_walks:
+            # the world the compiled step just ran under (FLState.world
+            # is post-transition): link walks re-price this round's
+            # transfer; churned-out clients already have delivered=0,
+            # and without link walks the scales are all-ones — skip the
+            # per-round device->host fetch entirely
+            wv = scenario_mod.host_view(self.state.world)
+            lat_scale, bw_scale = wv["lat_scale"], wv["bw_scale"]
         acc = self.acc
         _account_comm_round(self.world.profiles, self.comm, self.steps,
                             self.n_samples, mask,
                             participating=(selected * delivered) > 0,
-                            payload_bytes=self.payload_bytes, acc=acc)
+                            payload_bytes=self.payload_bytes, acc=acc,
+                            lat_scale=lat_scale, bw_scale=bw_scale)
         acc["bytes_sent"] += float(m["bytes_sent"])
 
         if evaluate:
@@ -301,6 +330,16 @@ class SpmdDriver:
             records.append(self._account(rnd, m, evaluate))
         self.round_idx = last + 1
         return records
+
+    def client_pass_rates(self) -> np.ndarray:
+        """(num_clients,) θ pass-rate EMAs from the device control
+        plane (see FederatedSimulation.client_pass_rates)."""
+        if self.state.control is None:
+            raise ValueError(
+                "the spmd control plane is inactive (no selection / "
+                "dropout / quantize / per-client LR), so no pass-rate "
+                "EMAs are tracked")
+        return np.asarray(self.state.control.pass_rate)
 
     # ------------------------------------------------------------------
     # serialization (ExperimentSession.checkpoint/restore)
@@ -357,6 +396,8 @@ def seed_vectorizable(spec: ExperimentSpec, st=None) -> bool:
         return False
     if spec.world.dropout_p > 0:
         return False
+    if spec.resolve_scenario() is not None:
+        return False        # dynamic worlds run serially (FLState.world)
     return True
 
 

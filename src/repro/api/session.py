@@ -53,10 +53,10 @@ CHECKPOINT_FORMAT = 1
 # restore onto a spec that changes any of these (see _spec_fingerprint).
 # `rounds` is NOT one of them: the round budget is a session argument,
 # and extending a restored run is exactly what sessions are for.
-_FINGERPRINT_DOC = ("engine", "model", "strategy", "schedule", "data",
-                    "world", "comm", "seed", "eval_every", "megastep",
-                    "rounds_per_dispatch", "optimizer", "lr_schedule",
-                    "eval_fn")
+_FINGERPRINT_DOC = ("engine", "model", "strategy", "schedule", "scenario",
+                    "data", "world", "comm", "seed", "eval_every",
+                    "megastep", "rounds_per_dispatch", "optimizer",
+                    "lr_schedule", "eval_fn")
 
 
 class CheckpointMismatchError(ValueError):
@@ -88,11 +88,14 @@ def _spec_fingerprint(spec: ExperimentSpec) -> Dict[str, Any]:
     cfg = spec.resolve_model()
     data = dataclasses.asdict(spec.data)
     data["factory"] = spec.data.factory is not None   # presence only
+    scenario = spec.resolve_scenario()
     return {
         "engine": spec.engine,
         "model": getattr(cfg, "name", str(spec.model)),
         "strategy": dataclasses.asdict(spec.resolve_strategy()),
         "schedule": dataclasses.asdict(spec.resolve_schedule()),
+        "scenario": (None if scenario is None
+                     else dataclasses.asdict(scenario)),
         "data": data,
         "world": dataclasses.asdict(spec.world),
         "comm": dataclasses.asdict(spec.resolve_comm()),
@@ -127,6 +130,9 @@ class _SimDriver:
 
     def load_state_dict(self, state: dict) -> None:
         self.sim.load_state_dict(state)
+
+    def client_pass_rates(self):
+        return self.sim.client_pass_rates()
 
     def result(self, records, wall_time: float = 0.0) -> ExperimentResult:
         return ExperimentResult(
@@ -269,6 +275,13 @@ class ExperimentSession:
     def result(self) -> ExperimentResult:
         """The normalized ExperimentResult over everything run so far."""
         return self._driver.result(self.records, wall_time=self._wall)
+
+    def client_pass_rates(self):
+        """(num_clients,) per-client θ pass-rate EMAs the server control
+        plane has learned so far — the diagnostics surface behind the
+        differential harness's byzantine-rejection assert (raises on the
+        spmd engine when its control plane is inactive)."""
+        return self._driver.client_pass_rates()
 
     # ------------------------------------------------------------------
     # persistence

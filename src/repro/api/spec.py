@@ -21,6 +21,7 @@ from typing import Any, Callable, Dict, List, Optional, Union
 from repro.api import strategies as strategies_mod
 from repro.api import world as world_mod
 from repro.core.async_engine import CommModel, StrategyConfig
+from repro.core.scenario import ScenarioSpec, resolve_scenario
 from repro.core.schedule import ScheduleSpec, resolve_schedule
 
 ENGINES = ("sim", "spmd")
@@ -89,6 +90,13 @@ class ExperimentSpec:
     # keeps every preset working); "sync" | "async" | "semi-async" or a
     # full ScheduleSpec overrides it — e.g. fedavg under an async quorum,
     # or "ours" with a bounded-staleness semi-async server
+    scenario: Union[str, ScenarioSpec, None] = None
+    # the dynamic-world axis (core/scenario.py): None -> the world stays
+    # frozen at round 0 (the historical behavior); a preset name
+    # ("drift", "churn", "flaky-links", "byzantine", ...) or a full
+    # ScenarioSpec composes per-round transitions — concept drift, client
+    # churn, link-quality walks, dropout regime switches, byzantine
+    # updates — identically on every execution path of both engines
     engine: str = "sim"
     rounds: int = 5
     seed: int = 0
@@ -140,6 +148,9 @@ class ExperimentSpec:
 
     def resolve_comm(self) -> CommModel:
         return self.comm or CommModel()
+
+    def resolve_scenario(self) -> Optional[ScenarioSpec]:
+        return resolve_scenario(self.scenario)
 
     def strategy_name(self) -> str:
         if isinstance(self.strategy, str):
@@ -198,6 +209,23 @@ class ExperimentSpec:
             issues.append(SpecIssue(
                 "world.profile", self.world.profile,
                 f"unknown profile; expected one of {PROFILES}"))
+        scenario = None
+        try:
+            scenario = self.resolve_scenario()
+        except ValueError as e:
+            issues.append(SpecIssue("scenario", self.scenario, str(e)))
+        if scenario is not None:
+            issues.extend(SpecIssue(f, v, h)
+                          for f, v, h in scenario.issues())
+            if scenario.drift is not None:
+                issues.extend(self._validate_drift())
+            if (scenario.byzantine is not None
+                    and scenario.byzantine.n_byz >= self.world.num_clients):
+                issues.append(SpecIssue(
+                    "scenario.byzantine.n_byz", scenario.byzantine.n_byz,
+                    f"needs at least one honest client (world has "
+                    f"{self.world.num_clients}); the θ-filter has no "
+                    "honest majority to form a reference otherwise"))
         strategy = schedule = None
         try:
             strategy = self.resolve_strategy()
@@ -217,6 +245,22 @@ class ExperimentSpec:
         if issues:
             raise SpecError(issues)
         return self
+
+    def _validate_drift(self) -> List[SpecIssue]:
+        """Label-conditional feature drift needs feature/label batches —
+        token (lm) datasets have no per-sample class direction."""
+        if self.data.factory is not None:
+            return []          # user factory: checked at batch time
+        try:
+            cfg = self.resolve_model()
+        except Exception:
+            return []          # model issues surface on their own
+        if world_mod._dataset_kind(self.data, cfg) == "lm":
+            return [SpecIssue(
+                "scenario.drift", self.data.dataset,
+                "label-conditional feature drift needs a feature/label "
+                "dataset ('unsw'/'road'); token datasets are unsupported")]
+        return []
 
     def _validate_spmd(self, st: StrategyConfig,
                        schedule: ScheduleSpec) -> List[SpecIssue]:

@@ -55,6 +55,7 @@ import numpy as np
 from repro.core import aggregation, alignment, compression
 from repro.core import control as control_mod
 from repro.core import megastep as megastep_mod
+from repro.core import scenario as scenario_mod
 from repro.core.batchsize import BatchSizeController, ClientMetrics
 from repro.core.checkpoint_policy import fit_weibull, optimal_interval
 from repro.core.schedule import ScheduleSpec
@@ -161,7 +162,8 @@ class FederatedSimulation:
                  eval_fn: Callable = None, eval_every: int = 1,
                  megastep: bool = True,
                  rounds_per_dispatch: Optional[int] = None,
-                 schedule: Optional[ScheduleSpec] = None):
+                 schedule: Optional[ScheduleSpec] = None,
+                 scenario: Optional[scenario_mod.ScenarioSpec] = None):
         self.cfg = cfg
         self.strategy = strategy
         # schedule=None -> legacy StrategyConfig.mode shim
@@ -187,6 +189,25 @@ class FederatedSimulation:
                              "(the scanned path runs on the parameter "
                              "arena)")
         self.dispatches = 0           # compiled-call count (bench metric)
+
+        # --- dynamic-world scenario (core/scenario.py) --------------------
+        # None / inactive -> the world stays frozen at round 0 and every
+        # code path below is bit-identical to the pre-scenario engine
+        self.scenario = scenario_mod.resolve_scenario(scenario)
+        self._world_state = scenario_mod.init_world(self.scenario,
+                                                    len(client_arrays))
+        self._world_view = None       # this round's host view (or None)
+        self._drift_dirs = None
+        self._drift_label = None
+        if self.scenario is not None and self.scenario.drift is not None:
+            keys = set(client_arrays[0])
+            if "x" not in keys or "y" not in keys:
+                raise ValueError(
+                    "scenario.drift needs feature/label client arrays "
+                    f"('x' + 'y'); got {sorted(keys)}")
+            self._drift_label = "y"
+            self._drift_dirs = jnp.asarray(scenario_mod.drift_directions(
+                self.scenario.drift, cfg.num_classes, cfg.num_features))
 
         # --- model/optim setup ------------------------------------------
         self._params_tree = api.init_params(jax.random.PRNGKey(seed), cfg)
@@ -330,14 +351,27 @@ class FederatedSimulation:
 
     def _train_client(self, cid: int):
         batches, steps, n_samples = self._client_batches(cid)
+        dev = jax.tree.map(jnp.asarray, batches)
+        if self._drift_dirs is not None:
+            dev = scenario_mod.apply_drift(
+                dev, jnp.float32(self._world_view["drift_amp"]),
+                self._drift_dirs, self._drift_label)
         new_params, loss = self._local_run(
-            self.params, jax.tree.map(jnp.asarray, batches),
-            jnp.float32(self.client_lr_scale[cid]))
+            self.params, dev, jnp.float32(self.client_lr_scale[cid]))
         self.dispatches += 1
         prof = self.profiles[cid]
         train_time = self._train_time(steps, n_samples, prof)
         delta = jax.tree.map(lambda n, o: (n - o).astype(jnp.float32),
                              new_params, self.params)
+        wv = self._world_view
+        if wv is not None and float(wv["byz_factor"][cid]) != 1.0:
+            # byzantine corruption BEFORE wire compression — the client
+            # transmits (and the θ-filter scores) the corrupted update
+            f = jnp.float32(wv["byz_factor"][cid])
+            delta = jax.tree.map(lambda d: d * f, delta)
+            new_params = jax.tree.map(
+                lambda o, d: (o.astype(jnp.float32) + d).astype(o.dtype),
+                self.params, delta)
         if self.strategy.quantize_updates:
             # int8 + error feedback on the wire; server dequantizes
             err = self._ef_state.setdefault(
@@ -365,26 +399,64 @@ class FederatedSimulation:
             return float(self._wire_bytes)
         return float(self.param_bytes)
 
-    def _transfer_time(self, sent: bool, prof: ClientProfile) -> float:
+    def _transfer_time(self, sent: bool, prof: ClientProfile,
+                       cid: Optional[int] = None) -> float:
+        lat, bw = prof.net_latency, self.comm.bandwidth
+        wv = self._world_view
+        if wv is not None and cid is not None:
+            # link-quality walk re-prices this round's transfer
+            lat *= float(wv["lat_scale"][cid])
+            bw *= float(wv["bw_scale"][cid])
         if sent:
-            return prof.net_latency + self._payload_bytes() / self.comm.bandwidth
+            return lat + self._payload_bytes() / bw
         # 1-bit skip beacon: still a message, still on the wire
-        return prof.net_latency + self.comm.beacon_bytes / self.comm.bandwidth
+        return lat + self.comm.beacon_bytes / bw
 
     # ------------------------------------------------------------------
     # rounds
     # ------------------------------------------------------------------
     def _select_clients(self) -> List[int]:
+        """This round's cohort. Under scenario churn the live roster is
+        applied BEFORE top-k — matching the scanned/spmd control plane,
+        which masks churned-out scores to -inf before selecting — so
+        every execution path fills its cohort from the same candidate
+        set (churned clients are absent, never observed, not failed)."""
         st = self.strategy
         k = max(1, int(st.select_fraction * self.num_clients))
+        wv = self._world_view
+        live = wv["live"] if wv is not None else None
         if st.grad_norm_selection:
-            return list(np.argsort(-self.grad_norms)[:k])
-        if st.selection and st.select_fraction < 1.0:
-            return self.selector.select(k)
-        return list(range(self.num_clients))
+            gn = self.grad_norms
+            if live is not None:
+                gn = np.where(live, gn, -np.inf)
+            selected = [int(c) for c in np.argsort(-gn)[:k]
+                        if live is None or live[c]]
+        elif st.selection and st.select_fraction < 1.0:
+            selected = self.selector.select(k, live=live)
+        else:
+            selected = [c for c in range(self.num_clients)
+                        if live is None or live[c]]
+        return selected
+
+    def _dropout_p(self, prof: ClientProfile) -> float:
+        wv = self._world_view
+        scale = wv["dropout_scale"] if wv is not None else 1.0
+        return min(1.0, prof.dropout_p * scale)
+
+    def _advance_world(self) -> None:
+        """Transition the WorldState for the round now starting (the
+        absolute index ``round_idx - 1``: run_round already counted it)
+        and cache one host view for this round's event accounting."""
+        if self.scenario is None:
+            return
+        self._world_state = scenario_mod.world_step(
+            self._world_state, self.round_idx - 1, self.scenario,
+            self.num_clients)
+        self._world_view = scenario_mod.host_view(self._world_state)
 
     def run_round(self, rnd: int, evaluate: bool = True) -> RoundMetrics:
         self.round_idx += 1
+        self._advance_world()
         if self.megastep:
             return self._run_round_mega(rnd, evaluate)
         return self._run_round_loop(rnd, evaluate)
@@ -432,7 +504,7 @@ class FederatedSimulation:
         for cid in selected:
             prof = self.profiles[cid]
             delay = 0.0
-            if self.rng.random() < prof.dropout_p:
+            if self.rng.random() < self._dropout_p(prof):
                 self.failure_log.append(round_start)
                 self.selector.observe(cid, delivered=False)
                 if not st.checkpointing:
@@ -469,8 +541,20 @@ class FederatedSimulation:
             blist = g["batches"] + [g["batches"][-1]] * (padded - C)
             batch = {k: jnp.asarray(np.stack([b[k] for b in blist]))
                      for k in blist[0]}
+            if self._drift_dirs is not None:
+                # same elementwise shift as the loop path's per-client
+                # batches — bit-identical regardless of cohort stacking
+                batch = scenario_mod.apply_drift(
+                    batch, jnp.float32(self._world_view["drift_amp"]),
+                    self._drift_dirs, self._drift_label)
             lr_scale = np.ones(padded, np.float32)
             lr_scale[:C] = self.client_lr_scale[cids]
+            byz = None
+            wv = self._world_view
+            if wv is not None and (wv["byz_factor"] != 1.0).any():
+                byz_np = np.ones(padded, np.float32)
+                byz_np[:C] = wv["byz_factor"][cids]
+                byz = jnp.asarray(byz_np)
             idx = None
             if st.quantize_updates:
                 # pad rows scatter their EF residual into the dummy row
@@ -480,7 +564,7 @@ class FederatedSimulation:
                                                   self.num_clients)]),
                     jnp.int32)
             deltas, losses, ratios, norms, new_ef = self._cohort_step(
-                self._params_mat, batch, jnp.asarray(lr_scale),
+                self._params_mat, batch, jnp.asarray(lr_scale), byz,
                 self._ref_mat if has_ref else None,
                 self._ef_arena, idx, has_ref=has_ref)
             self.dispatches += 1
@@ -505,7 +589,7 @@ class FederatedSimulation:
             losses_all.append(loss)
             sent = (st.theta is None or not has_ref
                     or ratio >= st.theta)
-            transfer = self._transfer_time(sent, prof)
+            transfer = self._transfer_time(sent, prof, cid)
             arrive = (round_start + delay
                       + self._train_time(steps, n_samples, prof) + transfer)
             arrivals.append((arrive, cid, sent))
@@ -605,7 +689,7 @@ class FederatedSimulation:
         for cid in selected:
             prof = self.profiles[cid]
             delay = 0.0
-            if self.rng.random() < prof.dropout_p:
+            if self.rng.random() < self._dropout_p(prof):
                 self.failure_log.append(round_start)
                 self.selector.observe(cid, delivered=False)
                 if not st.checkpointing:
@@ -615,7 +699,7 @@ class FederatedSimulation:
             new_params, delta, loss, t_train = self._train_client(cid)
             losses.append(loss)
             sent, ratio = self._filter_update(delta)
-            transfer = self._transfer_time(sent, prof)
+            transfer = self._transfer_time(sent, prof, cid)
             arrive = round_start + delay + t_train + transfer
             arrivals.append((arrive, cid, new_params, sent, transfer))
             round_times[cid] = arrive - round_start
@@ -748,7 +832,9 @@ class FederatedSimulation:
                 wire_bytes=self._wire_bytes,
                 recovery_time=self.recovery_time,
                 restart_time=self.restart_time,
-                schedule=self.schedule)
+                schedule=self.schedule,
+                scenario=self.scenario, drift_dirs=self._drift_dirs,
+                drift_label=self._drift_label or "y")
         return self._scan_fns[R]
 
     def _run_scanned(self, num_rounds: int,
@@ -765,14 +851,15 @@ class FederatedSimulation:
             Rg = min(R, num_rounds - done)
             carry, ms = self._scan_fn(Rg)(
                 self._params_mat, ref_mat, self._scan_ref_valid,
-                self._scan_ctl, data, sizes, speed, latency, dropout_p,
+                self._scan_ctl, self._world_state, data, sizes, speed,
+                latency, dropout_p,
                 self._scan_key, jnp.int32(self._scan_round0),
                 jnp.asarray([self.sim_time, self.comm_time,
                              self.idle_time, self.bytes_sent],
                             jnp.float32))
             self.dispatches += 1
             (self._params_mat, ref_mat, self._scan_ref_valid,
-             self._scan_ctl, _acc) = carry
+             self._scan_ctl, self._world_state, _acc) = carry
             self._params_tree = None          # pytree view now stale
             ms = {k: np.asarray(v) for k, v in ms.items()}
 
@@ -863,6 +950,8 @@ class FederatedSimulation:
                         else dev(self._ref_mat)),
             "ref_sign": (None if self.ref_sign is None
                          else dev(self.ref_sign)),
+            "world_state": (None if self.scenario is None
+                            else dev(self._world_state)),
             "scan": {
                 "ctl": (None if self._scan_ctl is None
                         else dev(self._scan_ctl)),
@@ -919,6 +1008,10 @@ class FederatedSimulation:
                          else jnp.asarray(state["ref_mat"]))
         self.ref_sign = (None if state["ref_sign"] is None
                          else jax.tree.map(jnp.asarray, state["ref_sign"]))
+        if state.get("world_state") is not None:
+            self._world_state = jax.tree.map(jnp.asarray,
+                                             state["world_state"])
+            self._world_view = scenario_mod.host_view(self._world_state)
         scan = state["scan"]
         if scan["ctl"] is not None:
             self._scan_setup()        # rebuild the device world and shapes
@@ -933,6 +1026,17 @@ class FederatedSimulation:
         self.server_step = state["server_step"]
         self.dispatches = state["dispatches"]
         self.history = [RoundMetrics(**m) for m in state["history"]]
+
+    def client_pass_rates(self) -> np.ndarray:
+        """(num_clients,) θ pass-rate EMAs the server has learned — the
+        device ControlState on the scanned path, the host selector
+        records otherwise. Diagnostics surface (the differential
+        harness's byzantine-rejection assert reads it through
+        ``ExperimentSession.client_pass_rates``)."""
+        if self._scan_ctl is not None:
+            return np.asarray(self._scan_ctl.pass_rate)
+        return np.array([self.selector.records[c].pass_rate
+                         for c in range(self.num_clients)])
 
     def run(self, num_rounds: int,
             eval_final: bool = True) -> List[RoundMetrics]:

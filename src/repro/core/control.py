@@ -141,7 +141,8 @@ def score(state: ControlState) -> jnp.ndarray:
 def select_topk_epsilon(scores: jnp.ndarray, k: int,
                         epsilon: float = 0.0,
                         eps_u: Optional[jnp.ndarray] = None,
-                        pick_u: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                        pick_u: Optional[jnp.ndarray] = None,
+                        live: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """(k,) selected client ids — the oracle's decision function.
 
     Stable descending-score top-k, then ε-greedy exploration: slot i is
@@ -150,6 +151,13 @@ def select_topk_epsilon(scores: jnp.ndarray, k: int,
     the picked client popped). With ``epsilon=0`` (or no draws) this is
     exactly ``AdaptiveClientSelector.select``'s top-k; with draws it is
     the same algorithm with the randomness injected explicitly.
+
+    ``live`` (optional (n,) bool, scenario churn) restricts the
+    EXPLORATION POOL to live clients — the caller already masks dead
+    scores to -inf for the top-k, and the host oracle's pool is its
+    live not-chosen cids (``AdaptiveClientSelector.select(k, live=...)``),
+    so without this mask an ε-swap could pull a churned-out client into
+    the cohort on the device paths only.
     """
     n = scores.shape[0]
     k = int(k)
@@ -157,10 +165,16 @@ def select_topk_epsilon(scores: jnp.ndarray, k: int,
     chosen = order[:k]
     if epsilon <= 0.0 or eps_u is None or pick_u is None or k >= n:
         return chosen
-    # pool = not-chosen cids in ascending order (stable sort of the
-    # membership mask: zeros/False — the non-members — come first)
+    # pool = (live) not-chosen cids in ascending order (stable sort of
+    # the exclusion mask: zeros/False — the pool members — come first)
     in_chosen = jnp.zeros((n,), bool).at[chosen].set(True)
-    pool = jnp.argsort(in_chosen, stable=True)
+    if live is None:
+        excluded = in_chosen
+        m0 = jnp.int32(n - k)
+    else:
+        excluded = in_chosen | ~live
+        m0 = (~excluded).sum().astype(jnp.int32)
+    pool = jnp.argsort(excluded, stable=True)
     idx = jnp.arange(n)
 
     def body(i, carry):
@@ -176,22 +190,23 @@ def select_topk_epsilon(scores: jnp.ndarray, k: int,
         return chosen, pool, m
 
     chosen, _, _ = jax.lax.fori_loop(
-        0, k, body, (chosen, pool, jnp.int32(n - k)))
+        0, k, body, (chosen, pool, m0))
     return chosen
 
 
 def select_topk(scores: jnp.ndarray, k: int, key=None,
-                epsilon: float = 0.0) -> jnp.ndarray:
+                epsilon: float = 0.0,
+                live: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Convenience wrapper drawing the exploration uniforms from a PRNG
     key (one ``(k,)`` draw per decision, mirroring the oracle's one
     ``rng.random()`` + one ``rng.integers()`` per slot)."""
     if key is None or epsilon <= 0.0:
-        return select_topk_epsilon(scores, k)
+        return select_topk_epsilon(scores, k, live=live)
     ke, kp = jax.random.split(key)
     return select_topk_epsilon(
         scores, k, epsilon,
         eps_u=jax.random.uniform(ke, (int(k),)),
-        pick_u=jax.random.uniform(kp, (int(k),)))
+        pick_u=jax.random.uniform(kp, (int(k),)), live=live)
 
 
 # ---------------------------------------------------------------------------

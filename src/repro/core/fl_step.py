@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.core import alignment, compression
 from repro.core import control as control_mod
+from repro.core import scenario as scenario_mod
 from repro.kernels import arena as arena_mod
 from repro.models import api
 from repro.optim import adamw as optim_mod
@@ -51,6 +52,10 @@ class FLState(NamedTuple):
     metrics: dict           # running counters (accept rate, bytes saved)
     control: Optional[control_mod.ControlState] = None
     # device control plane (None -> plain masked-FedAvg semantics)
+    world: Optional[scenario_mod.WorldState] = None
+    # dynamic-world scenario state (None -> the world stays frozen);
+    # transitions run INSIDE the compiled step (core/scenario.py), so
+    # churn / drift / byzantine corruption cost no extra dispatches
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,7 +95,8 @@ class ControlPlane:
 
 
 def init_state(rng, cfg, optimizer=None,
-               control_plane: Optional[ControlPlane] = None) -> FLState:
+               control_plane: Optional[ControlPlane] = None,
+               scenario=None, num_clients: Optional[int] = None) -> FLState:
     params = api.init_params(rng, cfg)
     optimizer = optimizer or optim_mod.for_config(cfg)
     opt_state = optimizer.init(params)
@@ -101,15 +107,25 @@ def init_state(rng, cfg, optimizer=None,
         ctl = control_mod.init_control(
             control_plane.num_clients, arena=arena,
             quantize=control_plane.quantize)
+    world = None
+    if scenario_mod.is_active(scenario):
+        n = num_clients if num_clients is not None else (
+            control_plane.num_clients if control_plane is not None
+            else None)
+        if n is None:
+            raise ValueError("init_state(scenario=...) needs num_clients "
+                             "(or a control_plane that names it)")
+        world = scenario_mod.init_world(scenario, n)
     return FLState(params, opt_state, ref_sign, jnp.zeros((), jnp.int32),
                    {"accepted": jnp.zeros((), jnp.float32),
-                    "rounds": jnp.zeros((), jnp.float32)}, ctl)
+                    "rounds": jnp.zeros((), jnp.float32)}, ctl, world)
 
 
 def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
                   lr_schedule=None, agg_dtype=jnp.bfloat16,
                   beacon_bytes: float = 0.125,
-                  control_plane: Optional[ControlPlane] = None):
+                  control_plane: Optional[ControlPlane] = None,
+                  scenario=None, drift_dirs=None, label_key: str = "y"):
     """Un-jitted step(state, batch) -> (state, metrics) — the dry-run wraps
     this with explicit in/out shardings; trainers use build_fl_train_step.
 
@@ -122,6 +138,10 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
     simulator's accounting (CommModel.beacon_bytes).
     control_plane: attach the device control plane — adaptive selection,
     dropout, per-client LR and quantized updates as cohort masking.
+    scenario: attach the dynamic-world scenario (core/scenario.py) —
+    churn gates the cohort masks, drift shifts the batch, byzantine
+    factors corrupt updates before θ scoring, all inside this one
+    compiled program; the WorldState rides in ``FLState.world``.
     """
     optimizer = optimizer or optim_mod.for_config(cfg)
     # static arena layout from the config's parameter template — no
@@ -131,6 +151,9 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
     arena = arena_mod.ParamArena(template)
     cp = control_plane if (control_plane is not None
                            and control_plane.active()) else None
+    scn = scenario if scenario_mod.is_active(scenario) else None
+    dirs = (jnp.asarray(drift_dirs)
+            if (scn is not None and scn.drift is not None) else None)
     wire_bytes = (float(compression.arena_wire_bytes(arena))
                   if (cp and cp.quantize) else None)
 
@@ -138,6 +161,15 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
         return api.loss_fn(params, client_batch, cfg)
 
     def step(state: FLState, batch):
+        # (1b) dynamic world: this round's WorldState (FLState.world)
+        ws = state.world
+        if scn is not None:
+            ws = scenario_mod.world_step(ws, state.step, scn,
+                                         ws.live.shape[0])
+            if dirs is not None:
+                batch = scenario_mod.apply_drift(batch, ws.drift_amp,
+                                                 dirs, label_key)
+
         # (2) per-client gradients — one client per mesh shard
         loss, grads = jax.vmap(
             jax.value_and_grad(loss_for_client), in_axes=(None, 0)
@@ -151,32 +183,49 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
                                      state.step)
             k_sel, k_drop = jax.random.split(key)
             if cp.has_dropout:
-                delivered = (jax.random.uniform(k_drop, (C,))
-                             >= jnp.asarray(cp.dropout_p, jnp.float32))
+                drop_p = jnp.asarray(cp.dropout_p, jnp.float32)
+                if scn is not None and scn.dropout is not None:
+                    drop_p = drop_p * ws.dropout_scale
+                delivered = jax.random.uniform(k_drop, (C,)) >= drop_p
             else:
                 delivered = jnp.ones((C,), bool)
             if cp.grad_norm_selection:
-                sel_idx = jnp.argsort(-ctl.grad_norm,
-                                      stable=True)[:cp.select_k]
+                gn = (ctl.grad_norm if scn is None
+                      else jnp.where(ws.live, ctl.grad_norm, -jnp.inf))
+                sel_idx = jnp.argsort(-gn, stable=True)[:cp.select_k]
             elif cp.selecting:
+                scores = control_mod.score(ctl)
+                if scn is not None:
+                    scores = jnp.where(ws.live, scores, -jnp.inf)
                 sel_idx = control_mod.select_topk(
-                    control_mod.score(ctl), cp.select_k, key=k_sel,
-                    epsilon=cp.epsilon)
+                    scores, cp.select_k, key=k_sel, epsilon=cp.epsilon,
+                    live=None if scn is None else ws.live)
             else:
                 sel_idx = None
             if sel_idx is not None:
                 selected = jnp.zeros((C,), bool).at[sel_idx].set(True)
             else:
                 selected = jnp.ones((C,), bool)
+            if scn is not None:
+                # churned-out clients are absent: they deliver nothing
+                # (and are never observed by the reliability EMAs below)
+                delivered = delivered & ws.live
             active = selected & delivered
         else:
             selected = delivered = active = jnp.ones((C,), bool)
+            if scn is not None:
+                delivered = ws.live
+                active = selected & delivered
 
         # (3)+(4) selective aggregation (the paper's contribution) on the
         # flat (C, rows, LANE) arena — one packed buffer, one kernel sweep
         u = arena.pack_cohort(grads)
         if cp is not None and cp.per_client_lr:
             u = u * ctl.lr_scale[:, None, None]
+        if scn is not None and scn.byzantine is not None:
+            # corruption BEFORE wire compression and θ scoring — the
+            # server receives (and the filter judges) the corrupted update
+            u = u * ws.byz_factor[:, None, None]
         if cp is not None and cp.quantize:
             # int8 + error feedback on the wire; only clients that
             # actually participate quantize / carry residuals
@@ -231,7 +280,8 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
             sent = mask > 0
             hint = (jnp.asarray(cp.round_time_hint, jnp.float32)
                     if cp.round_time_hint else jnp.ones((C,), jnp.float32))
-            ctl = control_mod.observe(ctl, cohort, mask=selected,
+            obs_mask = (selected if scn is None else selected & ws.live)
+            ctl = control_mod.observe(ctl, cohort, mask=obs_mask,
                                       delivered=delivered, passed=sent,
                                       round_time=hint, ema=cp.ema)
             ctl = control_mod.grad_norm_update(ctl, cohort, norms, active)
@@ -242,7 +292,8 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
 
         update_bytes = (jnp.float32(wire_bytes) if wire_bytes
                         else _update_bytes(state.params))
-        n_sel = selected.sum().astype(jnp.float32)
+        n_sel = (selected if scn is None
+                 else selected & ws.live).sum().astype(jnp.float32)
         metrics = {
             "loss": loss.mean(),
             # pre-fallback pass fraction over the selected cohort (the
@@ -268,7 +319,7 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
         run = {"accepted": state.metrics["accepted"] + mask.sum(),
                "rounds": state.metrics["rounds"] + 1.0}
         return FLState(new_params, new_opt, new_ref, state.step + 1, run,
-                       ctl), metrics
+                       ctl, ws), metrics
 
     return step
 
@@ -276,11 +327,15 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
 def build_fl_train_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
                         lr_schedule=None, donate: bool = True,
                         beacon_bytes: float = 0.125,
-                        control_plane: Optional[ControlPlane] = None):
+                        control_plane: Optional[ControlPlane] = None,
+                        scenario=None, drift_dirs=None,
+                        label_key: str = "y"):
     """jit'd step(state, batch) -> (state, metrics)."""
     step = make_raw_step(cfg, optimizer, theta, lr_schedule,
                          beacon_bytes=beacon_bytes,
-                         control_plane=control_plane)
+                         control_plane=control_plane,
+                         scenario=scenario, drift_dirs=drift_dirs,
+                         label_key=label_key)
     if donate:
         return jax.jit(step, donate_argnums=(0,))
     return jax.jit(step)

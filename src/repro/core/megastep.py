@@ -74,22 +74,28 @@ def _train_cohort(cfg, opt, arena, params, batches, lr_scale):
 
 
 def build_cohort_step(cfg, opt, arena, theta=None, quantize: bool = False):
-    """Returns jitted ``step(params_mat, batches, lr_scale, ref_mat, ef,
-    idx, *, has_ref) -> (deltas, losses, ratios, norms, new_ef)``.
+    """Returns jitted ``step(params_mat, batches, lr_scale, byz, ref_mat,
+    ef, idx, *, has_ref) -> (deltas, losses, ratios, norms, new_ef)``.
 
     params_mat: (rows, lane) f32 arena of the round-start globals.
     batches:    pytree, leaves (C, steps, B, ...) — the stacked cohort.
     lr_scale:   (C,) per-client LR scaling (FedL2P personalization).
+    byz:        (C,) per-client update multipliers (byzantine scenario
+                clients: ±scale; None -> everyone honest), applied BEFORE
+                wire compression and θ scoring — the server receives the
+                corrupted update.
     ref_mat:    (rows, lane) int8 reference sign (None until it exists).
     ef, idx:    (N, rows, lane) EF arena + (C,) client ids (quantize only).
     has_ref:    static — round 0 has no reference direction; ratios are 1.
     """
     @functools.partial(jax.jit, static_argnames=("has_ref",))
-    def cohort_step(params_mat, batches, lr_scale, ref_mat, ef, idx, *,
+    def cohort_step(params_mat, batches, lr_scale, byz, ref_mat, ef, idx, *,
                     has_ref):
         params = arena.unpack(params_mat)
         deltas, losses = _train_cohort(cfg, opt, arena, params, batches,
                                        lr_scale)
+        if byz is not None:
+            deltas = deltas * byz[:, None, None]
         new_ef = ef
         if quantize:
             restored, residual = compression.compress_cohort(
@@ -138,7 +144,9 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
                          rounds_per_dispatch: int, param_bytes: float,
                          wire_bytes=None, epsilon: float = 0.1,
                          ema: float = 0.8, recovery_time: float = 0.2,
-                         restart_time: float = 1.0, schedule=None):
+                         restart_time: float = 1.0, schedule=None,
+                         scenario=None, drift_dirs=None,
+                         drift_label: str = "y"):
     """Compile ``rounds_per_dispatch`` full FL rounds — {select → train
     cohort → θ-filter → staleness-weighted arena aggregate → control
     update} — into one jitted ``lax.scan``.
@@ -165,15 +173,23 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
       * the Weibull checkpoint-interval refit (which never feeds back
         into the trajectory) is skipped; failures are counted per round.
 
-    Returns ``run(params_mat, ref_mat, ref_valid, ctl, data, sizes,
+    Returns ``run(params_mat, ref_mat, ref_valid, ctl, ws, data, sizes,
     speed, latency, dropout_p, base_key, round0, acc) -> (carry, metrics)``
     where ``metrics`` is a dict of ``(R,)`` per-round series and
-    ``carry`` the updated ``(params_mat, ref_mat, ref_valid, ctl, acc)``.
+    ``carry`` the updated ``(params_mat, ref_mat, ref_valid, ctl, ws,
+    acc)``. ``ws`` is the dynamic-world ``scenario.WorldState`` (the
+    0-width placeholder when no scenario is attached — it passes through
+    untouched); its transitions fold keys from the absolute round index,
+    so world trajectories are independent of the dispatch grouping R.
     ``acc`` is the (sim_time, comm_time, idle_time, bytes_sent) f32
     accumulator vector.
     """
+    from repro.core import scenario as scenario_mod
     from repro.core.schedule import ScheduleSpec
     sched = schedule if schedule is not None else ScheduleSpec.from_strategy(st)
+    scn = scenario if scenario_mod.is_active(scenario) else None
+    dirs = (jnp.asarray(drift_dirs)
+            if (scn is not None and scn.drift is not None) else None)
     N, K, R = int(num_clients), int(select_k), int(rounds_per_dispatch)
     theta_on = st.theta is not None
     payload = float(wire_bytes if (st.quantize_updates and wire_bytes)
@@ -182,31 +198,49 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
 
     def round_body(carry, r, data, sizes, speed, latency, dropout_p,
                    base_key):
-        params_mat, ref_mat, ref_valid, ctl, acc = carry
+        params_mat, ref_mat, ref_valid, ctl, ws, acc = carry
         sim_t, comm_t, idle_t, bytes_s = acc
         key = jax.random.fold_in(base_key, r)
         k_eps, k_pick, k_drop, k_data = jax.random.split(key, 4)
 
+        # --- dynamic world: this round's WorldState ---------------------
+        if scn is not None:
+            ws = scenario_mod.world_step(ws, r, scn, N)
+
         # --- selection: fixed-width top-k cohort ------------------------
+        # (churned-out clients score -inf so they are only picked when
+        # fewer than K clients are live; those slots carry zero weight)
         if st.grad_norm_selection:
-            cohort = jnp.argsort(-ctl.grad_norm, stable=True)[:K]
+            gn = (ctl.grad_norm if scn is None
+                  else jnp.where(ws.live, ctl.grad_norm, -jnp.inf))
+            cohort = jnp.argsort(-gn, stable=True)[:K]
         elif st.selection and K < N:
+            scores = control.score(ctl)
+            if scn is not None:
+                scores = jnp.where(ws.live, scores, -jnp.inf)
             cohort = control.select_topk_epsilon(
-                control.score(ctl), K, epsilon,
+                scores, K, epsilon,
                 eps_u=jax.random.uniform(k_eps, (K,)),
-                pick_u=jax.random.uniform(k_pick, (K,)))
+                pick_u=jax.random.uniform(k_pick, (K,)),
+                live=None if scn is None else ws.live)
         else:
             cohort = jnp.arange(K)
+        live_c = (jnp.ones((K,), bool) if scn is None else ws.live[cohort])
         # --- dropout draws (§IV-C fault model) --------------------------
-        failed = jax.random.uniform(k_drop, (K,)) < dropout_p[cohort]
+        drop_p = dropout_p[cohort]
+        if scn is not None and scn.dropout is not None:
+            drop_p = drop_p * ws.dropout_scale
+        failed = jax.random.uniform(k_drop, (K,)) < drop_p
+        if scn is not None:
+            failed = failed & live_c      # absent clients cannot fail
         if st.checkpointing:
-            active = jnp.ones((K,), bool)
+            active = live_c
             delay = jnp.where(
                 failed, jnp.where(ctl.has_ckpt[cohort],
                                   jnp.float32(recovery_time),
                                   jnp.float32(restart_time)), 0.0)
         else:
-            active = ~failed
+            active = ~failed & live_c
             delay = jnp.zeros((K,), jnp.float32)
 
         # --- cohort batches: on-device gather + index sampling ----------
@@ -215,6 +249,9 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
                                  sz[:, None, None])
         batch = {name: leaf[cohort[:, None, None], idx]
                  for name, leaf in data.items()}
+        if dirs is not None:
+            batch = scenario_mod.apply_drift(batch, ws.drift_amp, dirs,
+                                             drift_label)
 
         # --- local training: vmap-of-scan over the cohort ---------------
         params = arena.unpack(params_mat)
@@ -222,6 +259,9 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
                     else jnp.ones((K,), jnp.float32))
         deltas, losses = _train_cohort(cfg, opt, arena, params, batch,
                                        lr_scale)
+        if scn is not None and scn.byzantine is not None:
+            # corruption BEFORE wire compression and θ scoring
+            deltas = deltas * ws.byz_factor[cohort][:, None, None]
         new_ef = ctl.ef
         if st.quantize_updates:
             ef_cohort = arena_ops.cohort_gather(ctl.ef, cohort)
@@ -251,7 +291,13 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
                     + steps_f * b_eff * comm.t_sample)
                    / jnp.maximum(speed[cohort], 1e-3))
         msg_bytes = jnp.where(sent, payload, beacon)
-        transfer = latency[cohort] + msg_bytes / comm.bandwidth
+        if scn is not None and scn.links is not None:
+            # link-quality walk re-prices this round's transfer
+            transfer = (latency[cohort] * ws.lat_scale[cohort]
+                        + msg_bytes / (comm.bandwidth
+                                       * ws.bw_scale[cohort]))
+        else:
+            transfer = latency[cohort] + msg_bytes / comm.bandwidth
         arrive = delay + train_t + transfer          # rel. to round start
         n_active = active.sum().astype(jnp.int32)
         n_sent = sent.sum().astype(jnp.int32)
@@ -312,25 +358,30 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
 
         loss_mean = (jnp.sum(jnp.where(active, losses, 0.0))
                      / jnp.maximum(n_active.astype(jnp.float32), 1.0))
+        # under churn the paper's acceptance-rate denominator is the
+        # participating cohort (the host engines' len(selected)), not
+        # the static cohort width
+        denom = (jnp.float32(K) if scn is None or scn.churn is None
+                 else jnp.maximum(live_c.sum().astype(jnp.float32), 1.0))
         metrics = {
             "sim_time": sim_t, "comm_time": comm_t, "idle_time": idle_t,
             "bytes_sent": bytes_s,
             "updates_applied": updates_applied,
-            "accept_rate": (n_sent.astype(jnp.float32) / jnp.float32(K)),
+            "accept_rate": (n_sent.astype(jnp.float32) / denom),
             "loss": loss_mean,
             "n_failures": failed.sum().astype(jnp.int32),
         }
         acc = jnp.stack([sim_t, comm_t, idle_t, bytes_s])
-        return (params_mat, ref_mat, ref_valid, ctl, acc), metrics
+        return (params_mat, ref_mat, ref_valid, ctl, ws, acc), metrics
 
     @jax.jit
-    def run(params_mat, ref_mat, ref_valid, ctl, data, sizes, speed,
+    def run(params_mat, ref_mat, ref_valid, ctl, ws, data, sizes, speed,
             latency, dropout_p, base_key, round0, acc):
         body = functools.partial(round_body, data=data, sizes=sizes,
                                  speed=speed, latency=latency,
                                  dropout_p=dropout_p, base_key=base_key)
         rounds = round0 + jnp.arange(R, dtype=jnp.int32)
-        carry0 = (params_mat, ref_mat, ref_valid, ctl, acc)
+        carry0 = (params_mat, ref_mat, ref_valid, ctl, ws, acc)
         return jax.lax.scan(lambda c, r: body(c, r), carry0, rounds)
 
     return run

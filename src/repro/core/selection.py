@@ -46,8 +46,16 @@ class AdaptiveClientSelector:
         timeliness = 1.0 / (1.0 + r.round_time)
         return r.availability * (0.5 + 0.5 * r.pass_rate) * timeliness
 
-    def select(self, k: int) -> List[int]:
-        cids = list(self.records)
+    def select(self, k: int, live=None) -> List[int]:
+        """Top-k + ε-greedy selection. ``live`` (optional bool mask by
+        cid) restricts both the top-k and the exploration pool to the
+        currently-live roster (scenario churn) — the same pre-selection
+        masking the device control plane applies, so every execution
+        path fills its cohort from the same candidate set. ``live=None``
+        leaves the historical draw sequence untouched."""
+        cids = [c for c in self.records if live is None or live[c]]
+        if not cids:
+            return []
         scores = np.array([self.score(c) for c in cids])
         order = list(np.argsort(-scores))
         chosen = [cids[i] for i in order[:k]]

@@ -1,0 +1,346 @@
+"""Cross-engine differential test harness.
+
+One reusable matrix replaces the ad-hoc per-PR equivalence tests: any
+``(ExperimentSpec, scenario)`` cell executes across every execution path
+
+    loop       — engine="sim", the per-client reference loop
+    megastep   — engine="sim", one compiled cohort dispatch per round
+    scanned1/4 — engine="sim", device control plane, R rounds per lax.scan
+    spmd       — engine="spmd" (where the spec is valid: sync schedule,
+                 no dynamic_batch)
+
+and the harness asserts
+
+  * loop ≡ megastep       — same Generator draw order, so event
+                            accounting is exact and fp trajectories
+                            coincide within vmap-vs-loop reduction order
+                            (the pinned tolerance contract of
+                            tests/test_megastep.py);
+  * scanned4 ≡ scanned1   — per-round keys fold from the absolute round
+                            index, so dispatch grouping changes NOTHING
+                            (bit-exact, accuracy at shared eval rounds);
+  * host ≡ scanned        — on accounting-deterministic specs (no θ, no
+                            dropout, full participation) the event
+                            accounting (sim/comm/idle time, bytes,
+                            updates) must agree across engine families
+                            even though their batch RNGs differ;
+  * invariants            — on EVERY path: monotone comm accounting,
+                            accept_rate ∈ [0,1], and under churn the
+                            mask-conservation bound updates_applied ≤
+                            live-client count per round (the live roster
+                            replayed from the scenario, independent of
+                            any engine);
+  * byzantine rejection   — with a θ strategy, sign-flipped clients'
+                            pass-rate EMAs collapse below every honest
+                            client's (the §IV-C filter provably rejects
+                            them at the source).
+
+Run the whole preset matrix standalone (the CI `scenario-matrix` step):
+
+    PYTHONPATH=src REPRO_SMOKE=1 python -m tests.harness
+
+tests/test_scenarios.py drives the same machinery property-based.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.api import (DataSpec, ExperimentSession, ExperimentSpec,
+                       SpecError, StrategyConfig, WorldSpec, run_experiment)
+from repro.core import scenario as scenario_mod
+
+PATHS = ("loop", "megastep", "scanned1", "scanned4", "spmd")
+PRESETS = ("static", "drift", "churn", "flaky-links", "byzantine")
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+
+def base_spec(scenario=None, *, rounds: int = 6, num_clients: int = 5,
+              dropout_p: float = 0.0, theta: Optional[float] = 0.6,
+              selection: bool = True, select_fraction: float = 1.0,
+              mode: str = "sync", checkpointing: bool = True,
+              n_samples: int = 1200, seed: int = 0,
+              partition: str = "dirichlet",
+              **strategy_overrides) -> ExperimentSpec:
+    """A small differential cell: smoke model, heterogeneous world."""
+    st = StrategyConfig(mode=mode, theta=theta, selection=selection,
+                        select_fraction=select_fraction,
+                        dynamic_batch=False, checkpointing=checkpointing,
+                        batch_size=32, max_samples_per_round=64,
+                        **strategy_overrides)
+    return ExperimentSpec(
+        model="anomaly-mlp-smoke",
+        data=DataSpec(n_samples=n_samples, eval_samples=300,
+                      partition=partition),
+        world=WorldSpec(num_clients=num_clients, profile="heterogeneous",
+                        dropout_p=dropout_p),
+        strategy=st, scenario=scenario, rounds=rounds, seed=seed)
+
+
+def path_spec(spec: ExperimentSpec, path: str) -> ExperimentSpec:
+    """The spec that executes ``spec``'s cell on one execution path."""
+    if path == "loop":
+        return dataclasses.replace(spec, engine="sim", megastep=False,
+                                   rounds_per_dispatch=None)
+    if path == "megastep":
+        return dataclasses.replace(spec, engine="sim", megastep=True,
+                                   rounds_per_dispatch=None)
+    if path in ("scanned1", "scanned4"):
+        return dataclasses.replace(spec, engine="sim", megastep=True,
+                                   rounds_per_dispatch=int(path[-1]))
+    if path == "spmd":
+        return dataclasses.replace(spec, engine="spmd", megastep=True,
+                                   rounds_per_dispatch=None)
+    raise ValueError(f"unknown path {path!r}; expected one of {PATHS}")
+
+
+def spmd_valid(spec: ExperimentSpec) -> bool:
+    """Whether the spmd column exists for this cell (sync schedule, no
+    dynamic_batch — exactly spec._validate_spmd's contract)."""
+    try:
+        path_spec(spec, "spmd").validate()
+        return True
+    except SpecError:
+        return False
+
+
+def valid_paths(spec: ExperimentSpec,
+                paths: Sequence[str] = PATHS) -> list:
+    return [p for p in paths if p != "spmd" or spmd_valid(spec)]
+
+
+def run_cell(spec: ExperimentSpec, path: str):
+    return run_experiment(path_spec(spec, path))
+
+
+# ---------------------------------------------------------------------------
+# pairwise equivalence asserts
+# ---------------------------------------------------------------------------
+
+def assert_host_equivalent(loop_res, mega_res) -> None:
+    """loop ≡ megastep: same RNG draw order -> identical event
+    accounting; fp trajectories coincide up to vmap-vs-loop reduction
+    order (the tests/test_megastep.py tolerance contract)."""
+    assert len(loop_res.records) == len(mega_res.records)
+    for a, b in zip(mega_res.records, loop_res.records):
+        assert a.round == b.round
+        assert a.updates_applied == b.updates_applied
+        assert a.accept_rate == b.accept_rate
+        assert a.bytes_sent == b.bytes_sent
+        np.testing.assert_allclose(a.sim_time, b.sim_time, rtol=1e-9)
+        np.testing.assert_allclose(a.comm_time, b.comm_time, rtol=1e-9)
+        np.testing.assert_allclose(a.idle_time, b.idle_time,
+                                   rtol=1e-9, atol=1e-12)
+        np.testing.assert_allclose(a.accuracy, b.accuracy, atol=2e-3)
+        np.testing.assert_allclose(a.loss, b.loss, rtol=2e-3)
+
+
+def assert_scan_equivalent(grouped_res, single_res, R: int = 4) -> None:
+    """scanned R>1 ≡ scanned R=1: bit-exact on every scan-computed
+    field; accuracy compared where both groupings measured it."""
+    assert len(grouped_res.records) == len(single_res.records)
+    n = len(grouped_res.records)
+    for i, (a, b) in enumerate(zip(grouped_res.records,
+                                   single_res.records)):
+        for f in ("round", "sim_time", "comm_time", "idle_time",
+                  "bytes_sent", "updates_applied", "accept_rate", "loss"):
+            assert getattr(a, f) == getattr(b, f), \
+                f"scanned grouping changed {f} at round {i}"
+        if (i + 1) % R == 0 or i == n - 1:
+            assert a.accuracy == b.accuracy
+
+
+def accounting_deterministic(spec: ExperimentSpec) -> bool:
+    """True when the cell's event accounting cannot depend on which
+    samples were drawn: no θ decisions (every update transmits), no
+    dropout draws, full participation, static batch shapes. On such
+    cells the host and scanned families must agree on timing/bytes even
+    though their batch RNGs differ."""
+    st = spec.resolve_strategy()
+    if st.theta is not None or st.dynamic_batch or st.quantize_updates:
+        return False
+    if st.grad_norm_selection or (st.selection and st.select_fraction < 1.0):
+        return False
+    if spec.world.dropout_p > 0:
+        return False
+    return True
+
+
+def assert_accounting_close(host_res, scan_res) -> None:
+    """Cross-family accounting parity (f32 scan arithmetic vs f64 host
+    floats -> tolerance, not bits)."""
+    assert len(host_res.records) == len(scan_res.records)
+    for a, b in zip(host_res.records, scan_res.records):
+        assert a.round == b.round
+        assert a.updates_applied == b.updates_applied
+        np.testing.assert_allclose(a.accept_rate, b.accept_rate, rtol=1e-6)
+        np.testing.assert_allclose(a.bytes_sent, b.bytes_sent, rtol=1e-6)
+        np.testing.assert_allclose(a.sim_time, b.sim_time, rtol=1e-3)
+        np.testing.assert_allclose(a.comm_time, b.comm_time, rtol=1e-3)
+        np.testing.assert_allclose(a.idle_time, b.idle_time,
+                                   rtol=1e-3, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# invariants (every path, every scenario)
+# ---------------------------------------------------------------------------
+
+def check_invariants(result, spec: ExperimentSpec, label: str = "") -> None:
+    recs = result.records
+    scn = spec.resolve_scenario()
+    n = spec.world.num_clients
+    views = scenario_mod.replay(scn, n, len(recs))
+    prev = None
+    for rec, wv in zip(recs, views):
+        # monotone comm accounting: cumulative counters never decrease
+        for f in ("sim_time", "comm_time", "idle_time", "bytes_sent"):
+            v = getattr(rec, f)
+            assert np.isfinite(v), f"{label}: {f} not finite at {rec.round}"
+            if prev is not None:
+                assert v >= getattr(prev, f) - 1e-9, \
+                    f"{label}: {f} decreased at round {rec.round}"
+        assert -1e-6 <= rec.accept_rate <= 1.0 + 1e-6, \
+            f"{label}: accept_rate out of [0,1] at round {rec.round}"
+        # mask conservation under churn: the server can never apply more
+        # client updates than clients live that round (live roster
+        # replayed from the scenario itself, independent of the engine)
+        live = int(wv["live"].sum()) if wv is not None else n
+        assert 0 <= rec.updates_applied <= live, \
+            (f"{label}: updates_applied={rec.updates_applied} exceeds "
+             f"live={live} at round {rec.round}")
+        prev = rec
+
+
+# ---------------------------------------------------------------------------
+# byzantine rejection (the θ-filter acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def pass_rate_by_client(spec: ExperimentSpec, path: str) -> np.ndarray:
+    """Run a cell and return the per-client θ pass-rate EMAs the server
+    control plane learned — host selector records on the loop/megastep
+    paths, the device ControlState on scanned/spmd (one public surface:
+    ``ExperimentSession.client_pass_rates``). The spmd engine raises
+    when its control plane is inactive — give the cell selection or
+    dropout."""
+    s = ExperimentSession.open(path_spec(spec, path))
+    s.run(spec.rounds)
+    return np.asarray(s.client_pass_rates())
+
+
+def assert_byzantine_rejected(spec: ExperimentSpec, path: str) -> None:
+    """Sign-flipped clients must be provably rejected by the θ-filter:
+    their pass-rate EMAs collapse below 0.5 AND below every honest
+    client's."""
+    scn = spec.resolve_scenario()
+    assert scn is not None and scn.byzantine is not None \
+        and scn.byzantine.sign_flip, "cell has no sign-flip byzantines"
+    assert spec.resolve_strategy().theta is not None, \
+        "byzantine rejection needs a θ strategy"
+    n_byz = scn.byzantine.n_byz
+    rates = pass_rate_by_client(spec, path)
+    byz, honest = rates[:n_byz], rates[n_byz:]
+    assert byz.max() < 0.5, \
+        f"{path}: byzantine pass-rate {byz} not rejected"
+    assert byz.max() < honest.min(), \
+        f"{path}: byzantine pass-rates {byz} not below honest {honest}"
+
+
+# ---------------------------------------------------------------------------
+# the differential runner
+# ---------------------------------------------------------------------------
+
+def differential(spec: ExperimentSpec,
+                 paths: Optional[Sequence[str]] = None) -> Dict[str, object]:
+    """Execute one (spec, scenario) cell across every requested path and
+    assert the full parity + invariant contract. Returns the per-path
+    ``ExperimentResult``s for further inspection."""
+    spec.validate()
+    paths = valid_paths(spec, paths if paths is not None else PATHS)
+    results = {p: run_cell(spec, p) for p in paths}
+    if "loop" in results and "megastep" in results:
+        assert_host_equivalent(results["loop"], results["megastep"])
+    if "scanned1" in results and "scanned4" in results:
+        assert_scan_equivalent(results["scanned4"], results["scanned1"],
+                               R=4)
+    if accounting_deterministic(spec):
+        host = results.get("megastep") or results.get("loop")
+        scan = results.get("scanned1") or results.get("scanned4")
+        if host is not None and scan is not None:
+            assert_accounting_close(host, scan)
+        if host is not None and "spmd" in results:
+            assert_accounting_close(host, results["spmd"])
+    for p, res in results.items():
+        check_invariants(res, spec, label=p)
+    return results
+
+
+# ---------------------------------------------------------------------------
+# standalone matrix run (the CI `scenario-matrix` smoke step)
+# ---------------------------------------------------------------------------
+
+def matrix_cell(preset: str, *, rounds: int, theta=0.6) -> ExperimentSpec:
+    """The preset's differential cell. Churn/flaky presets get dropout
+    so the fault model and the regime switch both engage; byzantine
+    keeps θ (the rejection mechanism under test); static/drift also run
+    an accounting-deterministic θ=None variant inside main()."""
+    dropout = 0.2 if preset in ("flaky-links", "churn+flaky-links") else 0.0
+    return base_spec(scenario=preset if preset != "static" else None,
+                     rounds=rounds, dropout_p=dropout, theta=theta)
+
+
+def main(argv=None) -> int:
+    smoke = os.environ.get("REPRO_SMOKE") == "1"
+    rounds = 4 if smoke else 8
+    failures = []
+    cells = []
+    for preset in PRESETS:
+        cells.append((preset + "/theta", matrix_cell(preset,
+                                                     rounds=rounds)))
+    # accounting-deterministic variants: host ≡ scanned ≡ spmd timing
+    for preset in ("static", "drift", "churn"):
+        cells.append((preset + "/no-theta",
+                      matrix_cell(preset, rounds=rounds, theta=None)))
+    # the async server family (sim-only column of the matrix)
+    cells.append(("churn/async",
+                  base_spec(scenario="churn", rounds=rounds, mode="async",
+                            alpha0=1.0)))
+    for name, spec in cells:
+        paths = valid_paths(spec)
+        try:
+            differential(spec)
+            print(f"# cell {name:<22} paths={','.join(paths)}  OK")
+        except AssertionError as e:
+            failures.append(name)
+            print(f"# cell {name:<22} FAILED: {e}")
+    # byzantine rejection on every path that can carry it — 8 rounds
+    # even in smoke mode: the 0.8-EMA needs ~4 rejections to provably
+    # cross below 0.5 (1 -> 0.8^k), and round 0 has no reference yet.
+    # IID shards isolate the adversary: on the spmd path (raw per-round
+    # gradients, no local SGD smoothing) extreme non-IID shards can make
+    # HONEST minority clients θ-divergent too, which is a data property,
+    # not the rejection mechanism under test
+    byz = base_spec(scenario="byzantine", rounds=8,
+                    dropout_p=0.05, theta=0.6, partition="iid")
+    for path in valid_paths(byz):
+        try:
+            assert_byzantine_rejected(byz, path)
+            print(f"# byzantine-rejected on {path:<10} OK")
+        except AssertionError as e:
+            failures.append(f"byzantine/{path}")
+            print(f"# byzantine-rejected on {path:<10} FAILED: {e}")
+    if failures:
+        print(f"# scenario-matrix FAILURES: {failures}")
+        return 1
+    print(f"# scenario-matrix: {len(cells)} cells x paths all OK "
+          f"({'smoke' if smoke else 'full'} mode)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,91 @@
+"""Golden-trace regression fixtures for two scenario presets.
+
+Tiny seeded per-round record traces ("drift", "churn+flaky-links" —
+megastep path, 4 clients, 6 rounds) are committed under tests/golden/;
+this test diffs the current engine output against them, so ANY change
+to the world-transition semantics, the event accounting or the seeded
+draw order shows up as a diff instead of silently rewriting history.
+
+The traces use θ=None cells: every field except loss/accuracy is then
+arithmetic over seeded draws and the world trajectory (no filter
+thresholds to flip), so accounting compares at 1e-6 while the learned
+metrics get a cross-platform float tolerance.
+
+Regenerate (ONLY with an intentional, explained semantics change):
+
+    PYTHONPATH=src python -m tests.test_golden --regen
+"""
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+try:
+    import harness                      # pytest puts tests/ on sys.path
+except ModuleNotFoundError:
+    from tests import harness           # `python -m tests.test_golden`
+
+GOLDEN_DIR = pathlib.Path(__file__).with_name("golden")
+REGEN_CMD = "PYTHONPATH=src python -m tests.test_golden --regen"
+PRESETS = {"drift": "drift.json",
+           "churn+flaky-links": "churn_flaky.json"}
+
+# accounting is seeded arithmetic -> tight; loss/accuracy cross XLA
+# reduction orders on different hosts -> measured-quantity tolerances
+TOLERANCES = {"sim_time": dict(rtol=1e-6), "comm_time": dict(rtol=1e-6),
+              "idle_time": dict(rtol=1e-6, atol=1e-9),
+              "bytes_sent": dict(rtol=1e-9),
+              "accept_rate": dict(rtol=1e-9),
+              "loss": dict(rtol=2e-3), "accuracy": dict(atol=0.02)}
+EXACT = ("round", "updates_applied")
+
+
+def golden_spec(preset: str):
+    return harness.base_spec(scenario=preset, rounds=6, num_clients=4,
+                             dropout_p=0.15, theta=None, seed=7)
+
+
+def compute_trace(preset: str) -> dict:
+    res = harness.run_cell(golden_spec(preset), "megastep")
+    return {
+        "preset": preset,
+        "path": "megastep",
+        "regen": REGEN_CMD,
+        "records": [dataclasses.asdict(r) for r in res.records],
+    }
+
+
+@pytest.mark.parametrize("preset", sorted(PRESETS))
+def test_trace_matches_golden(preset):
+    path = GOLDEN_DIR / PRESETS[preset]
+    golden = json.loads(path.read_text())
+    got = compute_trace(preset)
+    assert len(got["records"]) == len(golden["records"])
+    for i, (g, c) in enumerate(zip(golden["records"], got["records"])):
+        for f in EXACT:
+            assert c[f] == g[f], \
+                (f"{preset} round {i}: {f} changed "
+                 f"{g[f]!r} -> {c[f]!r}; if intentional: {REGEN_CMD}")
+        for f, tol in TOLERANCES.items():
+            np.testing.assert_allclose(
+                c[f], g[f], **tol,
+                err_msg=(f"{preset} round {i}: {f} drifted from the "
+                         f"golden trace; if intentional: {REGEN_CMD}"))
+
+
+def regen() -> None:
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    for preset, fname in PRESETS.items():
+        trace = compute_trace(preset)
+        out = GOLDEN_DIR / fname
+        out.write_text(json.dumps(trace, indent=1) + "\n")
+        print(f"wrote {out} ({len(trace['records'])} rounds)")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" not in sys.argv:
+        raise SystemExit(f"usage: {REGEN_CMD}")
+    regen()

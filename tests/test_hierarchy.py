@@ -1,0 +1,223 @@
+"""core/hierarchy.py pod-sync unit tests, pinned to a seeded host oracle.
+
+The hierarchical (cross-pod) selective synchronization was only
+import-covered before: these tests pin (i) the ``sync_every`` gating of
+``maybe_pod_sync``'s lax.cond, (ii) the bootstrap/fallback acceptance
+rules, and (iii) the sign-alignment cross-pod VETO — a pod whose
+aggregate movement disagrees with the global direction is excluded from
+the cross-pod mean — against a pure-numpy reimplementation fed the same
+seeded trajectories (f32-vs-f64 tolerance only).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hierarchy
+
+P = 3                       # pods
+SHAPES = {"w": (4, 2), "b": (3,)}
+
+
+def _tree(fn):
+    return {k: fn(s) for k, s in SHAPES.items()}
+
+
+def _pod_tree(rng, scale=1.0):
+    return {k: jnp.asarray(rng.normal(scale=scale,
+                                      size=(P,) + s).astype(np.float32))
+            for k, s in SHAPES.items()}
+
+
+def _np_tree(tree):
+    return {k: np.asarray(v) for k, v in tree.items()}
+
+
+# ---------------------------------------------------------------------------
+# host oracle (numpy twin of maybe_pod_sync's do_sync branch)
+# ---------------------------------------------------------------------------
+
+def oracle_sync(pod_params, last_global, ref_sign, rounds_since_sync,
+                theta):
+    deltas = {k: pod_params[k] - last_global[k][None] for k in pod_params}
+    total = sum(np.prod(s) for s in SHAPES.values())
+    aligned = np.zeros(P)
+    for k in deltas:
+        eq = (np.sign(deltas[k]).astype(np.int8)
+              == ref_sign[k][None]).reshape(P, -1)
+        aligned += eq.sum(axis=1)
+    ratios = aligned / total
+    passed = (ratios >= theta).astype(np.float32)
+    no_ref = rounds_since_sync == 0
+    mask = passed if (passed.sum() > 0 and not no_ref) \
+        else np.ones(P, np.float32)
+    denom = max(mask.sum(), 1e-9)
+    agg = {k: np.tensordot(mask, deltas[k], axes=(0, 0)) / denom
+           for k in deltas}
+    new_global = {k: last_global[k] + agg[k] for k in agg}
+    new_ref = {k: np.sign(agg[k]).astype(np.int8) for k in agg}
+    metrics = {"synced": 1.0, "pod_accept": float(mask.mean()),
+               "pod_alignment": float(ratios.mean())}
+    return new_global, new_ref, mask, metrics
+
+
+# ---------------------------------------------------------------------------
+# sync_every gating
+# ---------------------------------------------------------------------------
+
+def test_sync_every_gating_and_counter_reset():
+    rng = np.random.default_rng(0)
+    pod = _pod_tree(rng)
+    state = hierarchy.init_pod_sync(jax.tree.map(lambda x: x[0], pod))
+    synced, counts = [], []
+    for _ in range(7):
+        pod, state, m = hierarchy.maybe_pod_sync(pod, state,
+                                                 sync_every=3, theta=0.6)
+        synced.append(int(m["synced"]))
+        counts.append(int(state.rounds_since_sync))
+        # drift the pods between calls so syncs have real deltas
+        pod = jax.tree.map(
+            lambda x: x + jnp.asarray(
+                rng.normal(scale=0.1, size=x.shape).astype(np.float32)),
+            pod)
+    assert synced == [0, 0, 1, 0, 0, 1, 0]
+    assert counts == [1, 2, 0, 1, 2, 0, 1]
+
+
+def test_off_rounds_leave_params_untouched():
+    rng = np.random.default_rng(1)
+    pod = _pod_tree(rng)
+    state = hierarchy.init_pod_sync(jax.tree.map(lambda x: x[0], pod))
+    new_pod, state, m = hierarchy.maybe_pod_sync(pod, state,
+                                                 sync_every=5, theta=0.6)
+    assert m["synced"] == 0.0
+    for a, b in zip(jax.tree.leaves(new_pod), jax.tree.leaves(pod)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# bootstrap: first due sync has no reference -> accept all, broadcast
+# ---------------------------------------------------------------------------
+
+def test_first_sync_accepts_all_pods_and_broadcasts_mean():
+    rng = np.random.default_rng(2)
+    pod = _pod_tree(rng)
+    g0 = jax.tree.map(lambda x: x[0] * 0.0, pod)    # zeros global
+    state = hierarchy.init_pod_sync(g0)
+    new_pod, state, m = hierarchy.maybe_pod_sync(pod, state,
+                                                 sync_every=1, theta=0.6)
+    assert m["synced"] == 1.0 and m["pod_accept"] == 1.0
+    for k in SHAPES:
+        mean = np.asarray(pod[k]).mean(axis=0)
+        got = np.asarray(new_pod[k])
+        for p in range(P):
+            np.testing.assert_allclose(got[p], mean, rtol=1e-5,
+                                       atol=1e-6)
+        np.testing.assert_allclose(np.asarray(state.last_global[k]),
+                                   mean, rtol=1e-5, atol=1e-6)
+    assert int(state.rounds_since_sync) == 0
+
+
+# ---------------------------------------------------------------------------
+# the cross-pod veto, pinned to the host oracle
+# ---------------------------------------------------------------------------
+
+def _establish_ref(seed=3, step=0.5):
+    """One bootstrap sync (+step movement -> ref_sign = +1) followed by
+    one off-round under sync_every=2. The off-round matters: ``no_ref``
+    is ``rounds_since_sync == 0``, which is ALSO true right after every
+    sync reset — the veto can only engage on a sync whose counter is
+    nonzero, i.e. with sync_every >= 2 (documented lax.cond semantics)."""
+    base = _tree(lambda s: jnp.ones(s, jnp.float32))
+    state = hierarchy.init_pod_sync(base)
+    pod = {k: jnp.stack([base[k] + step * (i + 1) for i in range(P)])
+           for k in SHAPES}
+    pod, state, m = hierarchy.maybe_pod_sync(pod, state, sync_every=1,
+                                             theta=0.6)
+    assert m["synced"] == 1.0
+    pod, state, m = hierarchy.maybe_pod_sync(pod, state, sync_every=2,
+                                             theta=0.6)
+    assert m["synced"] == 0.0 and int(state.rounds_since_sync) == 1
+    return pod, state
+
+
+def test_anti_aligned_pod_is_vetoed_matching_oracle():
+    pod, state = _establish_ref()
+    # pods 0/1 keep moving WITH the global direction; pod 2 moves
+    # against it — the sign-alignment test must exclude pod 2
+    moved = {k: pod[k].at[0].add(0.3).at[1].add(0.2).at[2].add(-0.4)
+             for k in SHAPES}
+    exp_global, exp_ref, exp_mask, exp_m = oracle_sync(
+        _np_tree(moved), _np_tree(state.last_global),
+        _np_tree(state.global_ref_sign), int(state.rounds_since_sync),
+        theta=0.6)
+    np.testing.assert_array_equal(exp_mask, [1.0, 1.0, 0.0])  # the veto
+    new_pod, new_state, m = hierarchy.maybe_pod_sync(
+        moved, state, sync_every=2, theta=0.6)
+    assert m["synced"] == 1.0
+    np.testing.assert_allclose(float(m["pod_accept"]),
+                               exp_m["pod_accept"], rtol=1e-6)
+    np.testing.assert_allclose(float(m["pod_alignment"]),
+                               exp_m["pod_alignment"], rtol=1e-5)
+    for k in SHAPES:
+        np.testing.assert_allclose(np.asarray(new_state.last_global[k]),
+                                   exp_global[k], rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(
+            np.asarray(new_state.global_ref_sign[k]), exp_ref[k])
+        for p in range(P):
+            np.testing.assert_allclose(np.asarray(new_pod[k])[p],
+                                       exp_global[k], rtol=1e-5,
+                                       atol=1e-6)
+
+
+def test_all_pods_vetoed_falls_back_to_accept_all():
+    pod, state = _establish_ref()
+    moved = {k: pod[k] - 0.3 for k in SHAPES}       # everyone anti-aligned
+    exp_global, _ref, exp_mask, exp_m = oracle_sync(
+        _np_tree(moved), _np_tree(state.last_global),
+        _np_tree(state.global_ref_sign), int(state.rounds_since_sync),
+        theta=0.6)
+    np.testing.assert_array_equal(exp_mask, np.ones(P))
+    _pod, new_state, m = hierarchy.maybe_pod_sync(moved, state,
+                                                  sync_every=2, theta=0.6)
+    assert m["synced"] == 1.0 and float(m["pod_accept"]) == 1.0
+    assert float(m["pod_alignment"]) < 0.6          # genuinely misaligned
+    for k in SHAPES:
+        np.testing.assert_allclose(np.asarray(new_state.last_global[k]),
+                                   exp_global[k], rtol=1e-5, atol=1e-6)
+
+
+def test_seeded_trajectory_matches_oracle():
+    """A 6-call random walk (syncs every 2nd call) replayed against the
+    oracle: states, params and metrics agree at every sync."""
+    rng = np.random.default_rng(4)
+    base = _tree(lambda s: jnp.zeros(s, jnp.float32))
+    state = hierarchy.init_pod_sync(base)
+    pod = {k: jnp.zeros((P,) + s, jnp.float32) for k, s in SHAPES.items()}
+    np_global = _np_tree(state.last_global)
+    np_ref = _np_tree(state.global_ref_sign)
+    count = 0
+    for step in range(6):
+        pod = jax.tree.map(
+            lambda x: x + jnp.asarray(
+                rng.normal(scale=0.2, size=x.shape).astype(np.float32)),
+            pod)
+        due = (count + 1) >= 2
+        if due:
+            np_global, np_ref, _mask, exp_m = oracle_sync(
+                _np_tree(pod), np_global, np_ref, count, theta=0.55)
+        pod, state, m = hierarchy.maybe_pod_sync(pod, state,
+                                                 sync_every=2, theta=0.55)
+        if due:
+            count = 0
+            assert m["synced"] == 1.0
+            np.testing.assert_allclose(float(m["pod_accept"]),
+                                       exp_m["pod_accept"], rtol=1e-6)
+            for k in SHAPES:
+                np.testing.assert_allclose(
+                    np.asarray(state.last_global[k]), np_global[k],
+                    rtol=1e-4, atol=1e-5)
+                np.testing.assert_array_equal(
+                    np.asarray(state.global_ref_sign[k]), np_ref[k])
+        else:
+            count += 1
+            assert m["synced"] == 0.0

@@ -1,0 +1,289 @@
+"""Dynamic-world scenario engine: property-based cross-path parity
+(hypothesis stub -> seeded random sweeps), scenario invariants, and the
+θ-filter byzantine-rejection guarantee.
+
+The heavy pairwise machinery lives in tests/harness.py (also runnable
+standalone as the CI `scenario-matrix` step); these tests drive it with
+RANDOM ScenarioSpecs so every new world transition is born under the
+loop≡megastep≡scanned contract instead of growing its own ad-hoc test.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import harness
+from repro.api import (ByzantineSpec, ChurnSpec, DriftSpec, DropoutSchedule,
+                       ExperimentSpec, LinkSpec, SCENARIO_PRESETS,
+                       ScenarioSpec, SpecError, resolve_scenario,
+                       run_experiment)
+from repro.core import scenario as scenario_mod
+
+
+def _scenario(drift_rate, churn_period, leave_frac, link_sigma,
+              dropout_scale, n_byz) -> ScenarioSpec:
+    """Assemble a ScenarioSpec from drawn knobs (0/empty disables)."""
+    return ScenarioSpec(
+        drift=DriftSpec(rate=drift_rate) if drift_rate > 0 else None,
+        churn=(ChurnSpec(period=churn_period, leave_frac=leave_frac)
+               if leave_frac > 0 else None),
+        links=LinkSpec(bw_sigma=link_sigma, lat_sigma=link_sigma)
+        if link_sigma > 0 else None,
+        dropout=(DropoutSchedule(boundaries=(2,),
+                                 scales=(1.0, dropout_scale))
+                 if dropout_scale != 1.0 else None),
+        byzantine=ByzantineSpec(n_byz=n_byz) if n_byz > 0 else None)
+
+
+# ---------------------------------------------------------------------------
+# property: loop ≡ megastep under random dynamic worlds
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(drift_rate=st.floats(0.0, 0.15), churn_period=st.integers(1, 3),
+       leave_frac=st.floats(0.0, 0.5), link_sigma=st.floats(0.0, 0.5),
+       dropout_scale=st.floats(0.5, 3.0), n_byz=st.integers(0, 2))
+def test_host_paths_agree_on_random_scenarios(drift_rate, churn_period,
+                                              leave_frac, link_sigma,
+                                              dropout_scale, n_byz):
+    scn = _scenario(drift_rate, churn_period, leave_frac, link_sigma,
+                    dropout_scale, n_byz)
+    spec = harness.base_spec(scenario=scn, rounds=3, num_clients=4,
+                             dropout_p=0.2, n_samples=900)
+    results = harness.differential(spec, paths=("loop", "megastep"))
+    assert set(results) == {"loop", "megastep"}
+
+
+# ---------------------------------------------------------------------------
+# property: dispatch grouping changes nothing on the scanned path
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(drift_rate=st.floats(0.0, 0.15), leave_frac=st.floats(0.0, 0.5),
+       link_sigma=st.floats(0.0, 0.5), n_byz=st.integers(0, 2))
+def test_scan_grouping_invariant_on_random_scenarios(drift_rate,
+                                                     leave_frac,
+                                                     link_sigma, n_byz):
+    scn = _scenario(drift_rate, 2, leave_frac, link_sigma, 2.0, n_byz)
+    spec = harness.base_spec(scenario=scn, rounds=4, num_clients=4,
+                             dropout_p=0.2, n_samples=900)
+    harness.differential(spec, paths=("scanned1", "scanned4"))
+
+
+# ---------------------------------------------------------------------------
+# property: host ≡ scanned ≡ spmd event accounting when it must be
+# trajectory-independent (no θ, no dropout, full participation)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=4, deadline=None)
+@given(leave_frac=st.floats(0.0, 0.5), link_sigma=st.floats(0.0, 0.5))
+def test_cross_family_accounting_parity(leave_frac, link_sigma):
+    scn = _scenario(0.0, 2, leave_frac, link_sigma, 1.0, 0)
+    # iid shards keep every client above the cohort batch size (the
+    # spmd engine needs ONE rectangular cohort shape)
+    spec = harness.base_spec(scenario=scn, rounds=3, num_clients=4,
+                             theta=None, n_samples=900, partition="iid")
+    harness.differential(spec, paths=("megastep", "scanned1", "spmd"))
+
+
+# ---------------------------------------------------------------------------
+# property: churn mask conservation + byte-accounting invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(period=st.integers(1, 4), leave_frac=st.floats(0.05, 0.6),
+       n=st.integers(2, 9))
+def test_churn_roster_is_conserved_and_rotates(period, leave_frac, n):
+    """The replayed live roster (the harness's engine-independent
+    oracle) keeps a constant live count and rotates membership."""
+    scn = ScenarioSpec(churn=ChurnSpec(period=period,
+                                       leave_frac=leave_frac))
+    views = scenario_mod.replay(scn, n, rounds=4 * period)
+    leave = min(int(round(leave_frac * n)), n - 1)
+    rosters = set()
+    for wv in views:
+        assert int(wv["live"].sum()) == n - leave     # conservation
+        rosters.add(tuple(np.nonzero(~wv["live"])[0]))
+    if leave > 0 and n > 2 * leave:
+        assert len(rosters) > 1                        # membership moves
+
+
+def test_churn_updates_bounded_by_live_count():
+    spec = harness.base_spec(scenario="churn", rounds=6, num_clients=6)
+    res = harness.run_cell(spec, "scanned4")
+    harness.check_invariants(res, spec, label="scanned4")
+    views = scenario_mod.replay(spec.resolve_scenario(), 6,
+                                len(res.records))
+    lives = [int(wv["live"].sum()) for wv in views]
+    assert any(lv < 6 for lv in lives)             # churn actually bites
+    for rec, lv in zip(res.records, lives):
+        assert rec.updates_applied <= lv
+
+
+# ---------------------------------------------------------------------------
+# scenario semantics
+# ---------------------------------------------------------------------------
+
+def test_drift_changes_trajectory_but_round0_is_static():
+    base = harness.base_spec(rounds=3, theta=None)
+    drift = dataclasses.replace(base, scenario="drift")
+    a = run_experiment(base)
+    b = run_experiment(drift)
+    # linear drift has amplitude 0 at round 0 -> identical first round
+    assert a.records[0].loss == b.records[0].loss
+    # ... and a different world afterwards
+    assert a.records[-1].loss != b.records[-1].loss
+    # drift never touches the event accounting
+    for x, y in zip(a.records, b.records):
+        assert x.sim_time == y.sim_time
+        assert x.bytes_sent == y.bytes_sent
+
+
+def test_flaky_links_reprice_comm_time():
+    base = harness.base_spec(rounds=4, theta=None)
+    flaky = dataclasses.replace(
+        base, scenario=ScenarioSpec(links=LinkSpec(bw_sigma=0.5,
+                                                   lat_sigma=0.5)))
+    a = run_experiment(base)
+    b = run_experiment(flaky)
+    assert a.records[-1].comm_time != b.records[-1].comm_time
+    # same roster, same transmissions — only the wire got re-priced
+    for x, y in zip(a.records, b.records):
+        assert x.updates_applied == y.updates_applied
+        assert x.bytes_sent == y.bytes_sent
+
+
+def test_dropout_regime_switch_gates_failures():
+    """scales=(0, 8): failures are impossible before the boundary and
+    near-certain after it (p=0.25·8 clips to 1)."""
+    scn = ScenarioSpec(dropout=DropoutSchedule(boundaries=(3,),
+                                               scales=(0.0, 8.0)))
+    spec = harness.base_spec(scenario=scn, rounds=6, dropout_p=0.25)
+    sim_spec = harness.path_spec(spec, "megastep")
+    from repro.api import ExperimentSession
+    s = ExperimentSession.open(sim_spec)
+    s.run(3)
+    sim = s._driver.sim
+    assert len(sim.failure_log) == 0               # regime 1: p scaled to 0
+    s.run(3)
+    assert len(sim.failure_log) == 3 * 5           # regime 2: p clipped to 1
+
+
+def test_byzantine_rejected_on_host_and_scanned_paths():
+    spec = harness.base_spec(scenario="byzantine", rounds=8,
+                             theta=0.6, partition="iid")
+    for path in ("megastep", "scanned4"):
+        harness.assert_byzantine_rejected(spec, path)
+
+
+def test_byzantine_without_theta_is_not_filtered():
+    """No θ-filter -> corrupted updates land; accept_rate stays 1."""
+    spec = harness.base_spec(scenario="byzantine", rounds=3, theta=None)
+    res = harness.run_cell(spec, "megastep")
+    assert all(r.accept_rate == 1.0 for r in res.records)
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing + validation
+# ---------------------------------------------------------------------------
+
+def test_presets_resolve_and_validate():
+    for name in SCENARIO_PRESETS:
+        scn = resolve_scenario(name)
+        if name == "static":
+            assert scn is None                     # inactive normalizes
+        else:
+            assert scn.validate() is scn
+
+
+def test_inactive_scenario_normalizes_to_none():
+    assert resolve_scenario(ScenarioSpec()) is None
+    assert resolve_scenario(None) is None
+
+
+def test_scenario_validation_collects_issues():
+    bad = ScenarioSpec(
+        drift=DriftSpec(rate=-1.0, mode="warp"),
+        churn=ChurnSpec(period=0, leave_frac=1.0),
+        dropout=DropoutSchedule(boundaries=(5, 3), scales=(1.0,)))
+    spec = harness.base_spec(scenario=bad)
+    with pytest.raises(SpecError) as ei:
+        spec.validate()
+    fields = {i.field for i in ei.value.issues}
+    assert {"scenario.drift.mode", "scenario.drift.rate",
+            "scenario.churn.period", "scenario.churn.leave_frac",
+            "scenario.dropout.scales",
+            "scenario.dropout.boundaries"} <= fields
+
+
+def test_all_byzantine_world_rejected():
+    """n_byz must leave at least one honest client (the θ-filter has no
+    honest majority to form a reference otherwise)."""
+    spec = harness.base_spec(
+        scenario=ScenarioSpec(byzantine=ByzantineSpec(n_byz=5)),
+        num_clients=5)
+    with pytest.raises(SpecError, match="n_byz"):
+        spec.validate()
+    dataclasses.replace(
+        spec, scenario=ScenarioSpec(
+            byzantine=ByzantineSpec(n_byz=4))).validate()
+
+
+def test_unknown_preset_rejected():
+    spec = harness.base_spec(scenario="chaos-monkey")
+    with pytest.raises(SpecError, match="chaos-monkey"):
+        spec.validate()
+
+
+def test_drift_rejected_for_token_datasets():
+    spec = ExperimentSpec(model="qwen2-1.5b",
+                          scenario="drift",
+                          data=dataclasses.replace(
+                              harness.base_spec().data, partition="iid"))
+    with pytest.raises(SpecError, match="drift"):
+        spec.validate()
+
+
+def test_epsilon_exploration_pool_excludes_churned_clients():
+    """The device selector's ε-greedy pool must be live-only (matching
+    the host oracle's live-restricted pool): with ε=1 every slot
+    explores, and no churned-out client may ever be swapped in."""
+    import jax.numpy as jnp
+    from repro.core import control as control_mod
+
+    n, k = 8, 3
+    live = jnp.asarray([True, False, True, False, True, True, True, False])
+    scores = jnp.where(live, jnp.linspace(1.0, 0.1, n), -jnp.inf)
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        cohort = control_mod.select_topk_epsilon(
+            scores, k, epsilon=1.0,
+            eps_u=jnp.asarray(rng.random(k), jnp.float32),
+            pick_u=jnp.asarray(rng.random(k), jnp.float32), live=live)
+        assert bool(live[cohort].all()), np.asarray(cohort)
+    # live=None keeps the oracle-pinned historical behavior (any client
+    # may be explored)
+    seen = set()
+    for _ in range(20):
+        cohort = control_mod.select_topk_epsilon(
+            scores, k, epsilon=1.0,
+            eps_u=jnp.asarray(rng.random(k), jnp.float32),
+            pick_u=jnp.asarray(rng.random(k), jnp.float32))
+        seen.update(np.asarray(cohort).tolist())
+    assert seen - {0, 2, 4, 5, 6}          # dead ids reachable w/o mask
+
+
+def test_world_step_is_grouping_independent():
+    """The world trajectory is a function of the absolute round index:
+    replaying rounds one-by-one equals any chunked replay."""
+    scn = SCENARIO_PRESETS["dynamic"]
+    a = scenario_mod.replay(scn, 6, rounds=8)
+    ws = scenario_mod.init_world(scn, 6)
+    for r in range(8):
+        ws = scenario_mod.world_step(ws, r, scn, 6)
+        if r in (3, 7):
+            wv = scenario_mod.host_view(ws)
+            for k, v in a[r].items():
+                np.testing.assert_array_equal(v, wv[k], err_msg=k)

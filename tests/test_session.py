@@ -102,6 +102,49 @@ def test_resume_bit_exact_spmd(tmp_path):
     _resume_case(_spmd_spec(), k=3, tmp_path=tmp_path)
 
 
+# ---------------------------------------------------------------------------
+# dynamic-world scenarios: checkpoint/restore mid-drift (WorldState is
+# part of the serialized engine state on every path)
+# ---------------------------------------------------------------------------
+
+def test_resume_bit_exact_sim_scenario_megastep(tmp_path):
+    # checkpoint at k=3 of 6: the drift amplitude is mid-ramp, the link
+    # walk mid-trajectory and the churn roster mid-rotation — a resumed
+    # run must replay the identical world
+    _resume_case(_sim_spec(scenario="dynamic"), k=3, tmp_path=tmp_path)
+
+
+def test_resume_bit_exact_sim_scenario_loop(tmp_path):
+    _resume_case(_sim_spec(scenario="dynamic", megastep=False), k=3,
+                 tmp_path=tmp_path)
+
+
+def test_resume_bit_exact_sim_scenario_scanned_r4(tmp_path):
+    # WorldState rides in the lax.scan carry; a dispatch-boundary
+    # checkpoint must hand the exact carry back to the next dispatch
+    _resume_case(_sim_spec(scenario="dynamic", rounds_per_dispatch=4,
+                           rounds=8), k=4, tmp_path=tmp_path)
+
+
+def test_resume_bit_exact_spmd_scenario(tmp_path):
+    # FLState.world serializes through the driver state_dict
+    _resume_case(_spmd_spec(scenario="dynamic"), k=3, tmp_path=tmp_path)
+
+
+def test_restore_scenario_mismatch_raises(tmp_path):
+    spec = _sim_spec(scenario="dynamic", rounds=2)
+    s = ExperimentSession.open(spec)
+    s.run(2)
+    path = str(tmp_path / "scn.ckpt")
+    s.checkpoint(path)
+    with pytest.raises(CheckpointMismatchError, match="scenario"):
+        ExperimentSession.restore(
+            path, dataclasses.replace(spec, scenario="drift"))
+    with pytest.raises(CheckpointMismatchError, match="scenario"):
+        ExperimentSession.restore(
+            path, dataclasses.replace(spec, scenario=None))
+
+
 def test_resume_scanned_midchunk_trajectory(tmp_path):
     """Checkpointing INSIDE a dispatch group (k not a multiple of R):
     the trajectory — every scan-computed field and the final params —
