@@ -1,0 +1,170 @@
+"""Serving latency/throughput benchmark + CI regression gate (ISSUE 6).
+
+  PYTHONPATH=src python -m benchmarks.serve_bench --json BENCH_serve.json
+  PYTHONPATH=src python -m benchmarks.serve_bench --json /tmp/b.json \
+      --check-against BENCH_serve.json
+
+Times the ``repro.serve.ServeEngine`` scoring loop on the paper's
+detector across fixed power-of-two batch buckets, reporting per-bucket
+p50/p99 request latency and flows/sec, plus the raw jitted
+``mlp_detector.predict`` dispatch rate as the machine-speed reference.
+The engine's efficiency (engine flows/sec over raw flows/sec at the
+largest bucket) isolates queueing + padding + accounting overhead from
+model compute — the ratio the regression gate really guards.
+
+``--check-against`` mirrors ``benchmarks/run.py::_check_regression``:
+per-bucket flows/sec must stay within ``tolerance`` of the committed
+JSON after normalizing out machine speed via the raw-dispatch reference,
+and the benchmark refuses to compare across different measurement
+protocols (buckets / batches / arch) rather than spuriously pass.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+DEFAULT_BUCKETS = (64, 256)
+DEFAULT_BATCHES = 30          # timed micro-batches per bucket
+WARMUP = 3                    # absorbs the per-bucket jit compile
+TOLERANCE = 0.30
+
+
+def _raw_flows_per_sec(cfg, params, batch: int, batches: int) -> float:
+    """Machine-speed reference: the bare jitted predict dispatch, no
+    queue, no padding, no accounting — what the hardware gives."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import mlp_detector
+
+    fn = jax.jit(lambda p, x: mlp_detector.predict(p, x, cfg))
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(batch, cfg.num_features))
+                    .astype(np.float32))
+    fn(params, x).block_until_ready()            # compile
+    t0 = time.perf_counter()
+    for _ in range(batches):
+        out = fn(params, x)
+    out.block_until_ready()
+    return batch * batches / (time.perf_counter() - t0)
+
+
+def bench_serve(json_path: str, buckets=DEFAULT_BUCKETS,
+                batches: int = DEFAULT_BATCHES,
+                check_against: str = None) -> dict:
+    import jax
+    import numpy as np
+
+    from repro.configs import anomaly_mlp
+    from repro.models import api as model_api
+    from repro.serve import ModelSlot, ServeEngine
+
+    cfg = anomaly_mlp.CONFIG
+    params = model_api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+
+    out = {"config": {"arch": cfg.name, "buckets": sorted(buckets),
+                      "batches": batches, "warmup": WARMUP}}
+    biggest = max(buckets)
+    for bucket in sorted(buckets):
+        engine = ServeEngine(ModelSlot(params, model=cfg.name), cfg,
+                             max_batch=bucket)
+        X = rng.normal(size=(bucket, cfg.num_features)).astype(np.float32)
+        for _ in range(WARMUP):                  # compile + warm the jit
+            engine.submit_many(X)
+            engine.drain()
+        engine.reset_stats()     # steady state only — same compiled jit
+        for _ in range(batches):
+            engine.submit_many(X)
+            engine.drain()
+        stats = engine.shutdown()
+        assert stats.dropped == 0 and stats.errors == 0
+        b = stats.by_bucket[bucket]
+        out[f"bucket_{bucket}"] = {
+            "rows": b["rows"], "p50_ms": b["p50_ms"],
+            "p99_ms": b["p99_ms"],
+            "flows_per_sec": b["flows_per_sec"]}
+
+    out["raw"] = {"flows_per_sec": round(
+        _raw_flows_per_sec(cfg, params, biggest, batches), 1)}
+    out["engine_efficiency"] = round(
+        out[f"bucket_{biggest}"]["flows_per_sec"]
+        / out["raw"]["flows_per_sec"], 3)
+
+    with open(json_path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(json.dumps(out, indent=2))
+    print(f"# wrote {json_path}: " + "; ".join(
+        f"bucket {k.split('_')[1]}: "
+        f"{out[k]['flows_per_sec']:.0f} flows/s "
+        f"(p50 {out[k]['p50_ms']:.2f} ms, p99 {out[k]['p99_ms']:.2f} ms)"
+        for k in out if k.startswith("bucket_"))
+        + f"; engine efficiency {out['engine_efficiency']:.0%} of the "
+        f"raw dispatch rate")
+    if check_against:
+        _check_regression(out, check_against)
+    return out
+
+
+def _check_regression(out: dict, committed_path: str,
+                      tolerance: float = TOLERANCE) -> None:
+    """Fail (exit 1) when any bucket's flows/sec drops >``tolerance``
+    below the committed number after machine-speed normalization via the
+    raw jitted-dispatch reference (same idiom as ``run.py``'s sim
+    guard)."""
+    with open(committed_path) as f:
+        committed = json.load(f)
+    proto = ["arch", "buckets", "batches", "warmup"]
+    mismatch = {k: (out["config"].get(k), committed["config"].get(k))
+                for k in proto
+                if out["config"].get(k) != committed["config"].get(k)}
+    if mismatch:
+        raise SystemExit(
+            f"serve-bench config mismatch vs {committed_path}: "
+            f"{mismatch} — run with the committed protocol "
+            f"(--buckets/--batches) to use --check-against")
+    scale = (out["raw"]["flows_per_sec"]
+             / max(committed["raw"]["flows_per_sec"], 1e-9))
+    failures = []
+    for key in sorted(k for k in committed if k.startswith("bucket_")):
+        if key not in out:
+            continue
+        floor = (1.0 - tolerance) * committed[key]["flows_per_sec"] * scale
+        got = out[key]["flows_per_sec"]
+        status = "ok" if got >= floor else "REGRESSION"
+        print(f"# serve-guard [{key}] flows/sec={got:.0f} "
+              f"floor={floor:.0f} (committed="
+              f"{committed[key]['flows_per_sec']:.0f} x machine-scale "
+              f"{scale:.2f} x {1 - tolerance:.2f}) {status}")
+        if got < floor:
+            failures.append(key)
+    if failures:
+        raise SystemExit(
+            f"serve-bench regression >{tolerance:.0%} on: {failures} "
+            f"(see floors above; refresh BENCH_serve.json only with a "
+            f"justified perf change)")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_serve.json", metavar="PATH")
+    ap.add_argument("--buckets", default=",".join(
+        str(b) for b in DEFAULT_BUCKETS),
+        help="comma-separated power-of-two batch buckets to time")
+    ap.add_argument("--batches", type=int, default=DEFAULT_BATCHES)
+    ap.add_argument("--check-against", default=None, metavar="PATH",
+                    help="committed BENCH_serve.json to guard against: "
+                         "fail if any bucket's flows/sec drops >30%% "
+                         "below it (machine-speed normalized via the raw "
+                         "jit dispatch reference)")
+    args = ap.parse_args(argv)
+    buckets = tuple(int(b) for b in args.buckets.split(","))
+    bench_serve(args.json, buckets=buckets, batches=args.batches,
+                check_against=args.check_against)
+
+
+if __name__ == "__main__":
+    main()

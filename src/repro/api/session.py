@@ -38,6 +38,7 @@ observe records afterwards, early-stop takes effect at batch end), while
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import pickle
 import time
@@ -57,6 +58,28 @@ _FINGERPRINT_DOC = ("engine", "model", "strategy", "schedule", "scenario",
                     "data", "world", "comm", "seed", "eval_every",
                     "megastep", "rounds_per_dispatch", "optimizer",
                     "lr_schedule", "eval_fn")
+
+
+def sidecar_path(ckpt_path: str) -> str:
+    """The JSON metadata file written next to every session checkpoint
+    (``<ckpt>.meta.json``) — fingerprint, round counter, wall time —
+    so consumers (``repro.serve.swap``) can validate provenance and
+    staleness WITHOUT unpickling or rebuilding the checkpoint."""
+    return ckpt_path + ".meta.json"
+
+
+def read_sidecar(ckpt_path: str) -> Dict[str, Any]:
+    """Load the checkpoint's sidecar metadata dict. Raises
+    FileNotFoundError with a pointed message when the checkpoint
+    predates sidecar metadata (re-write it with ``checkpoint()``)."""
+    path = sidecar_path(ckpt_path)
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"no sidecar metadata at {path} — the checkpoint predates "
+            "sidecar support (or was moved without it); re-write it via "
+            "ExperimentSession.checkpoint(), which emits both files")
+    with open(path) as f:
+        return json.load(f)
 
 
 class CheckpointMismatchError(ValueError):
@@ -288,7 +311,14 @@ class ExperimentSession:
     # ------------------------------------------------------------------
     def checkpoint(self, path: str) -> str:
         """Serialize the full session state to ``path`` (atomic write).
-        The training data is NOT stored — worlds rebuild from the seed."""
+        The training data is NOT stored — worlds rebuild from the seed.
+
+        A small JSON sidecar (:func:`sidecar_path`: ``<path>.meta.json``)
+        records the spec fingerprint, the absolute round counter and
+        wall time, so serving-side consumers (``repro.serve.swap``) can
+        reject stale or mismatched models with a clear error without
+        unpickling the full checkpoint."""
+        fingerprint = _spec_fingerprint(self.spec)
         try:
             pickle.dumps(self.spec)
             spec_blob = self.spec
@@ -296,7 +326,7 @@ class ExperimentSession:
             spec_blob = None          # unpicklable callables in the spec
         payload = {
             "format": CHECKPOINT_FORMAT,
-            "fingerprint": _spec_fingerprint(self.spec),
+            "fingerprint": fingerprint,
             "spec": spec_blob,
             "records": [dataclasses.asdict(r) for r in self.records],
             "wall_time": self._wall,
@@ -306,4 +336,22 @@ class ExperimentSession:
         with open(tmp, "wb") as f:
             pickle.dump(payload, f)
         os.replace(tmp, path)   # a crash never corrupts the checkpoint
+        meta = {
+            "format": CHECKPOINT_FORMAT,
+            "model": fingerprint["model"],
+            "engine": fingerprint["engine"],
+            "seed": fingerprint["seed"],
+            "rounds_done": self.rounds_done,
+            "wall_time": self._wall,
+            "written_at": time.time(),
+            # tuples inside dataclass asdicts become JSON lists; the
+            # sidecar is provenance metadata, not an equality oracle —
+            # exact fingerprint matching stays in restore()
+            "fingerprint": fingerprint,
+        }
+        mtmp = sidecar_path(path) + ".tmp"
+        with open(mtmp, "w") as f:
+            json.dump(meta, f, indent=2, default=str)
+            f.write("\n")
+        os.replace(mtmp, sidecar_path(path))
         return path

@@ -24,6 +24,13 @@ _MODULES = {
 ASSIGNED_ARCHS = [k for k in _MODULES if k != "anomaly-mlp"]
 
 
+def list_archs():
+    """Sorted public list of registered ``--arch`` ids — the supported
+    way for launchers/CLIs to enumerate architectures (do not reach
+    into ``_MODULES``)."""
+    return sorted(_MODULES)
+
+
 def get_config(name: str, smoke: bool = False) -> ArchConfig:
     if name not in _MODULES:
         raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")

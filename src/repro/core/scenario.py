@@ -400,6 +400,99 @@ def apply_drift(batch: dict, amp, dirs, label_key: str = "y") -> dict:
 
 
 # ---------------------------------------------------------------------------
+# drift DETECTION (serving side): the same machinery, pointed the other way.
+# The simulator above injects distribution shift; repro.serve's online
+# monitor needs to *measure* it on live traffic. A DriftStats summary
+# (per-feature mean/var + score-distribution mean/var) serves both as the
+# training-time reference snapshot and as the streaming serving-time EMA
+# state; drift_stats_update is pure jnp so the serving engine fuses it
+# into the scoring dispatch (one jit per batch bucket, no extra dispatch).
+# ---------------------------------------------------------------------------
+
+class DriftStats(NamedTuple):
+    """Distribution summary: feature moments + anomaly-score moments.
+
+    ``count`` is the number of samples absorbed; a freshly initialized
+    state (count 0) snaps to the first batch it sees, after which
+    updates are exponential moving averages."""
+    feat_mean: jnp.ndarray    # (F,) f32
+    feat_var: jnp.ndarray     # (F,) f32
+    score_mean: jnp.ndarray   # f32 scalar
+    score_var: jnp.ndarray    # f32 scalar
+    count: jnp.ndarray        # f32 scalar — samples absorbed
+
+
+def init_drift_stats(num_features: int) -> DriftStats:
+    z = jnp.zeros((num_features,), jnp.float32)
+    s = jnp.zeros((), jnp.float32)
+    return DriftStats(feat_mean=z, feat_var=jnp.ones_like(z),
+                      score_mean=s, score_var=jnp.ones_like(s), count=s)
+
+
+def reference_snapshot(x, scores) -> DriftStats:
+    """Exact moments of a reference sample — the training-time snapshot
+    the serving monitor compares live traffic against. ``x`` is (N, F)
+    features, ``scores`` (N,) anomaly scores of the SAME samples under
+    the model about to be served."""
+    x = jnp.asarray(x, jnp.float32)
+    s = jnp.asarray(scores, jnp.float32)
+    return DriftStats(
+        feat_mean=x.mean(0), feat_var=x.var(0),
+        score_mean=s.mean(), score_var=s.var(),
+        count=jnp.float32(x.shape[0]))
+
+
+def drift_stats_update(stats: DriftStats, x, scores, mask=None,
+                       decay: float = 0.98) -> DriftStats:
+    """One streaming window's masked EMA update — pure jnp, safe inside
+    jit (the serving engine fuses it into the scoring dispatch).
+
+    ``mask`` flags the real rows of a padded batch bucket (None == all
+    real). A batch absorbing ``m`` samples moves the EMA by
+    ``1 - decay**m`` toward the batch moments, so the state trajectory
+    does not depend on how a stream is chunked into buckets; an all-
+    padding batch is a no-op and the FIRST real batch snaps the state."""
+    x = jnp.asarray(x, jnp.float32)
+    s = jnp.asarray(scores, jnp.float32)
+    if mask is None:
+        mask = jnp.ones(x.shape[:1], jnp.float32)
+    mask = jnp.asarray(mask, jnp.float32)
+    m = mask.sum()
+    denom = jnp.maximum(m, 1.0)
+    bm = (x * mask[:, None]).sum(0) / denom
+    bv = (((x - bm) ** 2) * mask[:, None]).sum(0) / denom
+    sm = (s * mask).sum() / denom
+    sv = (((s - sm) ** 2) * mask).sum() / denom
+    w = 1.0 - jnp.float32(decay) ** m
+    w = jnp.where(m > 0, jnp.where(stats.count > 0, w, 1.0), 0.0)
+    return DriftStats(
+        feat_mean=stats.feat_mean + w * (bm - stats.feat_mean),
+        feat_var=stats.feat_var + w * (bv - stats.feat_var),
+        score_mean=stats.score_mean + w * (sm - stats.score_mean),
+        score_var=stats.score_var + w * (sv - stats.score_var),
+        count=stats.count + m)
+
+
+def drift_statistic(stats: DriftStats, ref: DriftStats,
+                    eps: float = 1e-6) -> jnp.ndarray:
+    """Normalized shift of ``stats`` away from ``ref`` — 0 when the
+    streaming moments match the reference, ~1 when feature means have
+    moved one reference standard deviation on average (or the score
+    distribution has moved equivalently). Pure jnp.
+
+      feat term:  mean_f |mu_f - mu_ref,f| / sqrt(var_ref,f + eps)
+      score term: |s - s_ref| / sqrt(svar_ref + eps)
+
+    The max of the two is reported so either signal alone can trip the
+    monitor (covariate shift without score shift, or vice versa)."""
+    feat = jnp.mean(jnp.abs(stats.feat_mean - ref.feat_mean)
+                    / jnp.sqrt(ref.feat_var + eps))
+    score = (jnp.abs(stats.score_mean - ref.score_mean)
+             / jnp.sqrt(ref.score_var + eps))
+    return jnp.maximum(feat, score)
+
+
+# ---------------------------------------------------------------------------
 # host views (the event-driven engines read the SAME device trajectory)
 # ---------------------------------------------------------------------------
 

@@ -1,10 +1,14 @@
-"""Serving driver: batched prefill + decode loop (inference shapes), or
-batched anomaly scoring for the paper's detector.
+"""Serving driver: batched anomaly scoring through the ``repro.serve``
+engine (the paper's detector), or a batched prefill + decode loop for
+the LM-family architectures.
 
 Examples:
+  PYTHONPATH=src python -m repro.launch.serve --arch anomaly-mlp \
+      --batch 256 --requests 2048
+  PYTHONPATH=src python -m repro.launch.serve --arch anomaly-mlp \
+      --from-checkpoint run.ckpt
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --prompt-len 32 --decode-steps 16 --batch 4
-  PYTHONPATH=src python -m repro.launch.serve --arch anomaly-mlp --batch 256
 """
 from __future__ import annotations
 
@@ -65,36 +69,63 @@ def serve_lm(cfg, batch: int, prompt_len: int, decode_steps: int, seed=0):
     return jnp.concatenate(out, axis=1)
 
 
-def serve_anomaly(cfg, batch: int, seed=0):
+def serve_anomaly(cfg, batch: int, seed=0, requests: int = 0,
+                  checkpoint: str = None):
+    """Batched flow scoring via ``repro.serve.ServeEngine`` — request
+    queue, power-of-two batch buckets, hot-swappable model slot,
+    p50/p99 latency accounting. ``checkpoint`` serves a trained global
+    model from an ``ExperimentSession.checkpoint()`` artifact (sidecar-
+    validated); otherwise parameters initialize fresh."""
     from repro.data import synthetic
-    from repro.models import mlp_detector
-    params = api.init_params(jax.random.PRNGKey(seed), cfg)
-    X, y = synthetic.make_unsw_like(seed, batch, cfg.num_features,
-                                    cfg.num_classes)
-    t0 = time.time()
-    scores = jax.jit(lambda p, x: mlp_detector.predict(p, x, cfg))(
-        params, jnp.asarray(X))
-    scores.block_until_ready()
-    dt = time.time() - t0
-    anomaly_rate = float((jnp.argmax(scores, -1) != 0).mean())
-    print(f"scored {batch} flows in {dt*1e3:.1f} ms "
-          f"({batch/max(dt,1e-9):.0f} flows/s); "
+    from repro.serve import ModelSlot, ServeEngine
+
+    max_batch = 1 << max(0, int(batch) - 1).bit_length()   # next pow2
+    if checkpoint:
+        slot = ModelSlot(api.init_params(jax.random.PRNGKey(seed), cfg),
+                         model=cfg.name)
+        slot.publish_checkpoint(checkpoint)
+    else:
+        slot = ModelSlot(api.init_params(jax.random.PRNGKey(seed), cfg),
+                         model=cfg.name)
+    engine = ServeEngine(slot, cfg, max_batch=max_batch)
+    n = requests or max_batch * 4
+    X, _y = synthetic.make_unsw_like(seed, n, cfg.num_features,
+                                     cfg.num_classes)
+    responses = []
+    for i in range(0, n, max_batch):
+        engine.submit_many(X[i:i + max_batch])
+        responses.extend(engine.pump())
+    stats = engine.shutdown()
+    anomaly_rate = float(np.mean(
+        [np.argmax(r.probs) != 0 for r in responses]))
+    version = responses[-1].model_version if responses else 0
+    print(f"scored {stats.served} flows in {stats.busy_seconds*1e3:.1f} ms "
+          f"({stats.flows_per_sec:.0f} flows/s, p50 {stats.p50_ms:.2f} ms, "
+          f"p99 {stats.p99_ms:.2f} ms, model v{version}); "
           f"flagged {anomaly_rate:.1%} as attack classes")
-    return scores
+    return stats
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="anomaly-mlp",
-                    choices=list(registry._MODULES))
+                    choices=registry.list_archs())
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--decode-steps", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="anomaly serving: total flows to score "
+                         "(default 4 batches)")
+    ap.add_argument("--from-checkpoint", default=None, metavar="PATH",
+                    help="anomaly serving: hot-load the global model "
+                         "from an ExperimentSession checkpoint "
+                         "(validated against its sidecar metadata)")
     args = ap.parse_args(argv)
     cfg = registry.get_config(args.arch, smoke=args.smoke)
     if cfg.family == "mlp":
-        serve_anomaly(cfg, args.batch)
+        serve_anomaly(cfg, args.batch, requests=args.requests,
+                      checkpoint=args.from_checkpoint)
     else:
         serve_lm(cfg, args.batch, args.prompt_len, args.decode_steps)
     return 0

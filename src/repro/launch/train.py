@@ -63,7 +63,7 @@ def make_batch_fn(cfg, clients: int, per_client: int, seq: int, seed=0):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="anomaly-mlp",
-                    choices=list(registry._MODULES))
+                    choices=registry.list_archs())
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--clients", type=int, default=4)

@@ -1,0 +1,22 @@
+"""repro.serve — continuous-federation serving for the global detector.
+
+The serving layer that closes the paper's loop: train a global model
+(``repro.api``), serve it as a batched streaming scorer
+(:class:`ServeEngine`), watch live traffic for distribution shift
+(:class:`DriftMonitor`, reusing ``core/scenario.py``'s drift machinery
+as the detector), and when shift persists, re-federate and hot-swap the
+refreshed checkpoint in without dropping a request (:class:`Refederator`
++ :class:`ModelSlot`). See README "Serving" and
+``examples/continuous_federation.py`` for the full loop.
+"""
+from repro.serve.engine import Response, ServeEngine, ServeStats
+from repro.serve.federate import Refederator
+from repro.serve.monitor import DriftMonitor
+from repro.serve.swap import (ModelSlot, ModelVersion, ServeModelError,
+                              StaleCheckpointError)
+
+__all__ = [
+    "ServeEngine", "Response", "ServeStats",
+    "ModelSlot", "ModelVersion", "ServeModelError", "StaleCheckpointError",
+    "DriftMonitor", "Refederator",
+]

@@ -1,0 +1,313 @@
+"""Batched streaming inference engine for the global anomaly detector.
+
+The train side of the repo produces a global model; this is the *serve*
+side: a request queue + micro-batching scoring loop that turns
+individual flow-scoring requests into fixed-shape batched dispatches.
+
+Design points (ISSUE 6 tentpole):
+
+- **Power-of-two batch buckets.** A micro-batch of ``n`` requests is
+  padded up to the next power of two (capped at ``max_batch``), so every
+  shape the jitted scorer ever sees is one of ``log2(max_batch)+1``
+  buckets — each compiles exactly once and then hits the jit cache.
+  Padded tail rows are masked out of responses AND out of the drift
+  monitor's statistics.
+- **Fused drift monitoring.** When a :class:`~repro.serve.monitor.
+  DriftMonitor` is attached, its pure-jnp EMA update runs INSIDE the
+  scoring dispatch (one jit per bucket, zero extra dispatches); only the
+  scalar statistic comes back to the host for the trigger policy.
+- **Hot-swap at batch boundaries.** Every pump acquires
+  ``(params, version)`` from the :class:`~repro.serve.swap.ModelSlot`
+  ONCE — a batch never mixes models, a staged publish flips in O(1)
+  between batches, and every response is stamped with the version that
+  scored it. Nothing is ever dropped on a swap: requests queued across
+  a publish are scored by whichever model is active when their batch
+  runs.
+- **Latency/throughput accounting.** Per-request enqueue->response
+  latency feeds p50/p99 percentiles (overall and per bucket) and
+  flows/sec; ``benchmarks/serve_bench.py`` commits these to
+  ``BENCH_serve.json`` behind a CI regression gate.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import mlp_detector
+from repro.serve.swap import ModelSlot
+
+
+@dataclasses.dataclass(frozen=True)
+class Response:
+    """One scored request."""
+    request_id: int
+    probs: np.ndarray          # (num_classes,) class probabilities
+    score: float               # anomaly score: 1 - P(class 0 / Normal)
+    model_version: int         # ModelSlot version that scored it
+    latency: float             # seconds, submit -> response
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeStats:
+    submitted: int
+    served: int
+    pending: int
+    dropped: int               # zero by construction; reported to prove it
+    errors: int
+    swaps: int                 # model flips observed by the scoring loop
+    p50_ms: float
+    p99_ms: float
+    flows_per_sec: float       # served rows / busy (scoring) seconds
+    busy_seconds: float
+    by_bucket: Dict[int, dict]  # bucket -> {count, p50_ms, p99_ms,
+    #                                        flows_per_sec}
+
+
+def _percentile(lat: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(lat), q)) if lat else 0.0
+
+
+class ServeEngine:
+    """Request-queue + micro-batching scoring loop.
+
+    The engine is single-consumer (one thread calls :meth:`pump` /
+    :meth:`drain`) but multi-producer: :meth:`submit` is thread-safe, as
+    is a background thread publishing models into the slot. ``cfg`` is
+    an mlp-family ``ArchConfig`` (the paper's detector); ``score_fn``
+    overrides the default ``mlp_detector.predict`` scorer with any
+    ``(params, x) -> (B, num_classes) probs`` callable.
+    """
+
+    def __init__(self, slot: ModelSlot, cfg, *, max_batch: int = 256,
+                 monitor=None, score_fn: Optional[Callable] = None,
+                 now: Callable[[], float] = time.perf_counter):
+        if max_batch < 1 or (max_batch & (max_batch - 1)) != 0:
+            raise ValueError(
+                f"max_batch must be a power of two >= 1, got {max_batch} "
+                "(batch buckets are powers of two so every shape hits a "
+                "cached jit)")
+        self.slot = slot
+        self.cfg = cfg
+        self.max_batch = int(max_batch)
+        self.monitor = monitor
+        self.now = now
+        self._now0 = now()
+        predict = score_fn or (lambda p, x: mlp_detector.predict(p, x, cfg))
+
+        if monitor is None:
+            def _scorer(params, x):
+                probs = predict(params, x)
+                return probs, 1.0 - probs[:, 0]
+            self._scorer = jax.jit(_scorer)
+        else:
+            # the monitor's state AND reference are arguments (not trace
+            # constants) so a post-swap rearm() is honored by buckets
+            # that were already compiled
+            def _scorer_mon(params, mstate, ref, x, mask):
+                probs = predict(params, x)
+                scores = 1.0 - probs[:, 0]
+                mstate, stat = monitor.step(mstate, ref, x, scores,
+                                            mask=mask)
+                return probs, scores, mstate, stat
+            self._scorer = jax.jit(_scorer_mon)
+
+        self._lock = threading.Lock()
+        self._queue: collections.deque = collections.deque()
+        self._next_id = 0
+        self._closed = False
+        self.on_trigger: Optional[Callable[[], Any]] = None
+
+        self.submitted = 0
+        self.served = 0
+        self.errors = 0
+        self._busy = 0.0
+        self._latencies: List[float] = []
+        self._by_bucket: Dict[int, dict] = {}
+        self._versions_served: set = set()
+        self._swaps_seen = 0
+        self._last_version: Optional[int] = None
+
+    # ------------------------------------------------------------------
+    # producers
+    # ------------------------------------------------------------------
+    def submit(self, x) -> int:
+        """Enqueue one flow (``(num_features,)``) for scoring; returns
+        its request id. Raises RuntimeError after :meth:`shutdown`."""
+        x = np.asarray(x, np.float32)
+        if x.shape != (self.cfg.num_features,):
+            raise ValueError(
+                f"expected one flow of shape ({self.cfg.num_features},), "
+                f"got {x.shape}")
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(
+                    "ServeEngine is shut down — no new requests accepted")
+            rid = self._next_id
+            self._next_id += 1
+            self.submitted += 1
+            self._queue.append((rid, x, self.now()))
+        return rid
+
+    def submit_many(self, X) -> List[int]:
+        """Enqueue each row of ``(n, num_features)`` — one request per
+        flow (micro-batching regroups them into buckets)."""
+        return [self.submit(row) for row in np.asarray(X, np.float32)]
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    # ------------------------------------------------------------------
+    # the scoring loop
+    # ------------------------------------------------------------------
+    def bucket_for(self, n: int) -> int:
+        """Smallest power-of-two bucket holding ``n`` requests (<= the
+        ``max_batch`` cap, since pumps never take more than that)."""
+        if not 1 <= n <= self.max_batch:
+            raise ValueError(f"n={n} outside [1, {self.max_batch}]")
+        return 1 << (n - 1).bit_length()
+
+    def pump(self) -> List[Response]:
+        """Score ONE micro-batch: flip in any staged model, take up to
+        ``max_batch`` queued requests, pad to the power-of-two bucket,
+        dispatch, stamp responses. Returns [] when the queue is empty."""
+        with self._lock:
+            take = min(len(self._queue), self.max_batch)
+            reqs = [self._queue.popleft() for _ in range(take)]
+        if not reqs:
+            return []
+        t0 = self.now()
+        params, meta = self.slot.acquire()
+        if self._last_version is not None \
+                and meta.version != self._last_version:
+            self._swaps_seen += 1
+        self._last_version = meta.version
+        n = len(reqs)
+        bucket = self.bucket_for(n)
+        xpad = np.zeros((bucket, self.cfg.num_features), np.float32)
+        for i, (_rid, x, _t) in enumerate(reqs):
+            xpad[i] = x
+        fired = False
+        try:
+            if self.monitor is None:
+                probs, scores = self._scorer(params, jnp.asarray(xpad))
+            else:
+                mask = np.zeros((bucket,), np.float32)
+                mask[:n] = 1.0
+                probs, scores, mstate, stat = self._scorer(
+                    params, self.monitor.state, self.monitor.reference,
+                    jnp.asarray(xpad), jnp.asarray(mask))
+            probs = np.asarray(probs)        # device sync point
+            scores = np.asarray(scores)
+        except Exception:
+            with self._lock:
+                self.errors += n
+            raise
+        t_done = self.now()
+        if self.monitor is not None:
+            fired = self.monitor.observe(mstate, stat)
+
+        out = []
+        lats = []
+        for i, (rid, _x, t_in) in enumerate(reqs):
+            lat = t_done - t_in
+            lats.append(lat)
+            out.append(Response(request_id=rid, probs=probs[i],
+                                score=float(scores[i]),
+                                model_version=meta.version, latency=lat))
+        dt = t_done - t0
+        with self._lock:
+            self.served += n
+            self._busy += dt
+            self._latencies.extend(lats)
+            self._versions_served.add(meta.version)
+            b = self._by_bucket.setdefault(
+                bucket, {"count": 0, "rows": 0, "seconds": 0.0,
+                         "latencies": []})
+            b["count"] += 1
+            b["rows"] += n
+            b["seconds"] += dt
+            b["latencies"].extend(lats)
+        if fired and self.on_trigger is not None:
+            self.on_trigger()
+        return out
+
+    def drain(self) -> List[Response]:
+        """Pump until the queue is empty (requests submitted by other
+        threads DURING the drain are served too)."""
+        out: List[Response] = []
+        while self.pending:
+            out.extend(self.pump())
+        return out
+
+    def shutdown(self) -> ServeStats:
+        """Drain every queued request, then refuse new submissions —
+        the zero-dropped-requests guarantee is checkable afterwards as
+        ``stats().served == stats().submitted``."""
+        while True:
+            with self._lock:
+                if not self._queue:
+                    self._closed = True
+                    break
+            self.pump()
+        return self.stats()
+
+    # ------------------------------------------------------------------
+    # accounting
+    # ------------------------------------------------------------------
+    def reset_stats(self) -> None:
+        """Zero the latency/throughput accounting (e.g. after a warmup
+        pass, so compile time stays out of steady-state percentiles).
+        Model versions, swap counters and the request-id sequence are
+        preserved. Call only with an empty queue — in-flight requests
+        submitted before a reset would count as served-but-never-
+        submitted."""
+        with self._lock:
+            if self._queue:
+                raise RuntimeError(
+                    f"reset_stats with {len(self._queue)} requests "
+                    "queued — drain first")
+            self.submitted = 0
+            self.served = 0
+            self.errors = 0
+            self._busy = 0.0
+            self._latencies = []
+            self._by_bucket = {}
+
+    def stats(self) -> ServeStats:
+        with self._lock:
+            lat = list(self._latencies)
+            busy = self._busy
+            by_bucket = {
+                k: {"count": v["count"], "rows": v["rows"],
+                    "p50_ms": round(_percentile(v["latencies"], 50) * 1e3,
+                                    4),
+                    "p99_ms": round(_percentile(v["latencies"], 99) * 1e3,
+                                    4),
+                    "flows_per_sec": round(
+                        v["rows"] / max(v["seconds"], 1e-9), 1)}
+                for k, v in sorted(self._by_bucket.items())}
+            return ServeStats(
+                submitted=self.submitted, served=self.served,
+                pending=len(self._queue),
+                dropped=self.submitted - self.served - len(self._queue)
+                - self.errors,
+                errors=self.errors, swaps=self._swaps_seen,
+                p50_ms=round(_percentile(lat, 50) * 1e3, 4),
+                p99_ms=round(_percentile(lat, 99) * 1e3, 4),
+                flows_per_sec=round(self.served / max(busy, 1e-9), 1),
+                busy_seconds=round(busy, 4),
+                by_bucket=by_bucket)
+
+    @property
+    def versions_served(self) -> List[int]:
+        with self._lock:
+            return sorted(self._versions_served)

@@ -1,0 +1,115 @@
+"""Re-federation: the drift trigger drives a bounded-rounds
+``ExperimentSession`` and hot-swaps the refreshed checkpoint back in.
+
+This closes the train -> serve -> drift -> re-federate loop: the
+:class:`~repro.serve.monitor.DriftMonitor` fires, the
+:class:`Refederator` runs a fresh federation (optionally on a background
+thread so the serving loop keeps scoring), checkpoints it (which writes
+the validation sidecar), publishes the checkpoint into the
+:class:`~repro.serve.swap.ModelSlot`, and re-arms the monitor with the
+shifted serving distribution as the new reference. The serving engine
+flips the refreshed model in at its next batch boundary — zero requests
+dropped across the whole cycle.
+
+Round accounting: each re-federation session counts its own rounds from
+zero, so the publish passes ``round_base`` = the currently served
+model's round counter — version round indices stay monotone across
+re-federations and the swap layer's staleness gate keeps rejecting
+genuinely old artifacts.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Callable, Optional
+
+from repro.api.session import ExperimentSession
+from repro.serve.swap import ModelSlot
+
+
+class Refederator:
+    """Runs one bounded federation per trigger and publishes the result.
+
+    Parameters
+    ----------
+    slot         : the ModelSlot the serving engine scores from
+    spec_factory : ``trigger_index -> ExperimentSpec`` — each firing
+                   builds the spec for that re-federation (typically
+                   with a data factory reflecting the CURRENT traffic
+                   distribution; its ``rounds`` field bounds the run)
+    ckpt_dir     : where refreshed checkpoints (+ sidecars) land
+    monitor      : re-armed (``adopt_current=True``) after a successful
+                   publish, so the post-swap distribution becomes the
+                   new drift reference; None skips re-arming
+    background   : True runs each federation on a daemon thread (the
+                   serving loop keeps pumping); False runs inline
+    """
+
+    def __init__(self, slot: ModelSlot,
+                 spec_factory: Callable[[int], "object"], *,
+                 ckpt_dir: str, monitor=None, background: bool = True,
+                 on_complete: Optional[Callable] = None):
+        self.slot = slot
+        self.spec_factory = spec_factory
+        self.ckpt_dir = ckpt_dir
+        self.monitor = monitor
+        self.background = background
+        self.on_complete = on_complete
+        self.completed = 0
+        self.fired = 0
+        self.last_error: Optional[BaseException] = None
+        self.last_checkpoint: Optional[str] = None
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        t = self._thread
+        return t is not None and t.is_alive()
+
+    def fire(self) -> bool:
+        """Kick off one re-federation (the engine's ``on_trigger``
+        hook). Returns False — without starting anything — when a run
+        is already in flight: overlapping triggers coalesce."""
+        with self._lock:
+            if self.busy:
+                return False
+            k = self.fired
+            self.fired += 1
+            if self.background:
+                self._thread = threading.Thread(
+                    target=self._run, args=(k,), daemon=True,
+                    name=f"refederate-{k}")
+                self._thread.start()
+                return True
+        self._run(k)
+        return True
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        t = self._thread
+        if t is not None:
+            t.join(timeout)
+
+    # ------------------------------------------------------------------
+    def _run(self, k: int) -> None:
+        try:
+            spec = self.spec_factory(k)
+            session = ExperimentSession.open(spec)
+            session.run(spec.rounds)
+            os.makedirs(self.ckpt_dir, exist_ok=True)
+            path = os.path.join(self.ckpt_dir, f"refederated_{k:03d}.ckpt")
+            session.checkpoint(path)
+            self.last_checkpoint = path
+            # each session counts rounds from zero; base on the served
+            # model's counter so version rounds stay monotone and the
+            # staleness gate still rejects genuinely old artifacts
+            self.slot.publish_checkpoint(
+                path, spec=spec, round_base=self.slot.meta.round_idx)
+            if self.monitor is not None:
+                self.monitor.rearm(adopt_current=True)
+            self.completed += 1
+            if self.on_complete is not None:
+                self.on_complete(k, path)
+        except BaseException as e:   # surfaced via last_error; a failed
+            self.last_error = e      # re-federation must not kill serving
