@@ -15,6 +15,8 @@ from repro.api import (CommModel, DataSpec, ExperimentSpec, WorldSpec,
                        build_world, run_experiment)
 from repro.api.strategies import PRESETS
 from repro.configs import anomaly_mlp
+from repro.core.scenario import DropoutSchedule, ScenarioSpec
+from repro.faults import FaultSpec
 
 # communication model scaled so the sync 10-client baseline lands in the
 # paper's hundreds-of-seconds regime (Table I: 450-950 s). t_launch is the
@@ -25,11 +27,33 @@ UNSW = anomaly_mlp.CONFIG           # 49 features, 10 classes
 ROAD = anomaly_mlp.ROAD_CONFIG      # 32-sample CAN windows, binary
 
 
+# the base profile dropout every fault regime scales from: a regime's
+# effective dropout is BASE_DROPOUT x its DropoutSchedule scale, and the
+# engines draw failure uniforms independently of the threshold, so a
+# scaled schedule reproduces the legacy static dropout_p patterns exactly
+BASE_DROPOUT = 0.1
+
+
+def fault_regime(dropout, seed=0, base=BASE_DROPOUT):
+    """Map a Fig.-4 dropout level onto the ISSUE-7 fault machinery:
+    ``(FaultSpec, ScenarioSpec)`` where the FaultSpec seeds the regime's
+    deterministic fault patterns and the ScenarioSpec's constant
+    DropoutSchedule scale makes the world's effective dropout
+    ``dropout`` (profile ``dropout_p=base`` x ``dropout/base``)."""
+    fault = FaultSpec(seed=seed).validate()
+    scenario = ScenarioSpec(dropout=DropoutSchedule(
+        boundaries=(), scales=(float(dropout) / base,)))
+    return fault, scenario
+
+
 def spec_for(cfg, strategy, num_clients=10, rounds=6, dropout=0.0, seed=0,
              speed_sigma=0.6, comm=None, n=20000, alpha=0.5,
-             strategy_kwargs=None, engine="sim") -> ExperimentSpec:
+             strategy_kwargs=None, engine="sim",
+             scenario=None) -> ExperimentSpec:
     """The benchmarks' shared spec shape (UNSW/ROAD surrogate world,
-    heterogeneous profiles, paper-scaled CommModel)."""
+    heterogeneous profiles, paper-scaled CommModel). ``scenario`` forwards
+    a ``ScenarioSpec`` (or preset name) — dropout REGIMES should ride on
+    it via :func:`fault_regime` rather than on a static ``dropout``."""
     return ExperimentSpec(
         model=cfg,
         data=DataSpec(n_samples=n, eval_samples=4000, alpha=alpha),
@@ -37,7 +61,7 @@ def spec_for(cfg, strategy, num_clients=10, rounds=6, dropout=0.0, seed=0,
                         speed_sigma=speed_sigma),
         comm=comm or COMM, strategy=strategy,
         strategy_kwargs=strategy_kwargs or {}, engine=engine,
-        rounds=rounds, seed=seed)
+        scenario=scenario, rounds=rounds, seed=seed)
 
 
 def run(cfg, strategy, **kw):

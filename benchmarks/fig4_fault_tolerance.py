@@ -1,6 +1,15 @@
 """Paper Fig. 4: fault tolerance across dropout rates 0.1–0.5, ours vs
 CMFL vs ACFL vs FedL2P, averaged over multiple random dropout patterns
-(paper: 100 runs; default here: configurable --runs, lighter on CPU)."""
+(paper: 100 runs; default here: configurable --runs, lighter on CPU).
+
+Each dropout level is a ``common.fault_regime``: a seeded
+``repro.faults.FaultSpec`` naming the regime plus a ``ScenarioSpec``
+whose constant ``DropoutSchedule`` scale delivers the level's effective
+dropout (profile base x scale). The engines draw failure uniforms
+independently of the threshold, so this reproduces the legacy static
+``dropout_p`` patterns — and the figure — exactly, while routing the
+fault model through the same scenario machinery the chaos suite
+exercises."""
 from __future__ import annotations
 
 import numpy as np
@@ -11,6 +20,7 @@ from benchmarks import common
 def run(dropouts=(0.1, 0.3, 0.5), runs=3, rounds=8):
     rows = []
     for p in dropouts:
+        fault, scenario = common.fault_regime(p, seed=100)
         accs = {}
         for name in ["ours", "cmfl", "acfl", "fedl2p"]:
             vals = []
@@ -20,7 +30,9 @@ def run(dropouts=(0.1, 0.3, 0.5), runs=3, rounds=8):
                                                       lr=3e-2,
                                                       local_epochs=2),
                                  num_clients=10, rounds=rounds,
-                                 dropout=p, seed=100 + r)
+                                 dropout=common.BASE_DROPOUT,
+                                 scenario=scenario,
+                                 seed=fault.seed + r)
                 vals.append(np.mean(res.series("accuracy")[-2:]))
             accs[name] = float(np.mean(vals))
         rows.append([p] + [round(accs[n] * 100, 2)

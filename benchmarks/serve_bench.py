@@ -28,6 +28,8 @@ DEFAULT_BUCKETS = (64, 256)
 DEFAULT_BATCHES = 30          # timed micro-batches per bucket
 WARMUP = 3                    # absorbs the per-bucket jit compile
 TOLERANCE = 0.30
+BURST_MULT = 8                # burst offers this x max_batch flows...
+BURST_QUEUE = 4               # ...against a queue_limit of this x
 
 
 def _raw_flows_per_sec(cfg, params, batch: int, batches: int) -> float:
@@ -51,6 +53,42 @@ def _raw_flows_per_sec(cfg, params, batch: int, batches: int) -> float:
     return batch * batches / (time.perf_counter() - t0)
 
 
+def _bench_burst(cfg, params, bucket: int, batches: int) -> dict:
+    """Burst-overload cell (ISSUE 7): each round offers
+    ``BURST_MULT x bucket`` flows against a ``BURST_QUEUE x bucket``
+    admission limit, so the shed rate is a deterministic property of the
+    protocol (not the machine) while p50/p99/flows-per-sec measure the
+    engine's latency for the flows it DID accept under overload."""
+    import numpy as np
+
+    from repro.faults import BurstSpec
+    from repro.serve import ModelSlot, ServeEngine
+
+    burst = BurstSpec(period=1, mult=BURST_MULT)
+    limit = BURST_QUEUE * bucket
+    engine = ServeEngine(ModelSlot(params, model=cfg.name), cfg,
+                         max_batch=bucket, queue_limit=limit)
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(burst.size(0, bucket), cfg.num_features)
+                   ).astype(np.float32)
+    for _ in range(WARMUP):
+        engine.submit_many(X, best_effort=True)
+        engine.drain()
+    engine.reset_stats()
+    for _ in range(batches):
+        engine.submit_many(X, best_effort=True)
+        engine.drain()
+    stats = engine.shutdown()
+    offered = X.shape[0] * batches
+    assert stats.dropped == 0 and stats.errors == 0
+    assert stats.submitted + stats.shed == offered
+    return {"offered": offered, "accepted": stats.submitted,
+            "shed": stats.shed,
+            "shed_rate": round(stats.shed / offered, 4),
+            "p50_ms": stats.p50_ms, "p99_ms": stats.p99_ms,
+            "flows_per_sec": stats.flows_per_sec}
+
+
 def bench_serve(json_path: str, buckets=DEFAULT_BUCKETS,
                 batches: int = DEFAULT_BATCHES,
                 check_against: str = None) -> dict:
@@ -66,7 +104,9 @@ def bench_serve(json_path: str, buckets=DEFAULT_BUCKETS,
     rng = np.random.default_rng(1)
 
     out = {"config": {"arch": cfg.name, "buckets": sorted(buckets),
-                      "batches": batches, "warmup": WARMUP}}
+                      "batches": batches, "warmup": WARMUP,
+                      "burst_mult": BURST_MULT,
+                      "burst_queue": BURST_QUEUE}}
     biggest = max(buckets)
     for bucket in sorted(buckets):
         engine = ServeEngine(ModelSlot(params, model=cfg.name), cfg,
@@ -87,6 +127,7 @@ def bench_serve(json_path: str, buckets=DEFAULT_BUCKETS,
             "p99_ms": b["p99_ms"],
             "flows_per_sec": b["flows_per_sec"]}
 
+    out["burst"] = _bench_burst(cfg, params, biggest, batches)
     out["raw"] = {"flows_per_sec": round(
         _raw_flows_per_sec(cfg, params, biggest, batches), 1)}
     out["engine_efficiency"] = round(
@@ -104,6 +145,11 @@ def bench_serve(json_path: str, buckets=DEFAULT_BUCKETS,
         for k in out if k.startswith("bucket_"))
         + f"; engine efficiency {out['engine_efficiency']:.0%} of the "
         f"raw dispatch rate")
+    print(f"# burst overload (x{BURST_MULT} offered, queue "
+          f"{BURST_QUEUE}x{biggest}): shed rate "
+          f"{out['burst']['shed_rate']:.0%}, accepted flows p99 "
+          f"{out['burst']['p99_ms']:.2f} ms at "
+          f"{out['burst']['flows_per_sec']:.0f} flows/s")
     if check_against:
         _check_regression(out, check_against)
     return out
@@ -117,7 +163,8 @@ def _check_regression(out: dict, committed_path: str,
     guard)."""
     with open(committed_path) as f:
         committed = json.load(f)
-    proto = ["arch", "buckets", "batches", "warmup"]
+    proto = ["arch", "buckets", "batches", "warmup", "burst_mult",
+             "burst_queue"]
     mismatch = {k: (out["config"].get(k), committed["config"].get(k))
                 for k in proto
                 if out["config"].get(k) != committed["config"].get(k)}
@@ -141,6 +188,24 @@ def _check_regression(out: dict, committed_path: str,
               f"{scale:.2f} x {1 - tolerance:.2f}) {status}")
         if got < floor:
             failures.append(key)
+    if "burst" in committed and "burst" in out:
+        # the shed rate is protocol-determined — any change means the
+        # admission path itself changed, so it must match EXACTLY
+        if out["burst"]["shed_rate"] != committed["burst"]["shed_rate"]:
+            print(f"# serve-guard [burst] shed_rate="
+                  f"{out['burst']['shed_rate']} committed="
+                  f"{committed['burst']['shed_rate']} REGRESSION")
+            failures.append("burst.shed_rate")
+        floor = ((1.0 - tolerance)
+                 * committed["burst"]["flows_per_sec"] * scale)
+        got = out["burst"]["flows_per_sec"]
+        status = "ok" if got >= floor else "REGRESSION"
+        print(f"# serve-guard [burst] accepted flows/sec={got:.0f} "
+              f"floor={floor:.0f} (p99 {out['burst']['p99_ms']:.2f} ms "
+              f"vs committed {committed['burst']['p99_ms']:.2f} ms) "
+              f"{status}")
+        if got < floor:
+            failures.append("burst.flows_per_sec")
     if failures:
         raise SystemExit(
             f"serve-bench regression >{tolerance:.0%} on: {failures} "

@@ -17,6 +17,14 @@ re-federate -> hot-swap loop (ISSUE 6 acceptance demo).
    are dropped across the swap.
 5. Post-swap windows recover AUC on the drifted traffic.
 
+The whole loop runs UNDER INJECTED CHAOS (ISSUE 7): a deterministic
+``repro.faults`` schedule fails one scoring dispatch (absorbed — the
+batch re-queues and retries), fails the FIRST re-federation attempt
+(retried with backoff), and slams one synthetic traffic burst into the
+bounded queue (overflow shed at admission, every ACCEPTED request still
+answered). The final health snapshot and the zero-dropped assertion
+prove graceful degradation end to end.
+
   PYTHONPATH=src python examples/continuous_federation.py
 
 ``REPRO_SMOKE=1`` runs the miniature CI configuration.
@@ -32,8 +40,10 @@ from repro.configs import anomaly_mlp
 from repro.core import scenario as scenario_mod
 from repro.core.scenario import DriftSpec
 from repro.data import synthetic
+from repro.faults import BurstSpec, FaultInjector, FaultSpec
 from repro.models import mlp_detector
-from repro.serve import DriftMonitor, ModelSlot, Refederator, ServeEngine
+from repro.serve import (DriftMonitor, ModelSlot, Refederator, ServeEngine,
+                         health_snapshot)
 
 SMOKE = bool(os.environ.get("REPRO_SMOKE"))
 
@@ -59,6 +69,15 @@ RECOVER_WINDOWS = 3 if SMOKE else 5
 # default, shuffle clouds without fooling the detector much — the
 # adversarial field makes the demo's degradation unmistakable.)
 DRIFT = DriftSpec(rate=1.0, max_amp=DRIFT_AMP, seed=11)
+
+# The chaos schedule (everything deterministic — `at` indices, not
+# probabilities): scoring dispatch #1 (clean window 1) raises and is
+# absorbed; the first re-federation attempt fails and retries; the burst
+# phase offers mult x WINDOW flows against the bounded queue.
+QUEUE_LIMIT = 8 * WINDOW
+FAULTS = FaultSpec(seed=7,
+                   at={"scorer": (1,), "refederate": (0,)},
+                   burst=BurstSpec(period=1, mult=16)).validate()
 
 
 def _masquerade_dirs():
@@ -125,11 +144,16 @@ def main():
     # splits the two with margin on both sides
     monitor = DriftMonitor.from_sample(Xref, ref_scores,
                                        threshold=0.25, patience=2)
+    injector = FaultInjector(FAULTS)
     refed = Refederator(
         slot, lambda k: train_spec(DRIFT_AMP, seed=100 + k,
                                    rounds=REFED_ROUNDS),
-        ckpt_dir=ckpt_dir, monitor=monitor, background=True)
-    engine = ServeEngine(slot, CFG, max_batch=WINDOW, monitor=monitor)
+        ckpt_dir=ckpt_dir, monitor=monitor, background=True,
+        max_retries=2, backoff_base=0.05, seed=FAULTS.seed,
+        injector=injector)
+    engine = ServeEngine(slot, CFG, max_batch=WINDOW, monitor=monitor,
+                         queue_limit=QUEUE_LIMIT, deadline_ms=60_000.0,
+                         injector=injector)
     engine.on_trigger = refed.fire
 
     def stream(w, amp):
@@ -152,6 +176,20 @@ def main():
         w += 1
     assert not monitor.triggered, "monitor must stay quiet on clean traffic"
 
+    print("== phase 1b: synthetic burst — admission control sheds the "
+          "overflow, every accepted flow is still answered ==")
+    offered = FAULTS.burst.size(0, WINDOW)
+    Xb, _yb = traffic(seed=555, n=offered, amp=0.0)
+    accepted = engine.submit_many(Xb, best_effort=True)
+    answered = engine.drain()
+    shed = engine.stats().shed
+    print(f"  offered {offered} flows against queue_limit={QUEUE_LIMIT}: "
+          f"accepted {len(accepted)}, shed {shed}, answered "
+          f"{len(answered)}")
+    assert len(answered) == len(accepted) == QUEUE_LIMIT
+    assert shed == offered - QUEUE_LIMIT
+    assert not monitor.triggered, "a clean burst is load, not drift"
+
     print("== phase 2: drift injected — serving continues while the "
           "monitor detects and re-federation runs in the background ==")
     drifted = []
@@ -165,7 +203,10 @@ def main():
             recovered = [auc]       # first post-swap window
             break
         drifted.append(auc)
-        if refed.last_error is not None:
+        # last_error is transient while retries are in flight (the
+        # injected refederate fault is SUPPOSED to appear here); only a
+        # terminal outcome aborts the demo
+        if refed.last_outcome == "failed":
             raise refed.last_error
         if refed.fired and refed.busy and len(drifted) >= OVERLAP:
             # scoring never paused while training ran; now let the
@@ -196,6 +237,7 @@ def main():
         w += 1
 
     refed.join(timeout=600)     # no daemon thread may outlive the demo
+    health = health_snapshot(engine, refederator=refed)
     stats = engine.shutdown()
     auc_clean = float(np.mean(clean))
     auc_drifted = float(np.mean(drifted))
@@ -205,13 +247,25 @@ def main():
           f"swaps={slot.swaps} versions={engine.versions_served} "
           f"served={stats.served}/{stats.submitted} "
           f"dropped={stats.dropped} errors={stats.errors}")
+    print(f"health: status={health.status} shed={health.shed} "
+          f"deadline_miss={health.deadline_miss} "
+          f"dispatch_errors={health.dispatch_errors} "
+          f"breaker={health.breaker_state} "
+          f"refed_retries={health.refederation_retries} "
+          f"last_refederation={health.last_refederation}")
 
-    # the acceptance loop: trigger fired, model swapped, AUC recovered,
-    # zero requests dropped or errored across the swap
+    # the acceptance loop UNDER CHAOS: trigger fired, the injected
+    # re-federation failure was retried to success, the injected scorer
+    # fault was absorbed, the burst was shed at admission — and every
+    # ACCEPTED request was answered (zero dropped)
     assert monitor.trigger_count >= 1, "drift monitor never fired"
     assert refed.completed >= 1 and refed.last_error is None
+    assert refed.retries >= 1, "the injected refederate fault never fired"
+    assert refed.breaker_state == "closed"
     assert slot.swaps >= 1 and max(engine.versions_served) >= 1
-    assert stats.dropped == 0 and stats.errors == 0
+    assert stats.dropped == 0 and stats.deadline_miss == 0
+    assert stats.errors == 1, "exactly one injected scorer fault"
+    assert stats.served == stats.submitted
     assert auc_recovered > auc_drifted, (
         f"re-federation did not recover AUC: {auc_recovered:.3f} vs "
         f"drifted {auc_drifted:.3f}")

@@ -38,15 +38,18 @@ observe records afterwards, early-stop takes effect at batch end), while
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import pickle
 import time
 from typing import Any, Callable, Dict, Iterator, List, Optional
 
+from repro import faults
 from repro.api import runner as runner_mod
 from repro.api.result import ExperimentResult, RoundRecord
 from repro.api.spec import ExperimentSpec
+from repro.checkpoint.io import CheckpointCorruptError
 
 CHECKPOINT_FORMAT = 1
 
@@ -80,6 +83,83 @@ def read_sidecar(ckpt_path: str) -> Dict[str, Any]:
             "ExperimentSession.checkpoint(), which emits both files")
     with open(path) as f:
         return json.load(f)
+
+
+def _read_verified_payload(path: str) -> Dict[str, Any]:
+    """Read a session checkpoint, verifying its sidecar content digest
+    BEFORE unpickling (ISSUE 7): a truncated file, bit-flipped payload,
+    stripped sidecar or stale digest raises
+    :class:`~repro.checkpoint.io.CheckpointCorruptError` naming the
+    offending path — pickle never sees untrusted bytes. Sidecars written
+    before digest support (no ``sha256`` field) are accepted as legacy.
+    """
+    faults.check_active("ckpt_read")
+    with open(path, "rb") as f:
+        blob = f.read()
+    sc = sidecar_path(path)
+    if not os.path.exists(sc):
+        raise CheckpointCorruptError(
+            path, f"missing sidecar {sc!r} — cannot verify integrity "
+                  "(re-write via ExperimentSession.checkpoint(), which "
+                  "emits both files)")
+    try:
+        with open(sc) as f:
+            meta = json.load(f)
+    except Exception as e:
+        raise CheckpointCorruptError(
+            path, f"unreadable sidecar {sc!r} "
+                  f"({type(e).__name__}: {e})") from e
+    want = meta.get("sha256")
+    if want is not None:
+        got = hashlib.sha256(blob).hexdigest()
+        if got != want:
+            raise CheckpointCorruptError(
+                path, f"content digest mismatch (sidecar sha256 {want!r} "
+                      f"!= computed {got!r})")
+    try:
+        payload = pickle.loads(blob)
+    except Exception as e:
+        raise CheckpointCorruptError(
+            path, f"undecodable payload ({type(e).__name__}: {e})") from e
+    if not isinstance(payload, dict):
+        raise CheckpointCorruptError(
+            path, f"payload decodes to {type(payload).__name__}, "
+                  "not a checkpoint dict")
+    return payload
+
+
+def latest_good_checkpoint(directory: str,
+                           exclude=()) -> Optional[str]:
+    """Newest digest-verified session checkpoint in ``directory`` —
+    ``*.ckpt`` files ranked by their sidecar's ``written_at`` (newest
+    first), skipping ``exclude`` paths and anything whose digest (or
+    pickle decode) fails. The recovery source behind
+    ``ExperimentSession.restore(..., fallback=True)`` and
+    ``ModelSlot.publish_checkpoint(..., fallback=True)``."""
+    excl = {os.path.abspath(p) for p in exclude}
+    cands = []
+    try:
+        names = os.listdir(directory or ".")
+    except OSError:
+        return None
+    for name in names:
+        if not name.endswith(".ckpt"):
+            continue
+        p = os.path.join(directory or ".", name)
+        if os.path.abspath(p) in excl:
+            continue
+        try:
+            meta = read_sidecar(p)
+        except (OSError, ValueError):
+            continue
+        cands.append((float(meta.get("written_at", 0.0)), p))
+    for _t, p in sorted(cands, reverse=True):
+        try:
+            _read_verified_payload(p)
+            return p
+        except (CheckpointCorruptError, OSError, faults.InjectedFault):
+            continue
+    return None
 
 
 class CheckpointMismatchError(ValueError):
@@ -195,13 +275,30 @@ class ExperimentSession:
 
     @classmethod
     def restore(cls, path: str,
-                spec: Optional[ExperimentSpec] = None) -> "ExperimentSession":
+                spec: Optional[ExperimentSpec] = None, *,
+                fallback: bool = False) -> "ExperimentSession":
         """Rebuild a session from :meth:`checkpoint` output and continue
         bit-identically. ``spec`` is only needed when the checkpointed
         spec contained unpicklable callables (eval_fn / data factory /
-        lr_schedule); when given, it must describe the SAME trajectory."""
-        with open(path, "rb") as f:
-            payload = pickle.load(f)
+        lr_schedule); when given, it must describe the SAME trajectory.
+
+        The payload's content digest (sidecar ``sha256``) is verified
+        before unpickling — a corrupt artifact raises
+        :class:`~repro.checkpoint.io.CheckpointCorruptError` instead of
+        pickle garbage. ``fallback=True`` degrades to the newest
+        digest-verified ``*.ckpt`` in the same directory
+        (:func:`latest_good_checkpoint`); only when none survives does
+        the original corruption error surface."""
+        try:
+            payload = _read_verified_payload(path)
+        except (CheckpointCorruptError, OSError, faults.InjectedFault):
+            if not fallback:
+                raise
+            good = latest_good_checkpoint(os.path.dirname(path),
+                                          exclude=(path,))
+            if good is None:
+                raise
+            payload = _read_verified_payload(good)
         if payload.get("format") != CHECKPOINT_FORMAT:
             raise ValueError(
                 f"unknown session checkpoint format "
@@ -332,9 +429,13 @@ class ExperimentSession:
             "wall_time": self._wall,
             "driver": self._driver.state_dict(),
         }
+        blob = pickle.dumps(payload)
+        # fault-checked BEFORE any byte lands: an injected write error
+        # never damages the artifact (or sidecar) already at `path`
+        faults.check_active("ckpt_write")
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
-            pickle.dump(payload, f)
+            f.write(blob)
         os.replace(tmp, path)   # a crash never corrupts the checkpoint
         meta = {
             "format": CHECKPOINT_FORMAT,
@@ -344,6 +445,10 @@ class ExperimentSession:
             "rounds_done": self.rounds_done,
             "wall_time": self._wall,
             "written_at": time.time(),
+            # content digest of the payload bytes — restore() verifies
+            # this before unpickling (CheckpointCorruptError otherwise)
+            "sha256": hashlib.sha256(blob).hexdigest(),
+            "payload_bytes": len(blob),
             # tuples inside dataclass asdicts become JSON lists; the
             # sidecar is provenance metadata, not an equality oracle —
             # exact fingerprint matching stays in restore()

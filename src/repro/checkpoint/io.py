@@ -1,7 +1,25 @@
 """Pytree checkpoint I/O (msgpack + raw numpy buffers, no deps beyond
-msgpack). Used by the Weibull-driven CheckpointManager and the trainers."""
+msgpack). Used by the Weibull-driven CheckpointManager and the trainers.
+
+Integrity (ISSUE 7): every checkpoint written since format v2 embeds a
+SHA-256 digest of its packed body; :func:`restore` verifies it before
+deserializing, so a truncated file, a bit-flipped payload or msgpack
+garbage raises :class:`CheckpointCorruptError` naming the offending
+path instead of surfacing as an unpickling/shape error deep in the
+restore. :func:`verify` is the cheap non-raising probe behind
+``CheckpointManager.latest_good()``. Legacy (pre-digest) checkpoints
+still restore — they parse as the old bare payload dict — but
+``verify`` reports them as good only if they parse cleanly.
+
+Fault injection: :func:`save`/:func:`restore` consult the ambient
+``repro.faults`` injector (sites ``ckpt_write``/``ckpt_read``) so the
+chaos suite can prove the degradation paths. An injected write fault
+fires BEFORE the atomic rename — the previous checkpoint at ``path``
+is never damaged by a failed save.
+"""
 from __future__ import annotations
 
+import hashlib
 import os
 
 import jax
@@ -9,15 +27,30 @@ import jax.numpy as jnp
 import msgpack
 import numpy as np
 
+from repro import faults
+
+IO_FORMAT = 2
+
+
+class CheckpointCorruptError(OSError):
+    """A checkpoint that cannot be trusted: truncated, bit-flipped,
+    unparseable, or failing its content digest. ``.path`` names the
+    offending artifact."""
+
+    def __init__(self, path: str, reason: str):
+        self.path = path
+        self.reason = reason
+        super().__init__(f"corrupt checkpoint {path!r}: {reason}")
+
 
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
 
 
-def save(path: str, tree) -> None:
+def _pack_body(tree) -> bytes:
     leaves, treedef = _flatten(tree)
-    payload = {
+    return msgpack.packb({
         "treedef": str(treedef),
         "leaves": [
             {"dtype": str(np.asarray(l).dtype),
@@ -25,17 +58,72 @@ def save(path: str, tree) -> None:
              "data": np.asarray(l).tobytes()}
             for l in leaves
         ],
-    }
+    }, use_bin_type=True)
+
+
+def save(path: str, tree) -> None:
+    body = _pack_body(tree)
+    envelope = msgpack.packb({
+        "format": IO_FORMAT,
+        "sha256": hashlib.sha256(body).hexdigest(),
+        "body": body,
+    }, use_bin_type=True)
+    faults.check_active("ckpt_write")
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
+        f.write(envelope)
     os.replace(tmp, path)  # atomic — a crash never corrupts the checkpoint
 
 
-def restore(path: str, like):
-    """Restore into the structure of ``like`` (shapes must match)."""
+def _read_payload(path: str) -> dict:
+    """Read + digest-verify ``path`` down to the body payload dict."""
+    faults.check_active("ckpt_read")
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
+        raw = f.read()
+    try:
+        outer = msgpack.unpackb(raw, raw=False)
+    except Exception as e:
+        raise CheckpointCorruptError(
+            path, f"unparseable msgpack ({type(e).__name__}: {e})") from e
+    if isinstance(outer, dict) and "body" in outer:        # format v2
+        body = outer["body"]
+        want = outer.get("sha256")
+        got = hashlib.sha256(body).hexdigest()
+        if want != got:
+            raise CheckpointCorruptError(
+                path, f"content digest mismatch (sidecar sha256 {want!r} "
+                      f"!= computed {got!r})")
+        try:
+            payload = msgpack.unpackb(body, raw=False)
+        except Exception as e:
+            raise CheckpointCorruptError(
+                path, f"digest ok but body unparseable "
+                      f"({type(e).__name__}: {e})") from e
+    elif isinstance(outer, dict) and "leaves" in outer:    # legacy v1
+        payload = outer
+    else:
+        raise CheckpointCorruptError(
+            path, "not a checkpoint envelope (no body/leaves)")
+    return payload
+
+
+def verify(path: str) -> bool:
+    """True iff ``path`` exists and its content digest checks out (or,
+    for a legacy pre-digest checkpoint, parses cleanly). Never raises —
+    the probe ``latest_good()`` scans candidates with."""
+    if not os.path.exists(path):
+        return False
+    try:
+        _read_payload(path)
+        return True
+    except (CheckpointCorruptError, OSError, faults.InjectedFault):
+        return False
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (shapes must match).
+    Raises :class:`CheckpointCorruptError` on any untrusted artifact."""
+    payload = _read_payload(path)
     leaves_like, treedef = jax.tree.flatten(like)
     blobs = payload["leaves"]
     if len(blobs) != len(leaves_like):

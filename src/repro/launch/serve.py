@@ -70,14 +70,17 @@ def serve_lm(cfg, batch: int, prompt_len: int, decode_steps: int, seed=0):
 
 
 def serve_anomaly(cfg, batch: int, seed=0, requests: int = 0,
-                  checkpoint: str = None):
+                  checkpoint: str = None, queue_limit: int = None,
+                  deadline_ms: float = None):
     """Batched flow scoring via ``repro.serve.ServeEngine`` — request
     queue, power-of-two batch buckets, hot-swappable model slot,
     p50/p99 latency accounting. ``checkpoint`` serves a trained global
     model from an ``ExperimentSession.checkpoint()`` artifact (sidecar-
-    validated); otherwise parameters initialize fresh."""
+    validated); otherwise parameters initialize fresh. ``queue_limit``
+    and ``deadline_ms`` turn on the engine's admission control; shed /
+    expired requests show up in the health line."""
     from repro.data import synthetic
-    from repro.serve import ModelSlot, ServeEngine
+    from repro.serve import ModelSlot, ServeEngine, health_snapshot
 
     max_batch = 1 << max(0, int(batch) - 1).bit_length()   # next pow2
     if checkpoint:
@@ -87,22 +90,28 @@ def serve_anomaly(cfg, batch: int, seed=0, requests: int = 0,
     else:
         slot = ModelSlot(api.init_params(jax.random.PRNGKey(seed), cfg),
                          model=cfg.name)
-    engine = ServeEngine(slot, cfg, max_batch=max_batch)
+    engine = ServeEngine(slot, cfg, max_batch=max_batch,
+                         queue_limit=queue_limit, deadline_ms=deadline_ms)
     n = requests or max_batch * 4
     X, _y = synthetic.make_unsw_like(seed, n, cfg.num_features,
                                      cfg.num_classes)
     responses = []
     for i in range(0, n, max_batch):
-        engine.submit_many(X[i:i + max_batch])
+        engine.submit_many(X[i:i + max_batch], best_effort=True)
         responses.extend(engine.pump())
+    health = health_snapshot(engine)
     stats = engine.shutdown()
     anomaly_rate = float(np.mean(
-        [np.argmax(r.probs) != 0 for r in responses]))
+        [np.argmax(r.probs) != 0 for r in responses])) if responses else 0.0
     version = responses[-1].model_version if responses else 0
     print(f"scored {stats.served} flows in {stats.busy_seconds*1e3:.1f} ms "
           f"({stats.flows_per_sec:.0f} flows/s, p50 {stats.p50_ms:.2f} ms, "
           f"p99 {stats.p99_ms:.2f} ms, model v{version}); "
           f"flagged {anomaly_rate:.1%} as attack classes")
+    print(f"health: {health.status} (shed {health.shed}, "
+          f"deadline_miss {health.deadline_miss}, "
+          f"dispatch_errors {health.dispatch_errors}, "
+          f"degraded_mode {health.degraded_mode})")
     return stats
 
 
@@ -121,11 +130,19 @@ def main(argv=None):
                     help="anomaly serving: hot-load the global model "
                          "from an ExperimentSession checkpoint "
                          "(validated against its sidecar metadata)")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="anomaly serving: bound the request queue; "
+                         "overflow is shed at admission")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="anomaly serving: per-request deadline; expired "
+                         "requests answer NaN and count deadline_miss")
     args = ap.parse_args(argv)
     cfg = registry.get_config(args.arch, smoke=args.smoke)
     if cfg.family == "mlp":
         serve_anomaly(cfg, args.batch, requests=args.requests,
-                      checkpoint=args.from_checkpoint)
+                      checkpoint=args.from_checkpoint,
+                      queue_limit=args.queue_limit,
+                      deadline_ms=args.deadline_ms)
     else:
         serve_lm(cfg, args.batch, args.prompt_len, args.decode_steps)
     return 0

@@ -9,14 +9,19 @@ refreshed checkpoint in without dropping a request (:class:`Refederator`
 + :class:`ModelSlot`). See README "Serving" and
 ``examples/continuous_federation.py`` for the full loop.
 """
-from repro.serve.engine import Response, ServeEngine, ServeStats
-from repro.serve.federate import Refederator
+from repro.serve.engine import (QueueFullError, Response, ServeEngine,
+                                ServeStats)
+from repro.serve.federate import (BREAKER_CLOSED, BREAKER_HALF_OPEN,
+                                  BREAKER_OPEN, Refederator)
+from repro.serve.health import HealthSnapshot, snapshot as health_snapshot
 from repro.serve.monitor import DriftMonitor
 from repro.serve.swap import (ModelSlot, ModelVersion, ServeModelError,
                               StaleCheckpointError)
 
 __all__ = [
-    "ServeEngine", "Response", "ServeStats",
+    "ServeEngine", "Response", "ServeStats", "QueueFullError",
     "ModelSlot", "ModelVersion", "ServeModelError", "StaleCheckpointError",
     "DriftMonitor", "Refederator",
+    "BREAKER_CLOSED", "BREAKER_OPEN", "BREAKER_HALF_OPEN",
+    "HealthSnapshot", "health_snapshot",
 ]

@@ -22,6 +22,7 @@ silently serving a wrong or outdated detector.
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 from typing import Any, Optional
 
@@ -29,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.api import session as session_mod
+from repro.checkpoint.io import CheckpointCorruptError
 
 
 class ServeModelError(ValueError):
@@ -120,7 +122,8 @@ class ModelSlot:
     def publish_checkpoint(self, ckpt_path: str,
                            spec=None, *, expect_model: Optional[str] = None,
                            allow_stale: bool = False,
-                           round_base: int = 0) -> ModelVersion:
+                           round_base: int = 0,
+                           fallback: bool = False) -> ModelVersion:
         """Validate + load an ``ExperimentSession.checkpoint()`` artifact
         and stage its global parameters.
 
@@ -132,7 +135,32 @@ class ModelSlot:
         whose spec held unpicklable callables (e.g. a drifted-data
         factory). ``round_base`` offsets the sidecar's round counter —
         re-federation sessions count rounds from zero, so the federator
-        passes the served model's counter to keep versions monotone."""
+        passes the served model's counter to keep versions monotone.
+
+        ``fallback=True`` recovers from a corrupt or sidecar-less
+        artifact by publishing the newest digest-verified ``*.ckpt`` in
+        the same directory instead
+        (``api/session.py: latest_good_checkpoint``) — the model/
+        staleness gates still apply to whatever actually publishes."""
+        try:
+            return self._publish_checkpoint(
+                ckpt_path, spec, expect_model=expect_model,
+                allow_stale=allow_stale, round_base=round_base)
+        except (CheckpointCorruptError, FileNotFoundError):
+            if not fallback:
+                raise
+            good = session_mod.latest_good_checkpoint(
+                os.path.dirname(ckpt_path), exclude=(ckpt_path,))
+            if good is None:
+                raise
+            return self._publish_checkpoint(
+                good, spec, expect_model=expect_model,
+                allow_stale=allow_stale, round_base=round_base)
+
+    def _publish_checkpoint(self, ckpt_path: str, spec=None, *,
+                            expect_model: Optional[str] = None,
+                            allow_stale: bool = False,
+                            round_base: int = 0) -> ModelVersion:
         meta = session_mod.read_sidecar(ckpt_path)
         model = meta.get("model")
         expect = expect_model if expect_model is not None \

@@ -1,4 +1,6 @@
-"""Checkpoint I/O roundtrips + Weibull adaptive-interval policy (§IV-C)."""
+"""Checkpoint I/O roundtrips + Weibull adaptive-interval policy (§IV-C),
+plus the ISSUE-7 integrity layer: content digests, corruption detection
+and verified fallback recovery."""
 import os
 
 import jax
@@ -8,6 +10,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import io
+from repro.checkpoint.io import CheckpointCorruptError
 from repro.checkpoint.manager import CheckpointManager
 from repro.core import checkpoint_policy as cp
 
@@ -29,6 +32,102 @@ def test_io_shape_mismatch_raises(tmp_path):
     io.save(path, {"a": jnp.ones((3,))})
     with pytest.raises(ValueError):
         io.restore(path, {"a": jnp.ones((4,))})
+
+
+class TestCorruption:
+    """Satellite (c): every corruption mode raises
+    ``CheckpointCorruptError`` naming the path, never pickle/msgpack
+    garbage; ``verify`` is the matching non-raising probe."""
+
+    def _saved(self, tmp_path):
+        tree = {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)}
+        path = str(tmp_path / "c.msgpack")
+        io.save(path, tree)
+        return path, tree
+
+    def test_truncated_file(self, tmp_path):
+        path, tree = self._saved(tmp_path)
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(size // 2)
+        with pytest.raises(CheckpointCorruptError, match="c.msgpack"):
+            io.restore(path, tree)
+        assert not io.verify(path)
+
+    def test_bit_flipped_payload(self, tmp_path):
+        path, tree = self._saved(tmp_path)
+        with open(path, "r+b") as f:
+            f.seek(os.path.getsize(path) - 8)
+            c = f.read(1)
+            f.seek(os.path.getsize(path) - 8)
+            f.write(bytes([c[0] ^ 0x01]))
+        with pytest.raises(CheckpointCorruptError) as ei:
+            io.restore(path, tree)
+        assert ei.value.path == path
+        assert not io.verify(path)
+
+    def test_digest_mismatch_names_path(self, tmp_path):
+        """A stale digest over a valid body is still rejected — the
+        envelope's sha256 must match the bytes actually present."""
+        import msgpack
+        path, tree = self._saved(tmp_path)
+        with open(path, "rb") as f:
+            outer = msgpack.unpackb(f.read(), raw=False)
+        outer["sha256"] = "0" * 64
+        with open(path, "wb") as f:
+            f.write(msgpack.packb(outer, use_bin_type=True))
+        with pytest.raises(CheckpointCorruptError, match="digest mismatch"):
+            io.restore(path, tree)
+        assert not io.verify(path)
+
+    def test_not_an_envelope(self, tmp_path):
+        import msgpack
+        path = str(tmp_path / "junk.msgpack")
+        with open(path, "wb") as f:
+            f.write(msgpack.packb({"something": "else"},
+                                  use_bin_type=True))
+        with pytest.raises(CheckpointCorruptError, match="envelope"):
+            io.restore(path, {"w": jnp.ones((2,))})
+
+    def test_legacy_pre_digest_checkpoint_still_restores(self, tmp_path):
+        """A v1 bare-payload file (what the repo wrote before ISSUE 7)
+        has no digest to verify but must keep restoring."""
+        import msgpack
+        tree = {"w": jnp.ones((2, 2), jnp.float32)}
+        leaves, treedef = jax.tree.flatten(tree)
+        legacy = {"treedef": str(treedef),
+                  "leaves": [{"dtype": "float32", "shape": [2, 2],
+                              "data": np.asarray(leaves[0]).tobytes()}]}
+        path = str(tmp_path / "v1.msgpack")
+        with open(path, "wb") as f:
+            f.write(msgpack.packb(legacy, use_bin_type=True))
+        back = io.restore(path, jax.tree.map(jnp.zeros_like, tree))
+        np.testing.assert_array_equal(np.asarray(back["w"]), 1.0)
+        assert io.verify(path)
+
+    def test_verify_missing_file_false(self, tmp_path):
+        assert not io.verify(str(tmp_path / "never.msgpack"))
+
+    def test_manager_latest_good_and_fallback_bit_identical(self, tmp_path):
+        """Corrupting the canonical artifact degrades restore to the
+        newest verified history copy with byte-identical leaves."""
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        rng = np.random.default_rng(0)
+        tree = {"w": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32)}
+        mgr.save(tree, now=0.0)
+        with open(mgr.path(), "r+b") as f:
+            f.seek(20)
+            c = f.read(1)
+            f.seek(20)
+            f.write(bytes([c[0] ^ 0xFF]))
+        with pytest.raises(CheckpointCorruptError):
+            mgr.restore(jax.tree.map(jnp.zeros_like, tree))
+        good = mgr.latest_good()
+        assert good is not None and good != mgr.path()
+        back = mgr.restore(jax.tree.map(jnp.zeros_like, tree),
+                           fallback=True)
+        assert np.asarray(back["w"]).tobytes() \
+            == np.asarray(tree["w"]).tobytes()
 
 
 def test_weibull_cdf_properties():

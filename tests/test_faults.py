@@ -1,0 +1,574 @@
+"""Chaos suite (ISSUE 7): deterministic fault injection and every
+graceful-degradation path it proves.
+
+Layers covered:
+  repro.faults            — injector determinism, schedules, bursts
+  serve/engine.py         — bounded queue, deadlines, degraded mode,
+                            scorer-fault absorption, zero-drop accounting
+  serve/federate.py       — retry/backoff, circuit breaker, join fix
+  checkpoint/io + manager — write/read faults, retention, latest_good
+  serve/health.py         — unified degradation snapshot
+
+Everything here is seeded: the SAME spec injects the SAME fault
+sequence, so assertions are exact, never probabilistic. Heavier
+session-level corruption/fallback coverage (both engines, bit-identical
+restores) lives in tests/test_checkpoint.py and tests/test_session.py;
+this file stays fast enough to run as the CI ``chaos`` step
+(``REPRO_SMOKE=1 python -m tests.test_faults``).
+"""
+import json
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import faults
+from repro.checkpoint import io as ckpt_io
+from repro.checkpoint.io import CheckpointCorruptError
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import anomaly_mlp
+from repro.faults import BurstSpec, FaultInjector, FaultSpec, InjectedFault
+from repro.models import api as model_api
+from repro.serve import (DriftMonitor, ModelSlot, QueueFullError,
+                         Refederator, ServeEngine, health_snapshot)
+from repro.serve import health as health_mod
+
+CFG = anomaly_mlp.SMOKE
+
+
+def _params(seed=0):
+    return model_api.init_params(jax.random.PRNGKey(seed), CFG)
+
+
+def _flows(seed, n):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, CFG.num_features)).astype(np.float32)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(4, 3)).astype(np.float32),
+            "b": rng.normal(size=(3,)).astype(np.float32)}
+
+
+class _Clock:
+    """Injectable monotonic clock for deadline tests."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------
+# the injector itself
+# ---------------------------------------------------------------------
+class TestFaultInjector:
+    def test_same_spec_same_fault_sequence(self):
+        spec = FaultSpec(seed=7, scorer_p=0.3, ckpt_read_p=0.6)
+        a = FaultInjector(spec)
+        b = FaultInjector(spec)
+        for site in ("scorer", "ckpt_read"):
+            assert [a.poll(site) for _ in range(64)] \
+                == [b.poll(site) for _ in range(64)]
+
+    def test_sites_are_independent_streams(self):
+        """Interleaving order across sites must not change either
+        site's sequence — each site's draw is a function of its own
+        call index alone."""
+        spec = FaultSpec(seed=3, scorer_p=0.5, publish_p=0.5)
+        a = FaultInjector(spec)
+        solo_scorer = [a.poll("scorer") for _ in range(20)]
+        a2 = FaultInjector(spec)
+        solo_publish = [a2.poll("publish") for _ in range(20)]
+        b = FaultInjector(spec)
+        mixed = [(b.poll("scorer"), b.poll("publish")) for _ in range(20)]
+        assert [m[0] for m in mixed] == solo_scorer
+        assert [m[1] for m in mixed] == solo_publish
+
+    def test_at_schedule_fires_exact_indices(self):
+        inj = FaultInjector(FaultSpec(at={"publish": (0, 3)}))
+        assert [inj.poll("publish") for _ in range(5)] \
+            == [True, False, False, True, False]
+
+    def test_check_raises_with_site_and_index(self):
+        inj = FaultInjector(FaultSpec(at={"refederate": (1,)}))
+        inj.check("refederate")                 # call 0: clean
+        with pytest.raises(InjectedFault, match="refederate") as ei:
+            inj.check("refederate")
+        assert ei.value.site == "refederate" and ei.value.index == 1
+        assert inj.counts()["refederate"] == {"calls": 2, "fired": 1}
+
+    def test_probability_bounds_validated(self):
+        with pytest.raises(ValueError, match="outside"):
+            FaultInjector(FaultSpec(scorer_p=1.5))
+        with pytest.raises(ValueError, match=">= 0"):
+            FaultInjector(FaultSpec(at={"scorer": (-1,)}))
+        with pytest.raises(ValueError, match="BurstSpec"):
+            FaultInjector(FaultSpec(burst=BurstSpec(period=0)))
+
+    def test_p1_fires_always_p0_never(self):
+        inj = FaultInjector(FaultSpec(scorer_p=1.0))
+        assert all(inj.poll("scorer") for _ in range(10))
+        assert not any(inj.poll("ckpt_write") for _ in range(10))
+
+    def test_burst_spec_is_deterministic_shape(self):
+        b = BurstSpec(period=4, mult=8, phase=1)
+        assert b.sizes(8, 10) == [10, 80, 10, 10, 10, 80, 10, 10]
+        assert b.is_burst(5) and not b.is_burst(4)
+
+    def test_scoped_installs_ambient_and_restores(self):
+        assert faults.active() is None
+        inj = FaultInjector(FaultSpec(at={"ckpt_read": (0,)}))
+        with inj.scoped():
+            assert faults.active() is inj
+            with pytest.raises(InjectedFault):
+                faults.check_active("ckpt_read")
+        assert faults.active() is None
+        faults.check_active("ckpt_read")        # no-op outside scope
+
+    def test_thread_safety_counts_every_call(self):
+        inj = FaultInjector(FaultSpec(seed=1, scorer_p=0.5))
+        hits = []
+
+        def worker():
+            hits.append(sum(inj.poll("scorer") for _ in range(200)))
+
+        ts = [threading.Thread(target=worker) for _ in range(4)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        c = inj.counts()["scorer"]
+        assert c["calls"] == 800
+        assert c["fired"] == sum(hits)
+
+
+# ---------------------------------------------------------------------
+# engine: admission control + deadlines + degraded mode + absorption
+# ---------------------------------------------------------------------
+class TestBoundedQueue:
+    def test_shed_at_limit_and_zero_drop_of_accepted(self):
+        eng = ServeEngine(ModelSlot(_params()), CFG, max_batch=8,
+                          queue_limit=4)
+        for i in range(4):
+            eng.submit(_flows(i, 1)[0])
+        with pytest.raises(QueueFullError, match="queue at limit"):
+            eng.submit(_flows(9, 1)[0])
+        assert eng.try_submit(_flows(9, 1)[0]) is None
+        stats = eng.shutdown()
+        assert stats.submitted == stats.served == 4
+        assert stats.shed == 2 and stats.dropped == 0
+
+    def test_submit_many_best_effort_skips_shed_rows(self):
+        eng = ServeEngine(ModelSlot(_params()), CFG, max_batch=8,
+                          queue_limit=3)
+        with pytest.raises(QueueFullError):
+            eng.submit_many(_flows(0, 5))
+        eng.drain()
+        ids = eng.submit_many(_flows(1, 5), best_effort=True)
+        assert len(ids) == 3
+        stats = eng.shutdown()
+        assert stats.served == stats.submitted
+        assert stats.shed >= 2 and stats.dropped == 0
+
+    def test_burst_windows_shed_but_never_drop(self):
+        burst = BurstSpec(period=3, mult=6, phase=2)
+        eng = ServeEngine(ModelSlot(_params()), CFG, max_batch=16,
+                          queue_limit=16)
+        for w, size in enumerate(burst.sizes(6, 8)):
+            eng.submit_many(_flows(100 + w, size), best_effort=True)
+            eng.pump()
+        stats = eng.shutdown()
+        assert stats.shed > 0                    # bursts overflowed
+        assert stats.served == stats.submitted   # accepted all answered
+        assert stats.dropped == 0 and stats.errors == 0
+
+
+class TestDeadlines:
+    def test_expired_requests_answered_with_nan(self):
+        clock = _Clock()
+        eng = ServeEngine(ModelSlot(_params()), CFG, max_batch=8,
+                          now=clock, deadline_ms=10.0)
+        eng.submit(_flows(0, 1)[0])                       # default 10ms
+        eng.submit(_flows(1, 1)[0], deadline_ms=1000.0)   # override
+        clock.t = 0.5                                     # 500ms later
+        out = eng.pump()
+        assert len(out) == 2
+        by_id = {r.request_id: r for r in out}
+        assert by_id[0].expired and np.isnan(by_id[0].score)
+        assert np.all(np.isnan(by_id[0].probs))
+        assert not by_id[1].expired and not np.isnan(by_id[1].score)
+        stats = eng.shutdown()
+        assert stats.deadline_miss == 1
+        assert stats.served == stats.submitted == 2
+        assert stats.dropped == 0
+
+    def test_expired_latency_excluded_from_percentiles(self):
+        clock = _Clock()
+        eng = ServeEngine(ModelSlot(_params()), CFG, max_batch=8,
+                          now=clock)
+        eng.submit(_flows(0, 1)[0], deadline_ms=1.0)
+        clock.t = 9.0                                     # huge miss
+        eng.submit(_flows(1, 1)[0])
+        eng.drain()
+        stats = eng.shutdown()
+        assert stats.deadline_miss == 1
+        # the 9-second expired wait must not pollute scoring latency
+        assert stats.p99_ms < 9000.0
+
+
+class TestDegradedMode:
+    def _overload_engine(self, monitor=None):
+        # ema_decay=0 -> the EMA IS the instantaneous depth, so the
+        # hysteresis thresholds are exact and the test deterministic
+        return ServeEngine(ModelSlot(_params()), CFG, max_batch=8,
+                           monitor=monitor, queue_limit=40,
+                           degrade_high=0.5, degrade_low=0.25,
+                           ema_decay=0.0)
+
+    def test_hysteresis_enters_and_exits(self):
+        eng = self._overload_engine()
+        eng.submit_many(_flows(0, 30))      # depth 30 > 0.5*40
+        eng.pump()
+        assert eng.degraded
+        eng.drain()                          # depth falls under 0.25*40
+        eng.pump()                           # one empty pump re-evaluates
+        assert not eng.degraded
+        stats = eng.shutdown()
+        assert stats.degraded_pumps >= 1
+        assert stats.served == stats.submitted and stats.dropped == 0
+
+    def test_degraded_pumps_skip_drift_monitor(self):
+        x = _flows(0, 256)
+        mon = DriftMonitor.from_sample(x, np.abs(x[:, 0]), threshold=0.5,
+                                       patience=1)
+        eng = self._overload_engine(monitor=mon)
+        before = float(np.asarray(mon.state.count))
+        eng.submit_many(_flows(1, 30) + 5.0)   # wildly shifted traffic
+        eng.pump()
+        assert eng.degraded
+        # shifted windows scored while degraded never feed the monitor
+        assert float(np.asarray(mon.state.count)) == before
+        assert not mon.triggered
+        eng.drain()
+        eng.shutdown()
+
+
+class TestScorerFaults:
+    def test_transient_fault_requeues_in_order(self):
+        inj = FaultInjector(FaultSpec(at={"scorer": (0,)}))
+        eng = ServeEngine(ModelSlot(_params()), CFG, max_batch=8,
+                          injector=inj)
+        eng.submit_many(_flows(0, 5))
+        assert eng.pump() == []                  # absorbed, requeued
+        assert eng.stats().errors == 1
+        assert eng.stats().pending == 5 and eng.stats().inflight == 0
+        out = eng.pump()                         # retry succeeds
+        assert [r.request_id for r in out] == [0, 1, 2, 3, 4]
+        stats = eng.shutdown()
+        assert stats.served == stats.submitted == 5
+        assert stats.dropped == 0 and stats.errors == 1
+
+    def test_persistent_fault_raises_after_budget(self):
+        inj = FaultInjector(FaultSpec(scorer_p=1.0))
+        eng = ServeEngine(ModelSlot(_params()), CFG, max_batch=8,
+                          injector=inj, max_dispatch_retries=2)
+        eng.submit_many(_flows(0, 3))
+        assert eng.pump() == []                  # failures 1, 2 absorbed
+        assert eng.pump() == []
+        with pytest.raises(InjectedFault, match="scorer"):
+            eng.pump()                           # consecutive > budget
+        stats = eng.stats()
+        assert stats.pending == 3 and stats.inflight == 0
+        assert stats.dropped == 0                # still owed, not lost
+
+    def test_success_resets_consecutive_failure_budget(self):
+        inj = FaultInjector(FaultSpec(at={"scorer": (0, 2)}))
+        eng = ServeEngine(ModelSlot(_params()), CFG, max_batch=8,
+                          injector=inj, max_dispatch_retries=1)
+        eng.submit_many(_flows(0, 2))
+        assert eng.pump() == []                  # fault #0 absorbed
+        assert len(eng.pump()) == 2              # success resets counter
+        eng.submit_many(_flows(1, 2))
+        assert eng.pump() == []                  # fault #2: budget fresh
+        assert len(eng.pump()) == 2
+        stats = eng.shutdown()
+        assert stats.served == stats.submitted == 4
+        assert stats.errors == 2 and stats.dropped == 0
+
+    def test_chaos_mix_never_drops_accepted(self):
+        """Scorer faults + deadlines + bounded queue + bursts at once:
+        every accepted request is answered exactly once."""
+        inj = FaultInjector(FaultSpec(seed=5, scorer_p=0.25,
+                                      burst=BurstSpec(period=3, mult=5)))
+        eng = ServeEngine(ModelSlot(_params()), CFG, max_batch=16,
+                          queue_limit=32, deadline_ms=60_000.0,
+                          injector=inj)
+        accepted, answered = [], []
+        for w, size in enumerate(inj.spec.burst.sizes(9, 8)):
+            accepted += eng.submit_many(_flows(w, size), best_effort=True)
+            answered += [r.request_id for r in eng.pump()]
+        while eng.pending:
+            answered += [r.request_id for r in eng.pump()]
+        stats = eng.shutdown()
+        assert sorted(answered) == sorted(accepted)
+        assert stats.dropped == 0
+        assert stats.errors > 0                  # chaos actually fired
+        assert stats.shed > 0
+
+
+# ---------------------------------------------------------------------
+# refederator: retry / backoff / breaker / join
+# ---------------------------------------------------------------------
+class _ScriptedRefederator(Refederator):
+    """Refederator whose attempts follow a boolean script (True =
+    raise) — exercises the retry/backoff/breaker machinery without
+    running real federation sessions."""
+
+    def __init__(self, script, **kw):
+        kw.setdefault("background", False)
+        kw.setdefault("sleep", lambda s: self.sleeps.append(s))
+        self.sleeps = []
+        super().__init__(ModelSlot(_params()), lambda k: None,
+                         ckpt_dir="/tmp/unused", **kw)
+        self._script = list(script)
+        self.attempts = 0
+
+    def _attempt(self, k):
+        i = self.attempts
+        self.attempts += 1
+        if i < len(self._script) and self._script[i]:
+            raise RuntimeError(f"scripted failure #{i}")
+
+
+class TestRefederatorRetries:
+    def test_retries_until_success_within_budget(self):
+        r = _ScriptedRefederator([True, True, False], max_retries=2)
+        assert r.fire()
+        assert r.attempts == 3 and r.completed == 1 and r.retries == 2
+        assert r.last_outcome == "ok" and r.last_error is None
+        assert r.breaker_state == "closed" and r.consecutive_failures == 0
+        assert len(r.sleeps) == 2               # backoff between attempts
+
+    def test_backoff_is_exponential_capped_and_deterministic(self):
+        kw = dict(max_retries=3, backoff_base=0.5, backoff_factor=4.0,
+                  max_backoff=3.0, jitter=0.1, seed=11)
+        a = _ScriptedRefederator([True] * 4, **kw)
+        b = _ScriptedRefederator([True] * 4, **kw)
+        a.fire()
+        b.fire()
+        assert a.sleeps == b.sleeps             # seeded jitter
+        assert len(a.sleeps) == 3
+        for i, s in enumerate(a.sleeps):
+            base = min(3.0, 0.5 * 4.0 ** i)
+            assert base <= s <= base * 1.1      # jitter in [0, 10%]
+        assert a.last_outcome == "failed" and a.consecutive_failures == 1
+
+    def test_breaker_opens_after_threshold_consecutive_failures(self):
+        r = _ScriptedRefederator([True] * 10, max_retries=0,
+                                 breaker_threshold=2, breaker_cooldown=1)
+        assert r.fire() and r.breaker_state == "closed"
+        assert r.fire() and r.breaker_state == "open"
+        assert r.consecutive_failures == 2
+        # cooldown: the next trigger is swallowed without an attempt
+        before = r.attempts
+        assert not r.fire()
+        assert r.attempts == before and r.skipped == 1
+        # then the half-open probe runs ONE attempt and re-opens
+        assert r.fire()
+        assert r.attempts == before + 1
+        assert r.breaker_state == "open" and r.retries == 0
+
+    def test_half_open_probe_success_recloses(self):
+        r = _ScriptedRefederator([True, True, False, False],
+                                 max_retries=0, breaker_threshold=2,
+                                 breaker_cooldown=0)
+        r.fire()
+        r.fire()
+        assert r.breaker_state == "open"
+        assert r.fire()                          # cooldown 0 -> probe now
+        assert r.breaker_state == "closed"
+        assert r.completed == 1 and r.consecutive_failures == 0
+        assert r.fire() and r.completed == 2     # normal service resumed
+
+    def test_success_resets_consecutive_failures(self):
+        r = _ScriptedRefederator([True, False, True], max_retries=0,
+                                 breaker_threshold=2)
+        r.fire()
+        assert r.consecutive_failures == 1
+        r.fire()
+        assert r.consecutive_failures == 0 and r.last_outcome == "ok"
+        r.fire()
+        assert r.consecutive_failures == 1       # not 2: no breaker
+        assert r.breaker_state == "closed"
+
+    def test_injected_refederate_fault_counts_like_any_failure(self):
+        inj = FaultInjector(FaultSpec(refederate_p=1.0))
+        r = Refederator(ModelSlot(_params()), lambda k: None,
+                        ckpt_dir="/tmp/unused", background=False,
+                        max_retries=0, breaker_threshold=1, injector=inj,
+                        sleep=lambda s: None)
+        r.fire()
+        assert isinstance(r.last_error, InjectedFault)
+        assert r.breaker_state == "open"
+
+    def test_join_timeout_keeps_thread_and_busy(self):
+        release = threading.Event()
+
+        class _Blocking(_ScriptedRefederator):
+            def _attempt(self, k):
+                release.wait(10)
+
+        r = _Blocking([], background=True)
+        assert r.fire()
+        assert r.join(timeout=0.05) is False     # still running
+        assert r.busy                            # satellite (a): not lied
+        assert not r.fire() and r.skipped == 1   # coalesced, not doubled
+        release.set()
+        assert r.join(timeout=5) is True
+        assert not r.busy
+        assert r.completed == 1
+
+
+# ---------------------------------------------------------------------
+# checkpoint IO + manager under chaos
+# ---------------------------------------------------------------------
+class TestCheckpointChaos:
+    def test_write_fault_never_damages_previous_artifact(self, tmp_path):
+        path = str(tmp_path / "t.msgpack")
+        first = _tree(0)
+        ckpt_io.save(path, first)
+        inj = FaultInjector(FaultSpec(at={"ckpt_write": (0,)}))
+        with inj.scoped():
+            with pytest.raises(InjectedFault, match="ckpt_write"):
+                ckpt_io.save(path, _tree(1))
+        assert ckpt_io.verify(path)
+        got = ckpt_io.restore(path, _tree(9))
+        np.testing.assert_array_equal(np.asarray(got["w"]), first["w"])
+
+    def test_read_fault_raises_and_verify_reports_bad(self, tmp_path):
+        path = str(tmp_path / "t.msgpack")
+        ckpt_io.save(path, _tree(0))
+        inj = FaultInjector(FaultSpec(ckpt_read_p=1.0))
+        with inj.scoped():
+            with pytest.raises(InjectedFault, match="ckpt_read"):
+                ckpt_io.restore(path, _tree(0))
+            assert not ckpt_io.verify(path)
+        assert ckpt_io.verify(path)              # healthy outside chaos
+
+    def test_manager_retention_prunes_to_keep(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        for i in range(4):
+            mgr.save(_tree(i), now=float(i))
+        hist = mgr.history()
+        assert len(hist) == 2
+        assert hist[0].endswith("_00003.msgpack")   # newest first
+        assert hist[1].endswith("_00002.msgpack")
+        assert os.path.exists(mgr.path())
+
+    def test_latest_good_skips_corrupt_canonical(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save(_tree(0), now=0.0)
+        mgr.save(_tree(1), now=1.0)
+        with open(mgr.path(), "r+b") as f:        # bit-flip the newest
+            f.seek(40)
+            c = f.read(1)
+            f.seek(40)
+            f.write(bytes([c[0] ^ 0xFF]))
+        good = mgr.latest_good()
+        assert good == mgr.history()[0]           # newest VERIFIED copy
+        got = ckpt_io.restore(good, _tree(9))
+        np.testing.assert_array_equal(np.asarray(got["w"]), _tree(1)["w"])
+
+    def test_manager_restore_fallback_recovers(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save(_tree(0), now=0.0)
+        with open(mgr.path(), "wb") as f:
+            f.write(b"garbage" * 100)
+        with pytest.raises(CheckpointCorruptError, match="t_latest|corrupt"):
+            mgr.restore(_tree(9))
+        got = mgr.restore(_tree(9), fallback=True)
+        np.testing.assert_array_equal(np.asarray(got["w"]), _tree(0)["w"])
+
+    def test_manager_restore_injected_read_fault_falls_back(self, tmp_path):
+        """An injected read fault on the canonical path degrades to the
+        history copy (whose read, one call later, is clean)."""
+        mgr = CheckpointManager(str(tmp_path), keep=3)
+        mgr.save(_tree(0), now=0.0)
+        inj = FaultInjector(FaultSpec(at={"ckpt_read": (0,)}))
+        with inj.scoped():
+            got = mgr.restore(_tree(9), fallback=True)
+        np.testing.assert_array_equal(np.asarray(got["w"]), _tree(0)["w"])
+
+    def test_fallback_with_nothing_good_reraises(self, tmp_path):
+        mgr = CheckpointManager(str(tmp_path), keep=2)
+        mgr.save(_tree(0), now=0.0)
+        for p in [mgr.path()] + mgr.history():
+            with open(p, "wb") as f:
+                f.write(b"\x00" * 64)
+        with pytest.raises(CheckpointCorruptError):
+            mgr.restore(_tree(9), fallback=True)
+
+
+# ---------------------------------------------------------------------
+# health snapshot
+# ---------------------------------------------------------------------
+class TestHealth:
+    def test_ok_engine_snapshot(self):
+        eng = ServeEngine(ModelSlot(_params(), model=CFG.name), CFG,
+                          max_batch=8, queue_limit=16)
+        eng.submit_many(_flows(0, 4))
+        eng.drain()
+        h = health_snapshot(eng)
+        assert h.status == "ok" and h.healthy
+        assert h.served == 4 and h.shed == 0 and h.dropped == 0
+        assert h.queue_limit == 16 and h.model_version == 0
+        json.dumps(h.to_dict())                  # JSON-ready, by contract
+
+    def test_shed_marks_degraded_status(self):
+        eng = ServeEngine(ModelSlot(_params()), CFG, max_batch=8,
+                          queue_limit=2)
+        eng.submit_many(_flows(0, 5), best_effort=True)
+        eng.drain()
+        h = health_snapshot(eng)
+        assert h.status == "degraded" and h.shed == 3
+
+    def test_open_breaker_is_critical(self):
+        r = _ScriptedRefederator([True] * 3, max_retries=0,
+                                 breaker_threshold=1)
+        r.fire()
+        h = health_snapshot(refederator=r)
+        assert h.status == "critical"
+        assert h.breaker_state == "open"
+        assert h.last_refederation == "failed"
+        assert h.consecutive_failures == 1
+        assert h.last_error and "scripted failure" in h.last_error
+
+    def test_snapshot_composes_all_sources(self):
+        x = _flows(0, 256)
+        mon = DriftMonitor.from_sample(x, np.abs(x[:, 0]), threshold=0.5,
+                                       patience=1)
+        eng = ServeEngine(ModelSlot(_params(), model=CFG.name), CFG,
+                          max_batch=8, monitor=mon)
+        r = _ScriptedRefederator([False])
+        r.fire()
+        h = health_snapshot(eng, refederator=r)
+        assert h.last_refederation == "ok"
+        assert h.refederations_completed == 1
+        assert h.drift_triggered is False
+        assert h.status == "ok"
+
+    def test_status_constants_exported(self):
+        assert health_mod.STATUS_OK == "ok"
+        assert health_mod.STATUS_DEGRADED == "degraded"
+        assert health_mod.STATUS_CRITICAL == "critical"
+
+
+if __name__ == "__main__":        # the CI chaos step's entry point
+    raise SystemExit(pytest.main([__file__, "-q"]))

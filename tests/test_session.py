@@ -11,6 +11,8 @@ import pytest
 from repro.api import (CheckpointMismatchError, DataSpec, ExperimentSession,
                        ExperimentSpec, StrategyConfig, WorldSpec,
                        get_strategy, run_experiment)
+from repro.api import session as session_mod
+from repro.checkpoint.io import CheckpointCorruptError
 
 SMALL = dict(model="anomaly-mlp-smoke",
              data=DataSpec(n_samples=1500, eval_samples=300),
@@ -197,6 +199,91 @@ def test_checkpoint_is_atomic_and_restorable_without_spec(tmp_path):
     s.checkpoint(path)
     assert os.path.exists(path) and not os.path.exists(path + ".tmp")
     # plain specs are embedded: restore() needs no spec argument
+    assert ExperimentSession.restore(path).rounds_done == 1
+
+
+# ---------------------------------------------------------------------------
+# corruption detection + verified fallback (ISSUE 7 satellite)
+# ---------------------------------------------------------------------------
+
+def _corruption_case(tmp_path, spec):
+    """Two checkpoints, newest corrupted: restore must refuse it by
+    name and ``fallback=True`` must recover the older verified one
+    bit-identically."""
+    s = ExperimentSession.open(spec)
+    s.run(1)
+    old = str(tmp_path / "old.ckpt")
+    s.checkpoint(old)
+    params_at_1 = jax.tree.map(np.asarray, s.result().params)
+    s.run(1)
+    new = str(tmp_path / "new.ckpt")
+    s.checkpoint(new)
+
+    with open(new, "r+b") as f:               # bit-flip the newest
+        f.seek(100)
+        c = f.read(1)
+        f.seek(100)
+        f.write(bytes([c[0] ^ 0xFF]))
+    with pytest.raises(CheckpointCorruptError, match="new.ckpt"):
+        ExperimentSession.restore(new)
+    assert session_mod.latest_good_checkpoint(str(tmp_path)) == old
+
+    resumed = ExperimentSession.restore(new, fallback=True)
+    assert resumed.rounds_done == 1           # recovered from old.ckpt
+    for x, y in zip(jax.tree.leaves(params_at_1),
+                    jax.tree.leaves(resumed.result().params)):
+        assert np.asarray(x).tobytes() == np.asarray(y).tobytes()
+
+
+def test_corrupt_restore_falls_back_bit_identical_sim(tmp_path):
+    _corruption_case(tmp_path, _sim_spec(rounds=2))
+
+
+def test_corrupt_restore_falls_back_bit_identical_spmd(tmp_path):
+    _corruption_case(tmp_path, _spmd_spec(rounds=2))
+
+
+def test_corrupt_modes_all_named(tmp_path):
+    """Truncation, sidecar stripping and a stale sidecar digest each
+    raise ``CheckpointCorruptError`` pointing at the artifact — pickle
+    never sees untrusted bytes."""
+    import json
+    import shutil
+
+    spec = _sim_spec(rounds=1)
+    s = ExperimentSession.open(spec)
+    s.run(1)
+    path = str(tmp_path / "base.ckpt")
+    s.checkpoint(path)
+    meta = session_mod.read_sidecar(path)
+    assert meta["sha256"] and meta["payload_bytes"] == \
+        os.path.getsize(path)
+
+    trunc = str(tmp_path / "trunc.ckpt")
+    shutil.copyfile(path, trunc)
+    shutil.copyfile(session_mod.sidecar_path(path),
+                    session_mod.sidecar_path(trunc))
+    with open(trunc, "r+b") as f:
+        f.truncate(os.path.getsize(trunc) // 2)
+    with pytest.raises(CheckpointCorruptError, match="trunc.ckpt"):
+        ExperimentSession.restore(trunc)
+
+    orphan = str(tmp_path / "orphan.ckpt")
+    shutil.copyfile(path, orphan)             # no sidecar copied
+    with pytest.raises(CheckpointCorruptError, match="sidecar"):
+        ExperimentSession.restore(orphan)
+
+    stale = str(tmp_path / "stale.ckpt")
+    shutil.copyfile(path, stale)
+    bad = dict(meta, sha256="0" * 64)
+    with open(session_mod.sidecar_path(stale), "w") as f:
+        json.dump(bad, f)
+    with pytest.raises(CheckpointCorruptError, match="digest mismatch"):
+        ExperimentSession.restore(stale)
+
+    # the intact original still restores (and the corrupt variants are
+    # exactly what latest_good_checkpoint must skip)
+    assert session_mod.latest_good_checkpoint(str(tmp_path)) == path
     assert ExperimentSession.restore(path).rounds_done == 1
 
 
