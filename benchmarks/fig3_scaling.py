@@ -1,11 +1,59 @@
-"""Paper Fig. 3: (left) update frequency per round; (right) communication
-time scaling with client count — sync baseline vs optimized framework."""
+"""Paper Fig. 3 + the million-client population scaling curve.
+
+Two modes:
+
+* legacy (no flags): the paper's Fig. 3 — update frequency per round and
+  communication-time scaling at 10-100 clients, sync vs ours.
+* ``--population``: the 1k → 10k → 100k → 1M POPULATION-ONLY sweep
+  behind ``BENCH_scale.json``. Each round is {score → two-stage
+  selection → synthetic cohort observations → full control update}
+  (core/population.build_population_round) with training held at a
+  fixed cohort — isolating the selection+control cost that becomes the
+  bottleneck at scale. Per cell it times single-stage (global argsort
+  top-k) vs two-stage (sharded candidate pre-filter) rounds, asserts
+  ``frac=1.0`` bit-exactness and shard_map parity, and measures the
+  lazy-world cohort materialization peak (host memory bounded by cohort
+  size, not population). ``--check-against BENCH_scale.json`` is the CI
+  regression gate (mirrors benchmarks/run.py): machine-speed normalized
+  rounds/sec floors per cell, memory caps, parity flags.
+
+The module top stays stdlib-only ON PURPOSE: ``--host-devices N`` must
+set XLA_FLAGS before the first jax import (the launch/dryrun.py
+import-order trick), which is how CI's scale-smoke step runs the 1k cell
+on 8 forced host devices and genuinely exercises the multi-device
+shard_map path.
+
+Usage:
+  python -m benchmarks.fig3_scaling                       # paper Fig. 3
+  python -m benchmarks.fig3_scaling --population          # full 1k->1M
+  python -m benchmarks.fig3_scaling --population \
+      --clients 1000 --host-devices 8 \
+      --check-against BENCH_scale.json                    # CI smoke cell
+"""
 from __future__ import annotations
 
-from benchmarks import common
+import argparse
+import json
+import math
+import os
+import time
+import tracemalloc
 
+DEFAULT_CLIENTS = (1_000, 10_000, 100_000, 1_000_000)
+DEFAULT_ROUNDS = 20
+DEFAULT_COHORT = 64
+DEFAULT_FRAC = 0.02
+DEFAULT_SHARDS = 8
+DEFAULT_SAMPLES_PER_CLIENT = 256
+
+
+# ---------------------------------------------------------------------------
+# legacy paper Fig. 3 (unchanged protocol; imports deferred so the
+# module top stays jax-free for the --host-devices trick)
+# ---------------------------------------------------------------------------
 
 def run(client_counts=(10, 25, 50, 100), rounds=3):
+    from benchmarks import common
     rows = []
     for nc in client_counts:
         sync = common.run(common.UNSW, "fedavg",
@@ -28,5 +76,297 @@ def run(client_counts=(10, 25, 50, 100), rounds=3):
                               "ours_time_s"])
 
 
+# ---------------------------------------------------------------------------
+# population sweep
+# ---------------------------------------------------------------------------
+
+def _seeded_state(n: int):
+    """ControlState with non-degenerate statistics so the top-k has
+    real structure to rank (fresh init scores are all identical)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import control
+    rng = np.random.default_rng(7)
+    st = control.init_control(n)
+    return st._replace(
+        avail=jnp.asarray(rng.uniform(0.2, 1.0, n).astype(np.float32)),
+        pass_rate=jnp.asarray(rng.uniform(0.5, 1.0, n).astype(np.float32)),
+        round_time=jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32)))
+
+
+def _time_rounds(round_fn, state, rounds: int):
+    """Compiled lax.scan over ``rounds`` population-only rounds; returns
+    (ms_per_round, final_state)."""
+    import jax
+    import jax.numpy as jnp
+
+    def body(st, r):
+        st, _cohort = round_fn(st, r)
+        return st, ()
+
+    f = jax.jit(lambda st: jax.lax.scan(
+        body, st, jnp.arange(rounds, dtype=jnp.int32))[0])
+    out = f(state)
+    jax.block_until_ready(out)              # compile outside the clock
+    t0 = time.perf_counter()
+    out = f(state)
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    return dt * 1e3 / rounds, out
+
+
+def _frac1_bitexact(n: int, k: int, shards: int) -> bool:
+    """candidate_frac=1.0 must reproduce single-stage selections
+    bit-exactly at THIS population size (the engine-level four-path
+    assertion lives in tests/harness.assert_candidate_frac_noop)."""
+    import numpy as np
+
+    from repro.core import control
+    scores = control.score(_seeded_state(n))
+    single = np.asarray(control.select_topk_epsilon(scores, k))
+    two = np.asarray(control.two_stage_select(
+        scores, k, candidate_frac=1.0, candidate_shards=shards))
+    return bool((single == two).all())
+
+
+def _sharded_parity(n: int, k: int, frac: float, rounds: int) -> bool:
+    """shard_map (real mesh over every host device) vs single-device
+    transitions + selection: bitwise-identical states and cohorts. The
+    candidate union depends on the shard count at frac < 1, so the
+    logical reference uses candidate_shards = mesh devices."""
+    import jax
+    import numpy as np
+
+    from repro.core import population
+    from repro.launch import mesh as mesh_mod
+    mesh = mesh_mod.make_population_mesh()
+    ndev = mesh.shape["data"]
+    if n % ndev:
+        return True                      # cell not divisible: skip
+    ref_fn = population.build_population_round(n, k, candidate_frac=frac,
+                                               candidate_shards=ndev)
+    shd_fn = population.build_population_round(n, k, candidate_frac=frac,
+                                               mesh=mesh)
+    ref_st, shd_st = _seeded_state(n), _seeded_state(n)
+    for r in range(rounds):
+        r = jax.numpy.int32(r)
+        ref_st, ref_cohort = ref_fn(ref_st, r)
+        shd_st, shd_cohort = shd_fn(shd_st, r)
+        if not (np.asarray(ref_cohort) == np.asarray(shd_cohort)).all():
+            return False
+        for f in population._FIELDS:
+            a = np.asarray(getattr(ref_st, f))
+            b = np.asarray(getattr(shd_st, f))
+            if not (a == b).all():
+                return False
+    return True
+
+
+def _cohort_peak_mb(n: int, cohort: int, samples_per_client: int) -> dict:
+    """Materialize 2×cohort distinct clients through a cohort-capacity
+    LoaderPool over a non-resident world; the traced peak is the host
+    data-memory bound (eviction keeps it at cohort size regardless of
+    the population)."""
+    from repro.api import DataSpec, ExperimentSpec, WorldSpec
+    from repro.data.loader import LoaderPool
+    spec = ExperimentSpec(
+        data=DataSpec(samples_per_client=samples_per_client,
+                      eval_samples=64),
+        world=WorldSpec(num_clients=n, resident=False),
+        rounds=1).validate()
+    world = spec.build_world()
+    pool = LoaderPool(world.client_arrays, lambda cid: 64, seed=0,
+                      capacity=cohort)
+    stride = max(1, n // (2 * cohort))
+    cids = [(i * stride) % n for i in range(2 * cohort)]
+    tracemalloc.start()
+    for cid in cids:
+        pool[cid].sample()
+    _cur, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return {"cohort_peak_mb": round(peak / 2**20, 2),
+            "resident_loaders": pool.resident}
+
+
+def population_curve(clients=DEFAULT_CLIENTS, rounds=DEFAULT_ROUNDS,
+                     cohort=DEFAULT_COHORT, frac=DEFAULT_FRAC,
+                     shards=DEFAULT_SHARDS,
+                     samples_per_client=DEFAULT_SAMPLES_PER_CLIENT) -> dict:
+    import jax
+
+    from repro.core import population
+    out = {
+        "config": {"rounds": int(rounds), "cohort": int(cohort),
+                   "candidate_frac": float(frac),
+                   "candidate_shards": int(shards),
+                   "samples_per_client": int(samples_per_client),
+                   # informational, NOT part of the gate protocol: the
+                   # gated timings use logical shards (device-count
+                   # independent); parity additionally runs shard_map
+                   # over however many devices this host has
+                   "host_devices": len(jax.devices())},
+        "cells": {},
+    }
+    for n in clients:
+        k = min(int(cohort), int(n))
+        single_fn = population.build_population_round(n, k)
+        two_fn = population.build_population_round(
+            n, k, candidate_frac=frac, candidate_shards=shards)
+        state = _seeded_state(n)
+        single_ms, _ = _time_rounds(single_fn, state, rounds)
+        two_ms, _ = _time_rounds(two_fn, state, rounds)
+        cell = {
+            "single_stage_ms": round(single_ms, 3),
+            "two_stage_ms": round(two_ms, 3),
+            "single_stage_rounds_per_sec": round(1e3 / single_ms, 2),
+            "two_stage_rounds_per_sec": round(1e3 / two_ms, 2),
+            "speedup": round(single_ms / two_ms, 3),
+            "frac1_bitexact": _frac1_bitexact(n, k, shards),
+            "sharded_parity": _sharded_parity(n, k, frac, rounds=3),
+        }
+        cell.update(_cohort_peak_mb(n, cohort, samples_per_client))
+        out["cells"][str(n)] = cell
+        print(f"# {n:>9} clients: single {single_ms:8.3f} ms/round, "
+              f"two-stage {two_ms:8.3f} ms/round "
+              f"(x{cell['speedup']:.2f}), cohort peak "
+              f"{cell['cohort_peak_mb']:.1f} MB, frac1 bit-exact "
+              f"{cell['frac1_bitexact']}, sharded parity "
+              f"{cell['sharded_parity']}")
+    cells = sorted(((int(c), v) for c, v in out["cells"].items()))
+    if len(cells) >= 2:
+        (n0, c0), (n1, c1) = cells[0], cells[-1]
+        span = math.log(n1 / n0)
+        out["scaling_exponent"] = {
+            "single_stage": round(
+                math.log(c1["single_stage_ms"] / c0["single_stage_ms"])
+                / span, 3),
+            "two_stage": round(
+                math.log(c1["two_stage_ms"] / c0["two_stage_ms"])
+                / span, 3)}
+        print(f"# scaling exponent (ms/round ~ N^e over "
+              f"{n0}->{n1}): single "
+              f"{out['scaling_exponent']['single_stage']}, two-stage "
+              f"{out['scaling_exponent']['two_stage']} "
+              f"(< 1.0 = sub-linear)")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CI regression gate (mirrors benchmarks/run.py::_check_regression)
+# ---------------------------------------------------------------------------
+
+def check_against(out: dict, committed_path: str,
+                  tolerance: float = 0.30) -> None:
+    with open(committed_path) as f:
+        committed = json.load(f)
+    proto = ["rounds", "cohort", "candidate_frac", "candidate_shards",
+             "samples_per_client"]
+    mismatch = {k: (out["config"].get(k), committed["config"].get(k))
+                for k in proto
+                if out["config"].get(k) != committed["config"].get(k)}
+    if mismatch:
+        raise SystemExit(
+            f"scale-guard config mismatch vs {committed_path}: "
+            f"{mismatch} — run with the committed protocol to use "
+            f"--check-against")
+    shared = sorted((int(c) for c in out["cells"]
+                     if c in committed["cells"]))
+    if not shared:
+        raise SystemExit(
+            f"scale-guard: no population cell in common with "
+            f"{committed_path} (committed "
+            f"{sorted(committed['cells'])}, measured "
+            f"{sorted(out['cells'])})")
+    # machine-speed normalization from the smallest shared cell's
+    # single-stage path (the fixed-protocol reference workload)
+    ref = str(shared[0])
+    scale = (out["cells"][ref]["single_stage_rounds_per_sec"]
+             / max(committed["cells"][ref]["single_stage_rounds_per_sec"],
+                   1e-9))
+    failures = []
+    for n in shared:
+        got_cell, ref_cell = out["cells"][str(n)], committed["cells"][str(n)]
+        floor = (1.0 - tolerance) * ref_cell["two_stage_rounds_per_sec"] \
+            * scale
+        got = got_cell["two_stage_rounds_per_sec"]
+        status = "ok" if got >= floor else "REGRESSION"
+        print(f"# scale-guard [{n}] two-stage rounds/sec={got:.2f} "
+              f"floor={floor:.2f} (committed="
+              f"{ref_cell['two_stage_rounds_per_sec']:.2f} x "
+              f"machine-scale {scale:.2f} x {1 - tolerance:.2f}) {status}")
+        if got < floor:
+            failures.append(f"{n}:rounds_per_sec")
+        # cohort memory is machine-speed independent: a population-
+        # proportional leak shows up as a blown cap
+        cap = ref_cell["cohort_peak_mb"] * (1.0 + tolerance)
+        mem = got_cell["cohort_peak_mb"]
+        status = "ok" if mem <= cap else "REGRESSION"
+        print(f"# scale-guard [{n}] cohort peak {mem:.1f} MB "
+              f"(cap {cap:.1f}) {status}")
+        if mem > cap:
+            failures.append(f"{n}:cohort_peak_mb")
+        for flag in ("frac1_bitexact", "sharded_parity"):
+            if not got_cell.get(flag, False):
+                print(f"# scale-guard [{n}] {flag}=False REGRESSION")
+                failures.append(f"{n}:{flag}")
+    exp = out.get("scaling_exponent")
+    ref_exp = committed.get("scaling_exponent")
+    if exp is not None and ref_exp is not None:
+        got, cap = exp["two_stage"], min(ref_exp["two_stage"] + 0.15, 1.0)
+        status = "ok" if got <= cap else "REGRESSION"
+        print(f"# scale-guard [exponent] two-stage e={got:.3f} "
+              f"(cap {cap:.3f}, sub-linear < 1.0) {status}")
+        if got > cap:
+            failures.append("scaling_exponent")
+    if failures:
+        raise SystemExit(f"scale-guard FAILED: {failures}")
+    print("# scale-guard: all checks ok")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--population", action="store_true",
+                    help="run the 1k->1M population scaling sweep")
+    ap.add_argument("--clients", default=None,
+                    help="comma-separated population sizes "
+                         f"(default {','.join(map(str, DEFAULT_CLIENTS))})")
+    ap.add_argument("--rounds", type=int, default=DEFAULT_ROUNDS)
+    ap.add_argument("--cohort", type=int, default=DEFAULT_COHORT)
+    ap.add_argument("--candidate-frac", type=float, default=DEFAULT_FRAC)
+    ap.add_argument("--candidate-shards", type=int, default=DEFAULT_SHARDS)
+    ap.add_argument("--samples-per-client", type=int,
+                    default=DEFAULT_SAMPLES_PER_CLIENT)
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="force N XLA host devices (must act before the "
+                         "first jax import — the dryrun trick)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the result JSON here")
+    ap.add_argument("--check-against", default=None, metavar="PATH",
+                    help="compare against a committed BENCH_scale.json "
+                         "and exit non-zero on regression")
+    args = ap.parse_args(argv)
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices} "
+            + os.environ.get("XLA_FLAGS", ""))
+    if not args.population:
+        run()
+        return
+    clients = (DEFAULT_CLIENTS if args.clients is None else
+               tuple(int(c) for c in args.clients.split(",")))
+    out = population_curve(clients=clients, rounds=args.rounds,
+                           cohort=args.cohort, frac=args.candidate_frac,
+                           shards=args.candidate_shards,
+                           samples_per_client=args.samples_per_client)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=False)
+            f.write("\n")
+        print(f"# wrote {args.out}")
+    if args.check_against:
+        check_against(out, args.check_against)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -78,7 +78,9 @@ def build_simulation(spec: ExperimentSpec) -> "ae.FederatedSimulation":
                                   megastep=spec.megastep,
                                   rounds_per_dispatch=spec.rounds_per_dispatch,
                                   schedule=spec.resolve_schedule(),
-                                  scenario=spec.resolve_scenario())
+                                  scenario=spec.resolve_scenario(),
+                                  candidate_frac=spec.candidate_frac,
+                                  candidate_shards=spec.candidate_shards)
 
 
 def record_from_metrics(m: "ae.RoundMetrics") -> RoundRecord:
@@ -125,6 +127,8 @@ def _spmd_control_plane(spec: ExperimentSpec, st, world,
         dropout = (float(spec.world.dropout_p),) * C
     return fl_step.ControlPlane(
         num_clients=C, select_k=k,
+        candidate_frac=spec.candidate_frac,
+        candidate_shards=spec.candidate_shards,
         grad_norm_selection=st.grad_norm_selection,
         dropout_p=dropout, quantize=st.quantize_updates,
         per_client_lr=st.per_client_lr,

@@ -65,6 +65,10 @@ class DataSpec:
     seq_len: int = 128                # lm datasets only
     factory: Optional[Callable[[int, int], Any]] = None
     # factory(seed, n) -> (X, y) or {"x": ..., "y": ...} overrides `dataset`
+    samples_per_client: Optional[int] = None
+    # non-resident worlds only (WorldSpec.resident=False): each client's
+    # shard is synthesized lazily at this fixed size, so `n_samples` (a
+    # population-wide total) never has to be materialized
 
 
 @dataclasses.dataclass
@@ -74,6 +78,14 @@ class WorldSpec:
     dropout_p: float = 0.0
     speed_sigma: float = 0.6          # lognormal speed spread (stragglers)
     profile_seed_offset: int = 1      # profiles seeded at seed + offset
+    resident: bool = True             # False -> client shards are NOT
+                                      # materialized up front: build_world
+                                      # returns a LazyWorld that
+                                      # synthesizes each selected client's
+                                      # data on demand (host memory scales
+                                      # with the cohort, not the
+                                      # population; needs
+                                      # data.samples_per_client)
 
 
 @dataclasses.dataclass
@@ -118,6 +130,20 @@ class ExperimentSpec:
                                                # (the pinned reference paths)
     eval_fn: Optional[Callable] = None         # custom eval(params, batch)
     lr_schedule: Optional[Callable] = None     # spmd engine only
+    candidate_frac: Optional[float] = None     # two-stage selection: each
+                                               # of `candidate_shards`
+                                               # logical population shards
+                                               # pre-filters its top
+                                               # ceil(frac·shard) scores
+                                               # and only the union feeds
+                                               # the exact masked top-k.
+                                               # None -> legacy single-
+                                               # stage; 1.0 is bit-
+                                               # identical to it on every
+                                               # execution path
+    candidate_shards: int = 8                  # logical shards of the
+                                               # stage-1 pre-filter (the
+                                               # mesh "data" axis at scale)
     optimizer: Union[str, Any, None] = None    # spmd engine only:
                                                # None -> per-round SGD (the
                                                # sim's semantics); or
@@ -196,6 +222,46 @@ class ExperimentSpec:
             issues.append(SpecIssue("world.num_clients",
                                     self.world.num_clients,
                                     "world.num_clients must be >= 1"))
+        if self.candidate_frac is not None and not (
+                0.0 < self.candidate_frac <= 1.0):
+            issues.append(SpecIssue(
+                "candidate_frac", self.candidate_frac,
+                "candidate_frac must be in (0, 1] (1.0 reproduces "
+                "single-stage selection bit-exactly; None disables the "
+                "pre-filter)"))
+        if self.candidate_shards < 1:
+            issues.append(SpecIssue(
+                "candidate_shards", self.candidate_shards,
+                "candidate_shards must be >= 1"))
+        if not self.world.resident:
+            if self.data.samples_per_client is None:
+                issues.append(SpecIssue(
+                    "world.resident", self.world.resident,
+                    "non-resident worlds need data.samples_per_client "
+                    "(each client's shard is synthesized lazily at a "
+                    "fixed size)"))
+            elif self.data.samples_per_client < 1:
+                issues.append(SpecIssue(
+                    "data.samples_per_client", self.data.samples_per_client,
+                    "samples_per_client must be >= 1"))
+            if self.engine == "spmd":
+                issues.append(SpecIssue(
+                    "world.resident", self.world.resident,
+                    "engine='spmd' stacks every client's batch into one "
+                    "compiled step — non-resident data needs the sim "
+                    "engine's cohort dispatch"))
+            if self.rounds_per_dispatch is not None:
+                issues.append(SpecIssue(
+                    "world.resident", self.world.resident,
+                    "the scanned control plane gathers client data "
+                    "device-side, so the population must be resident — "
+                    "drop rounds_per_dispatch for lazy worlds"))
+            if self.data.factory is not None:
+                issues.append(SpecIssue(
+                    "data.factory", self.data.factory,
+                    "non-resident worlds synthesize per-client shards "
+                    "from the seeded generators; a whole-population "
+                    "factory cannot be materialized lazily"))
         if self.data.dataset not in DATASETS and self.data.factory is None:
             issues.append(SpecIssue(
                 "data.dataset", self.data.dataset,

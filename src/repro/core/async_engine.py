@@ -59,8 +59,8 @@ from repro.core import scenario as scenario_mod
 from repro.core.batchsize import BatchSizeController, ClientMetrics
 from repro.core.checkpoint_policy import fit_weibull, optimal_interval
 from repro.core.schedule import ScheduleSpec
-from repro.core.selection import AdaptiveClientSelector
-from repro.data.loader import ArrayLoader
+from repro.core.selection import AdaptiveClientSelector, candidate_mask_np
+from repro.data.loader import ArrayLoader, LoaderPool
 from repro.kernels import arena as arena_mod
 from repro.models import api
 from repro.optim import adamw as optim_mod
@@ -163,7 +163,9 @@ class FederatedSimulation:
                  megastep: bool = True,
                  rounds_per_dispatch: Optional[int] = None,
                  schedule: Optional[ScheduleSpec] = None,
-                 scenario: Optional[scenario_mod.ScenarioSpec] = None):
+                 scenario: Optional[scenario_mod.ScenarioSpec] = None,
+                 candidate_frac: Optional[float] = None,
+                 candidate_shards: int = 8):
         self.cfg = cfg
         self.strategy = strategy
         # schedule=None -> legacy StrategyConfig.mode shim
@@ -188,6 +190,17 @@ class FederatedSimulation:
             raise ValueError("rounds_per_dispatch requires megastep=True "
                              "(the scanned path runs on the parameter "
                              "arena)")
+        # two-stage selection: None -> legacy single-stage; 1.0 is
+        # bit-identical to it (all-True candidate mask) on every path
+        self.candidate_frac = (None if candidate_frac is None
+                               else float(candidate_frac))
+        self.candidate_shards = max(1, int(candidate_shards))
+        self._lazy_world = bool(getattr(client_arrays, "lazy", False))
+        if self._lazy_world and self.rounds_per_dispatch:
+            raise ValueError(
+                "the scanned control plane gathers client data "
+                "device-side, so the population must be resident — drop "
+                "rounds_per_dispatch for lazy worlds")
         self.dispatches = 0           # compiled-call count (bench metric)
 
         # --- dynamic-world scenario (core/scenario.py) --------------------
@@ -238,14 +251,28 @@ class FederatedSimulation:
 
         # --- per-client state --------------------------------------------
         self.batch_ctrl = BatchSizeController()
-        self.loaders = []
-        for cid, arrays in enumerate(client_arrays):
+
+        def initial_bs(cid: int) -> int:
             bs = strategy.batch_size
             if strategy.dynamic_batch:
                 p = profiles[cid]
                 bs = self.batch_ctrl.initial(cid, ClientMetrics(
-                    compute=p.speed, memory=p.memory, latency=p.net_latency))
-            self.loaders.append(ArrayLoader(arrays, bs, seed=seed + cid))
+                    compute=p.speed, memory=p.memory,
+                    latency=p.net_latency))
+            return bs
+
+        if self._lazy_world:
+            # non-resident world: loaders (and the client shards behind
+            # them) materialize per selected cohort, LRU-bounded — host
+            # memory scales with cohort size, not population
+            k = max(1, int(strategy.select_fraction * self.num_clients))
+            self.loaders = LoaderPool(client_arrays, initial_bs,
+                                      seed=seed,
+                                      capacity=max(4 * k, 64))
+        else:
+            self.loaders = [ArrayLoader(arrays, initial_bs(cid),
+                                        seed=seed + cid)
+                            for cid, arrays in enumerate(client_arrays)]
         self.selector = AdaptiveClientSelector(self.num_clients, seed=seed)
         self.client_lr_scale = np.ones(self.num_clients)
         self.grad_norms = np.ones(self.num_clients)
@@ -432,7 +459,22 @@ class FederatedSimulation:
             selected = [int(c) for c in np.argsort(-gn)[:k]
                         if live is None or live[c]]
         elif st.selection and st.select_fraction < 1.0:
-            selected = self.selector.select(k, live=live)
+            candidates = None
+            if self.candidate_frac is not None:
+                # stage 1: the sharded candidate pre-filter, computed on
+                # the SAME effective scores the device paths rank (live
+                # mask applied before the per-shard top-k). frac=1.0 is
+                # an all-True mask -> bit-identical selections.
+                scores = np.array([self.selector.score(c)
+                                   for c in range(self.num_clients)])
+                if live is not None:
+                    scores = np.where(np.asarray(live, bool), scores,
+                                      -np.inf)
+                candidates = candidate_mask_np(scores, k,
+                                               self.candidate_frac,
+                                               self.candidate_shards)
+            selected = self.selector.select(k, live=live,
+                                            candidates=candidates)
         else:
             selected = [c for c in range(self.num_clients)
                         if live is None or live[c]]
@@ -785,6 +827,11 @@ class FederatedSimulation:
         """Build the device world + ControlState once (lazy)."""
         if self._scan_world is not None:
             return self._scan_world
+        if self._lazy_world:
+            raise RuntimeError(
+                "the scanned control plane stacks the full population "
+                "device-side; non-resident worlds run the loop/megastep "
+                "paths")
         cap = max(l.n for l in self.loaders)
         data = {}
         for k in self.loaders[0].arrays:
@@ -834,7 +881,9 @@ class FederatedSimulation:
                 restart_time=self.restart_time,
                 schedule=self.schedule,
                 scenario=self.scenario, drift_dirs=self._drift_dirs,
-                drift_label=self._drift_label or "y")
+                drift_label=self._drift_label or "y",
+                candidate_frac=self.candidate_frac,
+                candidate_shards=self.candidate_shards)
         return self._scan_fns[R]
 
     def _run_scanned(self, num_rounds: int,
@@ -925,9 +974,10 @@ class FederatedSimulation:
         return {
             "round_idx": self.round_idx,
             "rng": self.rng.bit_generator.state,
-            "loaders": [{"batch_size": l.batch_size,
-                         "rng": l.rng.bit_generator.state}
-                        for l in self.loaders],
+            "loaders": (self.loaders.state_dict() if self._lazy_world
+                        else [{"batch_size": l.batch_size,
+                               "rng": l.rng.bit_generator.state}
+                              for l in self.loaders]),
             "selector": {
                 "rng": self.selector.rng.bit_generator.state,
                 "records": {cid: dataclasses.asdict(r)
@@ -975,13 +1025,24 @@ class FederatedSimulation:
 
         self.round_idx = state["round_idx"]
         self.rng = _gen(state["rng"])
-        if len(state["loaders"]) != len(self.loaders):
+        saved_loaders = state["loaders"]
+        saved_lazy = (isinstance(saved_loaders, dict)
+                      and saved_loaders.get("lazy"))
+        if self._lazy_world != bool(saved_lazy):
             raise ValueError(
-                f"checkpoint has {len(state['loaders'])} client loaders, "
-                f"this world has {len(self.loaders)}")
-        for l, s in zip(self.loaders, state["loaders"]):
-            l.batch_size = s["batch_size"]
-            l.rng = _gen(s["rng"])
+                "checkpoint world residency mismatch: saved "
+                f"{'lazy' if saved_lazy else 'eager'} loaders, this "
+                f"world is {'lazy' if self._lazy_world else 'eager'}")
+        if self._lazy_world:
+            self.loaders.load_state_dict(saved_loaders)
+        else:
+            if len(saved_loaders) != len(self.loaders):
+                raise ValueError(
+                    f"checkpoint has {len(saved_loaders)} client "
+                    f"loaders, this world has {len(self.loaders)}")
+            for l, s in zip(self.loaders, saved_loaders):
+                l.batch_size = s["batch_size"]
+                l.rng = _gen(s["rng"])
         self.selector.rng = _gen(state["selector"]["rng"])
         from repro.core.selection import ClientRecord
         self.selector.records = {
@@ -1058,16 +1119,62 @@ class FederatedSimulation:
 # profile factories
 # ---------------------------------------------------------------------------
 
-def heterogeneous_profiles(n: int, seed: int = 0, dropout_p: float = 0.0,
-                           speed_sigma: float = 0.6) -> List[ClientProfile]:
-    """Lognormal speeds (stragglers!), uniform latencies."""
+def heterogeneous_profile_arrays(n: int, seed: int = 0,
+                                 dropout_p: float = 0.0,
+                                 speed_sigma: float = 0.6) -> dict:
+    """Array-backed profile fields (the million-client spelling): the
+    SAME Generator draws, in the same order, as the historical
+    ``heterogeneous_profiles`` list — one dict of four (n,) arrays
+    instead of n dataclass instances."""
     rng = np.random.default_rng(seed)
     speeds = rng.lognormal(0.0, speed_sigma, size=n)
     lats = rng.uniform(0.01, 0.2, size=n)
     mems = rng.uniform(0.4, 1.0, size=n)
+    return {"speed": speeds, "net_latency": lats,
+            "dropout_p": np.full(n, float(dropout_p)), "memory": mems}
+
+
+def uniform_profile_arrays(n: int, dropout_p: float = 0.0) -> dict:
+    return {"speed": np.ones(n), "net_latency": np.zeros(n),
+            "dropout_p": np.full(n, float(dropout_p)),
+            "memory": np.ones(n)}
+
+
+class ProfileView:
+    """Sequence[ClientProfile] over per-field arrays.
+
+    ``view[cid]`` builds one dataclass per ACCESS instead of holding one
+    per client — at 1M clients the list is hundreds of MB of Python
+    objects, the four float arrays ~32 MB. Duck-types the profile lists
+    everywhere the engine indexes or iterates them."""
+
+    def __init__(self, arrays: dict):
+        self._a = arrays
+
+    def __len__(self) -> int:
+        return len(self._a["speed"])
+
+    def field(self, name: str) -> np.ndarray:
+        return self._a[name]
+
+    def __getitem__(self, cid):
+        if isinstance(cid, slice):
+            return [self[i] for i in range(*cid.indices(len(self)))]
+        a = self._a
+        return ClientProfile(speed=float(a["speed"][cid]),
+                             net_latency=float(a["net_latency"][cid]),
+                             dropout_p=float(a["dropout_p"][cid]),
+                             memory=float(a["memory"][cid]))
+
+
+def heterogeneous_profiles(n: int, seed: int = 0, dropout_p: float = 0.0,
+                           speed_sigma: float = 0.6) -> List[ClientProfile]:
+    """Lognormal speeds (stragglers!), uniform latencies."""
+    a = heterogeneous_profile_arrays(n, seed=seed, dropout_p=dropout_p,
+                                     speed_sigma=speed_sigma)
     return [ClientProfile(speed=float(s), net_latency=float(l),
                           dropout_p=dropout_p, memory=float(m))
-            for s, l, m in zip(speeds, lats, mems)]
+            for s, l, m in zip(a["speed"], a["net_latency"], a["memory"])]
 
 
 def uniform_profiles(n: int, dropout_p: float = 0.0) -> List[ClientProfile]:

@@ -38,6 +38,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import selection
+
 _POW2_MIN, _POW2_MAX = 64, 1024
 
 
@@ -86,6 +88,27 @@ def init_control(num_clients: int, batch_sizes=None, lr_scale=None,
 # selection statistics (oracle: core.selection.AdaptiveClientSelector)
 # ---------------------------------------------------------------------------
 
+def observe_ema(avail_c: jnp.ndarray, pass_c: jnp.ndarray,
+                rt_c: jnp.ndarray, mask: jnp.ndarray,
+                delivered: jnp.ndarray, passed: jnp.ndarray,
+                round_time: jnp.ndarray, ema: float):
+    """The EMA arithmetic of one observation batch on GATHERED values.
+
+    Factored out of ``observe`` so the shard-local population kernels
+    (core/population.py) run the IDENTICAL float ops on their local
+    gathers — bit-identity between the sharded and the single-device
+    control plane hinges on sharing this function."""
+    e = jnp.float32(ema)
+    new_avail = e * avail_c + (1.0 - e) * delivered.astype(jnp.float32)
+    new_avail = jnp.where(mask, new_avail, avail_c)
+    upd = mask & delivered
+    new_pass = jnp.where(upd,
+                         e * pass_c + (1.0 - e) * passed.astype(jnp.float32),
+                         pass_c)
+    new_rt = jnp.where(upd, e * rt_c + (1.0 - e) * round_time, rt_c)
+    return new_avail, new_pass, new_rt
+
+
 def observe(state: ControlState, cohort: jnp.ndarray, mask: jnp.ndarray,
             delivered: jnp.ndarray, passed: jnp.ndarray,
             round_time: jnp.ndarray, ema: float = 0.8) -> ControlState:
@@ -97,17 +120,9 @@ def observe(state: ControlState, cohort: jnp.ndarray, mask: jnp.ndarray,
     availability moves toward ``delivered``; pass-rate and round-time
     move only when the client delivered.
     """
-    e = jnp.float32(ema)
-    avail_c = state.avail[cohort]
-    new_avail = e * avail_c + (1.0 - e) * delivered.astype(jnp.float32)
-    new_avail = jnp.where(mask, new_avail, avail_c)
-    upd = mask & delivered
-    pass_c = state.pass_rate[cohort]
-    new_pass = jnp.where(upd,
-                         e * pass_c + (1.0 - e) * passed.astype(jnp.float32),
-                         pass_c)
-    rt_c = state.round_time[cohort]
-    new_rt = jnp.where(upd, e * rt_c + (1.0 - e) * round_time, rt_c)
+    new_avail, new_pass, new_rt = observe_ema(
+        state.avail[cohort], state.pass_rate[cohort],
+        state.round_time[cohort], mask, delivered, passed, round_time, ema)
     return state._replace(
         avail=state.avail.at[cohort].set(new_avail),
         pass_rate=state.pass_rate.at[cohort].set(new_pass),
@@ -196,17 +211,88 @@ def select_topk_epsilon(scores: jnp.ndarray, k: int,
 
 def select_topk(scores: jnp.ndarray, k: int, key=None,
                 epsilon: float = 0.0,
-                live: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                live: Optional[jnp.ndarray] = None,
+                candidate_frac: Optional[float] = None,
+                candidate_shards: int = 8) -> jnp.ndarray:
     """Convenience wrapper drawing the exploration uniforms from a PRNG
     key (one ``(k,)`` draw per decision, mirroring the oracle's one
-    ``rng.random()`` + one ``rng.integers()`` per slot)."""
+    ``rng.random()`` + one ``rng.integers()`` per slot). Routes through
+    ``two_stage_select`` so callers can attach the candidate
+    pre-filter; ``candidate_frac=None`` keeps the legacy single-stage
+    decision untouched."""
     if key is None or epsilon <= 0.0:
-        return select_topk_epsilon(scores, k, live=live)
+        return two_stage_select(scores, k, candidate_frac=candidate_frac,
+                                candidate_shards=candidate_shards,
+                                live=live)
     ke, kp = jax.random.split(key)
-    return select_topk_epsilon(
-        scores, k, epsilon,
+    return two_stage_select(
+        scores, k, candidate_frac=candidate_frac,
+        candidate_shards=candidate_shards, epsilon=epsilon,
         eps_u=jax.random.uniform(ke, (int(k),)),
         pick_u=jax.random.uniform(kp, (int(k),)), live=live)
+
+
+# ---------------------------------------------------------------------------
+# two-stage selection (oracle: core.selection.candidate_mask_np)
+# ---------------------------------------------------------------------------
+
+def candidate_mask(scores: jnp.ndarray, k: int, frac: float,
+                   shards: int) -> jnp.ndarray:
+    """(N,) bool — stage 1 of two-stage selection: the sharded candidate
+    pre-filter.
+
+    The score vector is viewed as ``shards`` contiguous logical shards
+    (last one -inf-padded) and each shard keeps only its top-``quota``
+    entries (``selection.candidate_quota``; ties -> lower index, the
+    same order as the stable descending argsort stage 2 uses). The
+    union of the per-shard winners is what the exact masked top-k then
+    sees. Cost per shard is O(per·quota) instead of a global O(N log N)
+    sort, and under ``shard_map`` each device only ranks its own rows.
+
+    Exactness: with ``quota >= k`` (always true at ``frac=1.0``, where
+    the mask is all-True) every global top-k member survives its own
+    shard's cut, so stage 2 returns bit-identical selections.
+    """
+    n = scores.shape[0]
+    shards = max(1, min(int(shards), int(n)))
+    per = -(-n // shards)
+    quota = selection.candidate_quota(n, k, frac, shards)
+    pad = shards * per - n
+    s = scores
+    if pad:
+        s = jnp.concatenate(
+            [s, jnp.full((pad,), -jnp.inf, scores.dtype)])
+    s = s.reshape(shards, per)
+    _, keep = jax.lax.top_k(s, quota)
+    mask = jnp.zeros((shards, per), bool)
+    mask = mask.at[jnp.arange(shards)[:, None], keep].set(True)
+    return mask.reshape(-1)[:n]
+
+
+def two_stage_select(scores: jnp.ndarray, k: int, *,
+                     candidate_frac: Optional[float] = None,
+                     candidate_shards: int = 8,
+                     epsilon: float = 0.0,
+                     eps_u: Optional[jnp.ndarray] = None,
+                     pick_u: Optional[jnp.ndarray] = None,
+                     live: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Candidate pre-filter + the existing exact masked top-k.
+
+    ``candidate_frac=None`` is the legacy single-stage path, untouched.
+    Otherwise non-candidates are masked to -inf for the top-k AND
+    removed from the ε-exploration pool (exploration stays inside the
+    candidate union by design — at scale the pool must not require the
+    full population). At ``frac=1.0`` the mask is all-True, so both the
+    scores and the pool are bit-identical to single-stage.
+    """
+    if candidate_frac is None:
+        return select_topk_epsilon(scores, k, epsilon,
+                                   eps_u=eps_u, pick_u=pick_u, live=live)
+    cand = candidate_mask(scores, k, candidate_frac, candidate_shards)
+    masked = jnp.where(cand, scores, -jnp.inf)
+    pool_live = cand if live is None else (live & cand)
+    return select_topk_epsilon(masked, k, epsilon,
+                               eps_u=eps_u, pick_u=pick_u, live=pool_live)
 
 
 # ---------------------------------------------------------------------------
@@ -224,16 +310,27 @@ def batch_feedback(state: ControlState, cohort: jnp.ndarray,
     median over the valid entries — ``sorted(ts)[len(ts)//2]`` — exactly
     the host controller's rule.
     """
+    new_b = batch_rule(state.batch[cohort], round_times, valid,
+                       b_min, b_max, straggler_factor)
+    return state._replace(batch=state.batch.at[cohort].set(new_b))
+
+
+def batch_rule(b: jnp.ndarray, round_times: jnp.ndarray,
+               valid: jnp.ndarray, b_min: int = _POW2_MIN,
+               b_max: int = _POW2_MAX,
+               straggler_factor: float = 1.5) -> jnp.ndarray:
+    """``batch_feedback``'s decision on GATHERED assignments (shared
+    with the shard-local kernels). The median is computed from the
+    replicated (K,) cohort observations, so every shard derives the
+    identical threshold."""
     m = valid.sum().astype(jnp.int32)
     ts = jnp.where(valid, round_times, jnp.inf)
     med = jnp.sort(ts)[jnp.minimum(m // 2, ts.shape[0] - 1)]
-    b = state.batch[cohort]
     f = jnp.float32(straggler_factor)
     demote = (round_times > f * med) & (b > b_min)
     promote = (round_times < med / f) & (b < b_max)
     new_b = jnp.where(demote, b // 2, jnp.where(promote, b * 2, b))
-    new_b = jnp.where(valid & (m > 0), new_b, b)
-    return state._replace(batch=state.batch.at[cohort].set(new_b))
+    return jnp.where(valid & (m > 0), new_b, b)
 
 
 # ---------------------------------------------------------------------------

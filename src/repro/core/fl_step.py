@@ -72,6 +72,10 @@ class ControlPlane:
     num_clients: int
     select_k: int
     epsilon: float = 0.1
+    candidate_frac: Optional[float] = None
+    # two-stage selection: per-shard candidate pre-filter before the
+    # exact masked top-k (None -> single-stage; 1.0 bit-identical to it)
+    candidate_shards: int = 8
     grad_norm_selection: bool = False
     dropout_p: Tuple[float, ...] = ()
     quantize: bool = False
@@ -199,7 +203,9 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
                     scores = jnp.where(ws.live, scores, -jnp.inf)
                 sel_idx = control_mod.select_topk(
                     scores, cp.select_k, key=k_sel, epsilon=cp.epsilon,
-                    live=None if scn is None else ws.live)
+                    live=None if scn is None else ws.live,
+                    candidate_frac=cp.candidate_frac,
+                    candidate_shards=cp.candidate_shards)
             else:
                 sel_idx = None
             if sel_idx is not None:

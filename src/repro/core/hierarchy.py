@@ -26,6 +26,11 @@ class PodSyncState(NamedTuple):
     global_ref_sign: dict      # sign of the last cross-pod global update
     last_global: dict          # params after the last cross-pod sync
     rounds_since_sync: jnp.ndarray
+    has_ref: jnp.ndarray
+    # bool scalar: a sync has happened, so global_ref_sign is a real
+    # reference. Tracked explicitly because rounds_since_sync == 0 ALSO
+    # holds right after every sync reset — keying the bootstrap rule on
+    # the counter silently disarmed the cross-pod veto at sync_every=1.
 
 
 def init_pod_sync(params) -> PodSyncState:
@@ -33,7 +38,8 @@ def init_pod_sync(params) -> PodSyncState:
         global_ref_sign=jax.tree.map(
             lambda p: jnp.zeros_like(p, jnp.int8), params),
         last_global=jax.tree.map(lambda p: p.astype(jnp.float32), params),
-        rounds_since_sync=jnp.zeros((), jnp.int32))
+        rounds_since_sync=jnp.zeros((), jnp.int32),
+        has_ref=jnp.asarray(False))
 
 
 def maybe_pod_sync(pod_params, state: PodSyncState, *, sync_every: int,
@@ -51,8 +57,7 @@ def maybe_pod_sync(pod_params, state: PodSyncState, *, sync_every: int,
         ratios = alignment.per_client_alignment(deltas, state.global_ref_sign)
         passed = alignment.selection_mask(ratios, theta)
         # bootstrap / fallback: accept all when no reference or no pass
-        no_ref = state.rounds_since_sync == 0
-        mask = jnp.where((passed.sum() > 0) & ~no_ref,
+        mask = jnp.where((passed.sum() > 0) & state.has_ref,
                          passed, jnp.ones_like(passed))
         agg_delta = aggregation.masked_mean(deltas, mask)
         new_global = jax.tree.map(
@@ -63,7 +68,8 @@ def maybe_pod_sync(pod_params, state: PodSyncState, *, sync_every: int,
         new_ref = jax.tree.map(
             lambda d: jnp.sign(d).astype(jnp.int8), agg_delta)
         return (new_pod, PodSyncState(new_ref, new_global,
-                                      jnp.zeros((), jnp.int32)),
+                                      jnp.zeros((), jnp.int32),
+                                      jnp.asarray(True)),
                 {"synced": jnp.float32(1.0), "pod_accept": mask.mean(),
                  "pod_alignment": ratios.mean()})
 

@@ -146,7 +146,8 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
                          ema: float = 0.8, recovery_time: float = 0.2,
                          restart_time: float = 1.0, schedule=None,
                          scenario=None, drift_dirs=None,
-                         drift_label: str = "y"):
+                         drift_label: str = "y", candidate_frac=None,
+                         candidate_shards: int = 8):
     """Compile ``rounds_per_dispatch`` full FL rounds — {select → train
     cohort → θ-filter → staleness-weighted arena aggregate → control
     update} — into one jitted ``lax.scan``.
@@ -218,8 +219,12 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
             scores = control.score(ctl)
             if scn is not None:
                 scores = jnp.where(ws.live, scores, -jnp.inf)
-            cohort = control.select_topk_epsilon(
-                scores, K, epsilon,
+            # two-stage: the sharded candidate pre-filter runs on the
+            # live-masked scores (candidate_frac=None -> single-stage,
+            # 1.0 -> all-True mask, bit-identical either way)
+            cohort = control.two_stage_select(
+                scores, K, candidate_frac=candidate_frac,
+                candidate_shards=candidate_shards, epsilon=epsilon,
                 eps_u=jax.random.uniform(k_eps, (K,)),
                 pick_u=jax.random.uniform(k_pick, (K,)),
                 live=None if scn is None else ws.live)

@@ -31,6 +31,34 @@ def _make_mesh(shape, axes, devices=None):
     return jax.make_mesh(shape, axes, **kwargs)
 
 
+def fold_mesh_shape(n: int, *, multi_pod: bool = False) -> tuple:
+    """Fold ``n`` devices into the largest valid mesh shape.
+
+    "model" takes the largest power-of-two divisor of ``n`` up to the
+    canonical 16 (tensor parallelism wants a power of two; anything
+    wider than 16 splits head dims); "data" absorbs the rest. multi_pod
+    peels a leading pod=2, so it needs an even device count.
+    """
+    n = int(n)
+    if n < 1:
+        raise RuntimeError(f"cannot build a mesh from {n} devices")
+    shape = ()
+    if multi_pod:
+        if n % 2:
+            raise RuntimeError(
+                f"multi_pod mesh needs an even device count, have {n} "
+                f"devices — drop multi_pod or launch via "
+                f"repro.launch.dryrun (forces 512 host devices)")
+        shape, n = (2,), n // 2
+        if n < 1:
+            raise RuntimeError(
+                "multi_pod mesh needs >= 2 devices, have 2·0")
+    model = 1
+    while model * 2 <= min(16, n) and n % (model * 2) == 0:
+        model *= 2
+    return shape + (n // model, model)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
@@ -38,12 +66,26 @@ def make_production_mesh(*, multi_pod: bool = False):
     devices = jax.devices()
     if len(devices) == n:
         return _make_mesh(shape, axes)
-    if len(devices) < n:
-        raise RuntimeError(
-            f"need {n} devices for mesh {shape}, have {len(devices)} — "
-            f"launch via repro.launch.dryrun (forces 512 host devices)")
-    # more devices than needed (e.g. 512 forced, single-pod 256): subset
-    return _make_mesh(shape, axes, devices=devices[:n])
+    if len(devices) > n:
+        # more devices than needed (e.g. 512 forced, single-pod 256)
+        return _make_mesh(shape, axes, devices=devices[:n])
+    # generic fallback: fold whatever this host provides into the
+    # largest valid (data, model) shape (fold_mesh_shape raises with
+    # the device count when no valid fold exists, e.g. multi_pod odd)
+    return _make_mesh(fold_mesh_shape(len(devices), multi_pod=multi_pod),
+                      axes, devices=devices)
+
+
+def make_population_mesh(devices=None):
+    """1-D population mesh: every device on the "data" axis (model=1).
+
+    The population plane ((num_clients,) control/world arrays,
+    core/population.py) shards over "data" only — it has no model axis
+    to fill, so unlike the production grid ANY device count is a valid
+    shape."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    return _make_mesh((len(devices), 1), ("data", "model"),
+                      devices=devices)
 
 
 def make_debug_mesh(shape=(1, 1), axes=("data", "model")):

@@ -241,6 +241,39 @@ def cache_pspecs(cfg, mesh, cache_shapes):
     return jax.tree_util.tree_map_with_path(rule, cache_shapes)
 
 
+# --------------------------------------------------------------------------
+# population-plane rules (ControlState / WorldState / per-client scalars)
+# --------------------------------------------------------------------------
+
+def population_pspecs(tree, mesh, num_clients: int):
+    """Shard every ``(num_clients, ...)``-leading leaf over "data".
+
+    Covers ``core.control.ControlState``, ``core.scenario.WorldState``
+    and any bare per-client scalar array (pass-rate EMAs, staleness
+    counters, FedDyn-style slots). Leaves whose leading dim is NOT the
+    population — scalars, (K,)-cohort slots, the ``(N+1, rows, lane)``
+    error-feedback arena with its dummy-row layout, 0-width placeholders
+    — replicate. Falls back to replication when the population does not
+    divide the "data" axis evenly (``_maybe``)."""
+    n = int(num_clients)
+
+    def rule(leaf):
+        shape = getattr(leaf, "shape", ())
+        if len(shape) >= 1 and shape[0] == n and _maybe(mesh, "data", n):
+            return P(*(("data",) + (None,) * (len(shape) - 1)))
+        return P(*((None,) * len(shape)))
+
+    return jax.tree.map(rule, tree)
+
+
+def shard_population(tree, mesh, num_clients: int):
+    """device_put the population pytree under ``population_pspecs``."""
+    specs = population_pspecs(tree, mesh, num_clients)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        tree, specs)
+
+
 def to_named(mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))

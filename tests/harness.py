@@ -50,7 +50,8 @@ from typing import Dict, Optional, Sequence
 import numpy as np
 
 from repro.api import (DataSpec, ExperimentSession, ExperimentSpec,
-                       SpecError, StrategyConfig, WorldSpec, run_experiment)
+                       ROUND_FIELDS, SpecError, StrategyConfig, WorldSpec,
+                       run_experiment)
 from repro.core import scenario as scenario_mod
 
 PATHS = ("loop", "megastep", "scanned1", "scanned4", "spmd")
@@ -154,6 +155,34 @@ def assert_scan_equivalent(grouped_res, single_res, R: int = 4) -> None:
                 f"scanned grouping changed {f} at round {i}"
         if (i + 1) % R == 0 or i == n - 1:
             assert a.accuracy == b.accuracy
+
+
+def assert_candidate_frac_noop(spec: ExperimentSpec,
+                               paths: Optional[Sequence[str]] = None,
+                               shards: int = 4) -> None:
+    """candidate_frac=1.0 must reproduce single-stage selection
+    BIT-EXACTLY on every execution path: with quota == per-shard size
+    the candidate union is the whole population, so stage 2 sees the
+    identical masked scores (two_stage exactness contract). The cell
+    must actually select (select_fraction < 1), else selection is
+    inert and the assert proves nothing."""
+    st = spec.resolve_strategy()
+    assert st.selection and st.select_fraction < 1.0, \
+        "cell must select a strict cohort for the noop check to bite"
+    assert spec.candidate_frac is None, "pass the single-stage spec"
+    two = dataclasses.replace(spec, candidate_frac=1.0,
+                              candidate_shards=shards)
+    for p in valid_paths(spec, paths if paths is not None else PATHS):
+        a, b = run_cell(spec, p), run_cell(two, p)
+        assert len(a.records) == len(b.records)
+        for ra, rb in zip(a.records, b.records):
+            for f in ROUND_FIELDS:
+                va, vb = getattr(ra, f), getattr(rb, f)
+                if va != va and vb != vb:
+                    continue          # NaN == NaN (unmeasured accuracy)
+                assert va == vb, \
+                    (f"{p}: candidate_frac=1.0 changed {f} at round "
+                     f"{ra.round}: {va!r} != {vb!r}")
 
 
 def accounting_deterministic(spec: ExperimentSpec) -> bool:
@@ -318,6 +347,16 @@ def main(argv=None) -> int:
         except AssertionError as e:
             failures.append(name)
             print(f"# cell {name:<22} FAILED: {e}")
+    # two-stage selection: candidate_frac=1.0 must be a bit-exact noop
+    # on every path (selection must bite: strict select_fraction)
+    noop = base_spec(rounds=rounds, num_clients=6, select_fraction=0.5)
+    try:
+        assert_candidate_frac_noop(noop)
+        print("# candidate_frac=1.0 noop on "
+              f"{','.join(valid_paths(noop))}  OK")
+    except AssertionError as e:
+        failures.append("candidate-frac-noop")
+        print(f"# candidate_frac=1.0 noop FAILED: {e}")
     # byzantine rejection on every path that can carry it — 8 rounds
     # even in smoke mode: the 0.8-EMA needs ~4 rejections to provably
     # cross below 0.5 (1 -> 0.8^k), and round 0 has no reference yet.

@@ -36,8 +36,7 @@ def _np_tree(tree):
 # host oracle (numpy twin of maybe_pod_sync's do_sync branch)
 # ---------------------------------------------------------------------------
 
-def oracle_sync(pod_params, last_global, ref_sign, rounds_since_sync,
-                theta):
+def oracle_sync(pod_params, last_global, ref_sign, has_ref, theta):
     deltas = {k: pod_params[k] - last_global[k][None] for k in pod_params}
     total = sum(np.prod(s) for s in SHAPES.values())
     aligned = np.zeros(P)
@@ -47,8 +46,7 @@ def oracle_sync(pod_params, last_global, ref_sign, rounds_since_sync,
         aligned += eq.sum(axis=1)
     ratios = aligned / total
     passed = (ratios >= theta).astype(np.float32)
-    no_ref = rounds_since_sync == 0
-    mask = passed if (passed.sum() > 0 and not no_ref) \
+    mask = passed if (passed.sum() > 0 and has_ref) \
         else np.ones(P, np.float32)
     denom = max(mask.sum(), 1e-9)
     agg = {k: np.tensordot(mask, deltas[k], axes=(0, 0)) / denom
@@ -122,37 +120,35 @@ def test_first_sync_accepts_all_pods_and_broadcasts_mean():
 # ---------------------------------------------------------------------------
 
 def _establish_ref(seed=3, step=0.5):
-    """One bootstrap sync (+step movement -> ref_sign = +1) followed by
-    one off-round under sync_every=2. The off-round matters: ``no_ref``
-    is ``rounds_since_sync == 0``, which is ALSO true right after every
-    sync reset — the veto can only engage on a sync whose counter is
-    nonzero, i.e. with sync_every >= 2 (documented lax.cond semantics)."""
+    """One bootstrap sync (+step movement -> ref_sign = +1). The sync
+    sets ``has_ref``, so the veto is armed IMMEDIATELY — no off-round
+    needed, even at sync_every=1 (the counter-based ``no_ref`` rule this
+    replaced could only arm the veto with sync_every >= 2)."""
     base = _tree(lambda s: jnp.ones(s, jnp.float32))
     state = hierarchy.init_pod_sync(base)
     pod = {k: jnp.stack([base[k] + step * (i + 1) for i in range(P)])
            for k in SHAPES}
     pod, state, m = hierarchy.maybe_pod_sync(pod, state, sync_every=1,
                                              theta=0.6)
-    assert m["synced"] == 1.0
-    pod, state, m = hierarchy.maybe_pod_sync(pod, state, sync_every=2,
-                                             theta=0.6)
-    assert m["synced"] == 0.0 and int(state.rounds_since_sync) == 1
+    assert m["synced"] == 1.0 and bool(state.has_ref)
     return pod, state
 
 
 def test_anti_aligned_pod_is_vetoed_matching_oracle():
     pod, state = _establish_ref()
     # pods 0/1 keep moving WITH the global direction; pod 2 moves
-    # against it — the sign-alignment test must exclude pod 2
+    # against it — the sign-alignment test must exclude pod 2. This sync
+    # runs at sync_every=1, the cadence where the old counter-based
+    # ``no_ref`` rule silently disarmed the veto.
     moved = {k: pod[k].at[0].add(0.3).at[1].add(0.2).at[2].add(-0.4)
              for k in SHAPES}
     exp_global, exp_ref, exp_mask, exp_m = oracle_sync(
         _np_tree(moved), _np_tree(state.last_global),
-        _np_tree(state.global_ref_sign), int(state.rounds_since_sync),
+        _np_tree(state.global_ref_sign), bool(state.has_ref),
         theta=0.6)
     np.testing.assert_array_equal(exp_mask, [1.0, 1.0, 0.0])  # the veto
     new_pod, new_state, m = hierarchy.maybe_pod_sync(
-        moved, state, sync_every=2, theta=0.6)
+        moved, state, sync_every=1, theta=0.6)
     assert m["synced"] == 1.0
     np.testing.assert_allclose(float(m["pod_accept"]),
                                exp_m["pod_accept"], rtol=1e-6)
@@ -174,11 +170,11 @@ def test_all_pods_vetoed_falls_back_to_accept_all():
     moved = {k: pod[k] - 0.3 for k in SHAPES}       # everyone anti-aligned
     exp_global, _ref, exp_mask, exp_m = oracle_sync(
         _np_tree(moved), _np_tree(state.last_global),
-        _np_tree(state.global_ref_sign), int(state.rounds_since_sync),
+        _np_tree(state.global_ref_sign), bool(state.has_ref),
         theta=0.6)
     np.testing.assert_array_equal(exp_mask, np.ones(P))
     _pod, new_state, m = hierarchy.maybe_pod_sync(moved, state,
-                                                  sync_every=2, theta=0.6)
+                                                  sync_every=1, theta=0.6)
     assert m["synced"] == 1.0 and float(m["pod_accept"]) == 1.0
     assert float(m["pod_alignment"]) < 0.6          # genuinely misaligned
     for k in SHAPES:
@@ -196,6 +192,7 @@ def test_seeded_trajectory_matches_oracle():
     np_global = _np_tree(state.last_global)
     np_ref = _np_tree(state.global_ref_sign)
     count = 0
+    has_ref = False
     for step in range(6):
         pod = jax.tree.map(
             lambda x: x + jnp.asarray(
@@ -204,7 +201,8 @@ def test_seeded_trajectory_matches_oracle():
         due = (count + 1) >= 2
         if due:
             np_global, np_ref, _mask, exp_m = oracle_sync(
-                _np_tree(pod), np_global, np_ref, count, theta=0.55)
+                _np_tree(pod), np_global, np_ref, has_ref, theta=0.55)
+            has_ref = True
         pod, state, m = hierarchy.maybe_pod_sync(pod, state,
                                                  sync_every=2, theta=0.55)
         if due:

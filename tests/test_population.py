@@ -1,0 +1,341 @@
+"""Million-client population plane (core/population.py + the lazy
+world): shard-local control transitions pinned bitwise to the global
+rules, two-stage selection exactness, non-resident cohort determinism,
+and the population mesh/sharding helpers."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import DataSpec, ExperimentSpec, SpecError, WorldSpec
+from repro.core import control, population
+from repro.core.selection import candidate_mask_np, candidate_quota
+from repro.data.loader import ArrayLoader, LoaderPool
+from repro.data.partition import LazyPartition, client_seed
+from repro.launch import mesh as mesh_mod
+from repro.launch import sharding
+from tests import harness
+
+
+def _state(n, seed=0):
+    rng = np.random.default_rng(seed)
+    st = control.init_control(n)
+    return st._replace(
+        avail=jnp.asarray(rng.uniform(0.2, 1.0, n).astype(np.float32)),
+        pass_rate=jnp.asarray(rng.uniform(0.5, 1.0, n).astype(np.float32)),
+        round_time=jnp.asarray(rng.uniform(0.5, 2.0, n).astype(np.float32)))
+
+
+def _obs(k, seed):
+    rng = np.random.default_rng(seed)
+    failed = rng.random(k) < 0.2
+    active = ~failed
+    passed = (rng.random(k) < 0.8) & active
+    return dict(failed=jnp.asarray(failed), active=jnp.asarray(active),
+                passed=jnp.asarray(passed),
+                round_time=jnp.asarray(
+                    rng.uniform(0.2, 3.0, k).astype(np.float32)),
+                sent=jnp.asarray(active),
+                norms=jnp.asarray(
+                    rng.uniform(0.05, 2.5, k).astype(np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# two-stage candidate selection: np == jnp, exactness, liveness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k,frac,shards", [
+    (10, 3, 0.5, 4),        # padded last shard
+    (16, 4, 0.25, 4),
+    (16, 7, 0.1, 8),        # quota floored by (k+pad)/shards
+    (33, 5, 0.3, 8),
+    (64, 64, 0.02, 8),      # k == n
+])
+def test_candidate_mask_np_matches_device(n, k, frac, shards):
+    rng = np.random.default_rng(1)
+    scores = rng.normal(size=n).astype(np.float32)
+    host = candidate_mask_np(scores, k, frac, shards)
+    dev = np.asarray(control.candidate_mask(
+        jnp.asarray(scores), k, frac, shards))
+    np.testing.assert_array_equal(host, dev)
+    assert host.sum() >= k                # union always admits a cohort
+
+
+@pytest.mark.parametrize("n,k,shards", [(10, 7, 8), (12, 12, 5), (9, 9, 4)])
+def test_quota_guarantees_k_real_candidates(n, k, shards):
+    # padding-partial last shard: each pad position displaces at most
+    # one real candidate, the (k+pad)/shards floor absorbs that
+    quota = candidate_quota(n, k, 0.01, shards)
+    per = -(-n // shards)
+    assert quota <= per
+    scores = np.arange(n, dtype=np.float32)
+    assert candidate_mask_np(scores, k, 0.01, shards).sum() >= k
+
+
+def test_two_stage_frac1_bitexact_single_stage():
+    scores = control.score(_state(50, seed=3))
+    single = np.asarray(control.select_topk_epsilon(scores, 7))
+    for shards in (1, 4, 8):
+        two = np.asarray(control.two_stage_select(
+            scores, 7, candidate_frac=1.0, candidate_shards=shards))
+        np.testing.assert_array_equal(single, two)
+
+
+def test_two_stage_exact_when_quota_covers_k():
+    # with frac high enough that every shard's quota >= k, the union
+    # contains the global top-k, so stage 2 recovers it exactly
+    scores = control.score(_state(40, seed=5))
+    exact = np.asarray(control.select_topk_epsilon(scores, 5))
+    two = np.asarray(control.two_stage_select(
+        scores, 5, candidate_frac=0.9, candidate_shards=4))
+    np.testing.assert_array_equal(exact, two)
+
+
+def test_two_stage_respects_live_and_candidates():
+    # contract: the CALLER masks dead scores to -inf (exactly what the
+    # engine selection sites do); `live` only restricts the ε-pool
+    n, k = 32, 6
+    raw = control.score(_state(n, seed=9))
+    rng = np.random.default_rng(2)
+    live = jnp.asarray(rng.random(n) > 0.4)
+    scores = jnp.where(live, raw, -jnp.inf)
+    for frac in (0.25, 0.5, 1.0):
+        cohort = np.asarray(control.two_stage_select(
+            scores, k, candidate_frac=frac, candidate_shards=4, live=live))
+        cands = candidate_mask_np(np.asarray(scores), k, frac, 4)
+        assert np.asarray(live)[cohort].all(), "selected a dead client"
+        assert cands[cohort].all(), "selected outside the candidate union"
+
+
+def test_topk_from_candidates_matches_stable_order():
+    # ties must resolve to the lower global id (stable argsort order)
+    v = jnp.asarray([1.0, 3.0, 3.0, 0.5, 3.0])
+    i = jnp.asarray([40, 7, 3, 1, 11])
+    got = np.asarray(population.topk_from_candidates(v, i, 3))
+    np.testing.assert_array_equal(got, [3, 7, 11])
+
+
+# ---------------------------------------------------------------------------
+# shard-local round kernel == global transition rules (bitwise)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,shards", [(24, 4), (24, 1), (40, 8)])
+def test_round_update_logical_bitwise(n, shards):
+    glob, shrd = _state(n, seed=11), _state(n, seed=11)
+    rng = np.random.default_rng(0)
+    for r in range(6):
+        k = int(rng.integers(2, min(n, 12)))
+        cohort = jnp.asarray(
+            rng.choice(n, size=k, replace=False).astype(np.int32))
+        obs = _obs(k, seed=100 + r)
+        glob = population.round_update(glob, cohort, **obs)
+        shrd = population.round_update_logical(shrd, cohort,
+                                               shards=shards, **obs)
+        for f in population._FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(glob, f)),
+                np.asarray(getattr(shrd, f)), err_msg=f"{f} round {r}")
+
+
+def test_round_update_sharded_bitwise():
+    mesh = mesh_mod.make_population_mesh()
+    ndev = mesh.shape["data"]
+    n = 16 * ndev
+    glob, shrd = _state(n, seed=13), _state(n, seed=13)
+    rng = np.random.default_rng(1)
+    for r in range(4):
+        cohort = jnp.asarray(
+            rng.choice(n, size=6, replace=False).astype(np.int32))
+        obs = _obs(6, seed=200 + r)
+        glob = population.round_update(glob, cohort, **obs)
+        shrd = population.round_update_sharded(shrd, cohort, mesh=mesh,
+                                               **obs)
+        for f in population._FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(glob, f)),
+                np.asarray(getattr(shrd, f)), err_msg=f"{f} round {r}")
+
+
+def test_sharded_candidates_match_logical():
+    mesh = mesh_mod.make_population_mesh()
+    ndev = mesh.shape["data"]
+    n, k = 32 * ndev, 6
+    scores = control.score(_state(n, seed=17))
+    lv, li = population.logical_candidates(scores, k, 0.2, ndev)
+    sv, si = population.sharded_candidates(scores, k, 0.2, mesh=mesh)
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(li)), np.sort(np.asarray(si)))
+    np.testing.assert_array_equal(
+        np.asarray(population.topk_from_candidates(lv, li, k)),
+        np.asarray(population.topk_from_candidates(sv, si, k)))
+
+
+def test_build_population_round_scan_matches_python_loop():
+    n, k, rounds = 48, 8, 5
+    fn = population.build_population_round(n, k, candidate_frac=0.25,
+                                           candidate_shards=4)
+    jfn = jax.jit(fn)                     # compiled-vs-compiled: eager
+    st_loop = _state(n, seed=21)          # op-by-op float fusion differs
+    cohorts = []
+    for r in range(rounds):
+        st_loop, c = jfn(st_loop, jnp.int32(r))
+        cohorts.append(np.asarray(c))
+
+    def body(st, r):
+        st, c = fn(st, r)
+        return st, c
+
+    st_scan, scanned = jax.lax.scan(body, _state(n, seed=21),
+                                    jnp.arange(rounds, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.stack(cohorts), np.asarray(scanned))
+    for f in population._FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(st_loop, f)),
+                                      np.asarray(getattr(st_scan, f)))
+
+
+# ---------------------------------------------------------------------------
+# engine-level: candidate_frac across the four execution paths
+# ---------------------------------------------------------------------------
+
+def test_candidate_frac_noop_all_paths():
+    spec = harness.base_spec(rounds=3, num_clients=6, select_fraction=0.5)
+    harness.assert_candidate_frac_noop(spec)
+
+
+def test_candidate_frac_differential_parity():
+    # at frac < 1 the same two-stage union must drive every path: the
+    # full cross-engine parity contract holds unchanged
+    spec = dataclasses.replace(
+        harness.base_spec(rounds=4, num_clients=8, select_fraction=0.5),
+        candidate_frac=0.5, candidate_shards=2)
+    harness.differential(spec)
+
+
+# ---------------------------------------------------------------------------
+# non-resident worlds: seeding, memory bound, resume
+# ---------------------------------------------------------------------------
+
+def test_client_seed_decorrelates():
+    seen = {client_seed(s, c) for s in range(4) for c in range(64)}
+    assert len(seen) == 4 * 64            # no (seed, cid) collisions
+    assert client_seed(0, 1) != client_seed(1, 0)
+
+
+def test_lazy_partition_constant_memory():
+    p = LazyPartition(1_000_000, 256, seed=3)
+    assert len(p) == 1_000_000
+    assert p.shard(42) == (client_seed(3, 42), 256)
+    with pytest.raises(IndexError):
+        p.shard(1_000_000)
+
+
+def _lazy_spec(n=12, resident=False, **kw):
+    return ExperimentSpec(
+        model="anomaly-mlp-smoke",
+        data=DataSpec(samples_per_client=96, eval_samples=64),
+        world=WorldSpec(num_clients=n, profile="heterogeneous",
+                        resident=resident),
+        rounds=2, seed=0, **kw)
+
+
+def test_lazy_world_cohort_independent_draws():
+    w = _lazy_spec().validate().build_world()
+    assert w.lazy
+    a = {k: np.array(v) for k, v in w.client_arrays[7].items()}
+    # touching other cohorts (and evicting 7) must not perturb 7's draws
+    for cid in range(12):
+        w.client_arrays[cid]
+    b = {k: np.array(v) for k, v in w.client_arrays[7].items()}
+    assert a.keys() == b.keys()
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_lazy_spec_validation():
+    with pytest.raises(SpecError):
+        # non-resident requires samples_per_client
+        ExperimentSpec(world=WorldSpec(num_clients=4, resident=False),
+                       rounds=1).validate()
+    with pytest.raises(SpecError):
+        _lazy_spec(engine="spmd").validate()
+    with pytest.raises(SpecError):
+        _lazy_spec(rounds_per_dispatch=2).validate()
+
+
+def test_loader_pool_eviction_preserves_streams():
+    w = _lazy_spec().validate().build_world()
+    big = LoaderPool(w.client_arrays, lambda cid: 16, seed=5, capacity=64)
+    small = LoaderPool(w.client_arrays, lambda cid: 16, seed=5, capacity=2)
+    order = [0, 1, 0, 2, 3, 4, 0, 1, 2]    # forces evictions in `small`
+    for cid in order:
+        xa, ya = big[cid].sample()
+        xb, yb = small[cid].sample()
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+        np.testing.assert_array_equal(np.asarray(ya), np.asarray(yb))
+    assert small.resident <= 2
+
+
+def test_loader_pool_state_roundtrip():
+    w = _lazy_spec().validate().build_world()
+    pool = LoaderPool(w.client_arrays, lambda cid: 16, seed=5, capacity=4)
+    for cid in (0, 1, 2):
+        pool[cid].sample()
+    state = pool.state_dict()
+    assert state["lazy"] is True
+    fresh = LoaderPool(w.client_arrays, lambda cid: 16, seed=5, capacity=4)
+    fresh.load_state_dict(state)
+    for cid in (0, 1, 2, 3):              # 3 never sampled: fresh stream
+        xa, _ = pool[cid].sample()
+        xb, _ = fresh[cid].sample()
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def test_lazy_engine_loop_matches_megastep():
+    spec = _lazy_spec(n=6).validate()
+    loop = harness.run_cell(spec, "loop")
+    mega = harness.run_cell(spec, "megastep")
+    harness.assert_host_equivalent(loop, mega)
+
+
+# ---------------------------------------------------------------------------
+# population mesh + pspec rules
+# ---------------------------------------------------------------------------
+
+def test_fold_mesh_shape():
+    for n in (1, 2, 3, 6, 8, 12, 48, 512):
+        shape = mesh_mod.fold_mesh_shape(n)
+        assert int(np.prod(shape)) == n
+        model = shape[-1]
+        assert model & (model - 1) == 0 and model <= 16
+    pod = mesh_mod.fold_mesh_shape(8, multi_pod=True)
+    assert pod[0] == 2 and int(np.prod(pod)) == 8
+    with pytest.raises(RuntimeError):
+        mesh_mod.fold_mesh_shape(7, multi_pod=True)
+
+
+def test_make_population_mesh_covers_all_devices():
+    mesh = mesh_mod.make_population_mesh()
+    assert mesh.shape["data"] == len(jax.devices())
+    assert mesh.shape["model"] == 1
+
+
+def test_population_pspecs_shard_client_axes_only():
+    from jax.sharding import PartitionSpec as P
+    mesh = mesh_mod.make_population_mesh()
+    n = 16 * mesh.shape["data"]
+    tree = {"per_client": jnp.zeros((n,)),
+            "per_client2d": jnp.zeros((n, 3)),
+            "scalar": jnp.float32(0.0),
+            "small": jnp.zeros((4,))}
+    specs = sharding.population_pspecs(tree, mesh, n)
+    # a size-1 "data" axis replicates (semantically identical, _maybe)
+    d = "data" if mesh.shape["data"] > 1 else None
+    assert specs["per_client"] == P(d)
+    assert specs["per_client2d"] == P(d, None)
+    assert specs["scalar"] == P()
+    assert specs["small"] == P(None)
+    placed = sharding.shard_population(tree, mesh, n)
+    np.testing.assert_array_equal(np.asarray(placed["per_client"]),
+                                  np.asarray(tree["per_client"]))
