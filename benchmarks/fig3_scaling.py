@@ -142,8 +142,6 @@ def _sharded_parity(n: int, k: int, frac: float, rounds: int) -> bool:
     from repro.launch import mesh as mesh_mod
     mesh = mesh_mod.make_population_mesh()
     ndev = mesh.shape["data"]
-    if n % ndev:
-        return True                      # cell not divisible: skip
     ref_fn = population.build_population_round(n, k, candidate_frac=frac,
                                                candidate_shards=ndev)
     shd_fn = population.build_population_round(n, k, candidate_frac=frac,
@@ -253,6 +251,147 @@ def population_curve(clients=DEFAULT_CLIENTS, rounds=DEFAULT_ROUNDS,
 
 
 # ---------------------------------------------------------------------------
+# hierarchical topology cell (PR 9): flat star vs 3-tier bytes + speed
+# ---------------------------------------------------------------------------
+
+TOPOLOGY_ROUNDS = 8
+TOPOLOGY_CLIENTS = 24
+
+
+def topology_cell(rounds=TOPOLOGY_ROUNDS,
+                  num_clients=TOPOLOGY_CLIENTS) -> dict:
+    """Flat-star vs 3-tier federation on the scanned sim path: identical
+    trajectories by construction (topology is an accumulate-and-sync
+    measurement layer), so the cell gates three things — the inter-tier
+    bytes/round must come in strictly below the flat star at the same
+    accuracy, attaching the topology must not perturb any round record,
+    and the TopologyState carry must be bit-exact under dispatch
+    regrouping (R=4 vs R=1)."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api import (DataSpec, ExperimentSpec, TierSpec,
+                           TopologySpec, WorldSpec)
+    from repro.api.runner import build_simulation
+
+    topology = TopologySpec(tiers=(
+        TierSpec("edge", fanout=4),
+        TierSpec("region", fanout=3, sync_every=2, theta=0.5),
+        TierSpec("global", sync_every=4)))
+    spec = ExperimentSpec(
+        model="anomaly-mlp-smoke",
+        data=DataSpec(n_samples=1800, eval_samples=300),
+        world=WorldSpec(num_clients=num_clients),
+        strategy="ours",
+        strategy_kwargs=dict(batch_size=32, dynamic_batch=False),
+        rounds=rounds, rounds_per_dispatch=4,
+        topology=topology, seed=0).validate()
+    flat_spec = dataclasses.replace(spec, topology=None)
+
+    def timed(s):
+        build_simulation(s).run(rounds)          # compile pass
+        sim = build_simulation(s)
+        t0 = time.perf_counter()
+        sim.run(rounds)
+        return sim, rounds / (time.perf_counter() - t0)
+
+    flat_sim, flat_rps = timed(flat_spec)
+    topo_sim, topo_rps = timed(spec)
+
+    # parity flag 1: attaching the topology changed NOTHING downstream
+    # (NaN-tolerant: unmeasured accuracy rounds are NaN on both sides)
+    def _rec_eq(a, b):
+        for fld in dataclasses.fields(a):
+            va, vb = getattr(a, fld.name), getattr(b, fld.name)
+            if va != va and vb != vb:
+                continue
+            if va != vb:
+                return False
+        return True
+
+    unchanged = len(flat_sim.history) == len(topo_sim.history) and all(
+        _rec_eq(a, b) for a, b in zip(flat_sim.history, topo_sim.history))
+    # parity flag 2: dispatch regrouping keeps the topology carry
+    # bit-exact (scanned R=4 above vs R=1 here)
+    r1_sim = build_simulation(
+        dataclasses.replace(spec, rounds_per_dispatch=1))
+    r1_sim.run(rounds)
+    scan_bitexact = all(
+        bool(jnp.array_equal(a, b))
+        for a, b in zip(jax.tree.leaves(topo_sim._topo_state),
+                        jax.tree.leaves(r1_sim._topo_state)))
+
+    s = topo_sim.topology_summary()
+    cell = {
+        "rounds": int(rounds),
+        "num_clients": int(num_clients),
+        "tiers": s["tiers"],
+        "pods": s["pods"],
+        "syncs": s["syncs"],
+        "flat_rounds_per_sec": round(flat_rps, 2),
+        "topo_rounds_per_sec": round(topo_rps, 2),
+        "overhead_frac": round(max(0.0, 1.0 - topo_rps / flat_rps), 4),
+        "inter_tier_bytes_per_round": round(s["bytes_per_round"], 1),
+        "flat_star_bytes_per_round": round(s["flat_star_bytes_per_round"],
+                                           1),
+        "reduction": round(s["reduction"], 4),
+        "final_accuracy": round(float(topo_sim.history[-1].accuracy), 4),
+        "trajectory_unchanged": bool(unchanged),
+        "scan_bitexact": bool(scan_bitexact),
+    }
+    print(f"# topology: flat {flat_rps:.2f} rounds/s, 3-tier "
+          f"{topo_rps:.2f} rounds/s (overhead "
+          f"{100 * cell['overhead_frac']:.1f}%), inter-tier "
+          f"{cell['inter_tier_bytes_per_round']:,.0f} B/round vs "
+          f"flat-star {cell['flat_star_bytes_per_round']:,.0f} "
+          f"(-{100 * cell['reduction']:.1f}%), trajectory unchanged "
+          f"{unchanged}, scan bit-exact {scan_bitexact}")
+    return cell
+
+
+def check_topology(got: dict, ref: dict, tolerance: float = 0.30) -> list:
+    """The --topology slice of the scale-guard: parity flags must hold,
+    inter-tier bytes must stay strictly below the flat star, and the
+    topology-attached round rate must not regress >tolerance after
+    machine-speed normalization through the flat run."""
+    failures = []
+    for flag in ("trajectory_unchanged", "scan_bitexact"):
+        ok = bool(got.get(flag, False))
+        print(f"# scale-guard [topology] {flag}={ok} "
+              f"{'ok' if ok else 'REGRESSION'}")
+        if not ok:
+            failures.append(f"topology:{flag}")
+    below = (got["inter_tier_bytes_per_round"]
+             < got["flat_star_bytes_per_round"])
+    print(f"# scale-guard [topology] inter-tier "
+          f"{got['inter_tier_bytes_per_round']:,.0f} B/round < flat-star "
+          f"{got['flat_star_bytes_per_round']:,.0f} "
+          f"{'ok' if below else 'REGRESSION'}")
+    if not below:
+        failures.append("topology:bytes_per_round")
+    proto = ("rounds", "num_clients")
+    if any(got.get(k) != ref.get(k) for k in proto):
+        print("# scale-guard [topology] protocol mismatch vs committed "
+              "cell — skipping the rounds/sec floor")
+        return failures
+    scale = got["flat_rounds_per_sec"] / max(ref["flat_rounds_per_sec"],
+                                             1e-9)
+    floor = (1.0 - tolerance) * ref["topo_rounds_per_sec"] * scale
+    rps = got["topo_rounds_per_sec"]
+    ok = rps >= floor
+    print(f"# scale-guard [topology] rounds/sec={rps:.2f} "
+          f"floor={floor:.2f} (committed "
+          f"{ref['topo_rounds_per_sec']:.2f} x machine-scale "
+          f"{scale:.2f} x {1 - tolerance:.2f}) "
+          f"{'ok' if ok else 'REGRESSION'}")
+    if not ok:
+        failures.append("topology:rounds_per_sec")
+    return failures
+
+
+# ---------------------------------------------------------------------------
 # CI regression gate (mirrors benchmarks/run.py::_check_regression)
 # ---------------------------------------------------------------------------
 
@@ -260,6 +399,18 @@ def check_against(out: dict, committed_path: str,
                   tolerance: float = 0.30) -> None:
     with open(committed_path) as f:
         committed = json.load(f)
+    failures = []
+    if "topology" in out:
+        failures += check_topology(out["topology"],
+                                   committed.get("topology", {}),
+                                   tolerance)
+    if not out.get("cells"):
+        if failures:
+            raise SystemExit(f"scale-guard FAILED: {failures}")
+        if "topology" in out:
+            print("# scale-guard: topology checks ok")
+            return
+        raise SystemExit("scale-guard: nothing measured to check")
     proto = ["rounds", "cohort", "candidate_frac", "candidate_shards",
              "samples_per_client"]
     mismatch = {k: (out["config"].get(k), committed["config"].get(k))
@@ -284,7 +435,6 @@ def check_against(out: dict, committed_path: str,
     scale = (out["cells"][ref]["single_stage_rounds_per_sec"]
              / max(committed["cells"][ref]["single_stage_rounds_per_sec"],
                    1e-9))
-    failures = []
     for n in shared:
         got_cell, ref_cell = out["cells"][str(n)], committed["cells"][str(n)]
         floor = (1.0 - tolerance) * ref_cell["two_stage_rounds_per_sec"] \
@@ -328,6 +478,9 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--population", action="store_true",
                     help="run the 1k->1M population scaling sweep")
+    ap.add_argument("--topology", action="store_true",
+                    help="run the flat-vs-3-tier hierarchical topology "
+                         "cell (bytes/round + rounds/sec + parity flags)")
     ap.add_argument("--clients", default=None,
                     help="comma-separated population sizes "
                          f"(default {','.join(map(str, DEFAULT_CLIENTS))})")
@@ -350,18 +503,32 @@ def main(argv=None) -> None:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.host_devices} "
             + os.environ.get("XLA_FLAGS", ""))
-    if not args.population:
+    if not args.population and not args.topology:
         run()
         return
-    clients = (DEFAULT_CLIENTS if args.clients is None else
-               tuple(int(c) for c in args.clients.split(",")))
-    out = population_curve(clients=clients, rounds=args.rounds,
-                           cohort=args.cohort, frac=args.candidate_frac,
-                           shards=args.candidate_shards,
-                           samples_per_client=args.samples_per_client)
+    out = {}
+    if args.population:
+        clients = (DEFAULT_CLIENTS if args.clients is None else
+                   tuple(int(c) for c in args.clients.split(",")))
+        out = population_curve(clients=clients, rounds=args.rounds,
+                               cohort=args.cohort,
+                               frac=args.candidate_frac,
+                               shards=args.candidate_shards,
+                               samples_per_client=args.samples_per_client)
+    if args.topology:
+        out["topology"] = topology_cell()
     if args.out:
+        if not args.population and os.path.exists(args.out):
+            # topology-only run: update the section in place, keep the
+            # committed population cells
+            with open(args.out) as f:
+                merged = json.load(f)
+            merged["topology"] = out["topology"]
+            out_blob = merged
+        else:
+            out_blob = out
         with open(args.out, "w") as f:
-            json.dump(out, f, indent=2, sort_keys=False)
+            json.dump(out_blob, f, indent=2, sort_keys=False)
             f.write("\n")
         print(f"# wrote {args.out}")
     if args.check_against:

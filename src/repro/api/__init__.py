@@ -37,6 +37,8 @@ from repro.core.scenario import (SCENARIO_PRESETS, ByzantineSpec, ChurnSpec,
                                  DriftSpec, DropoutSchedule, LinkSpec,
                                  ScenarioSpec, WorldState, resolve_scenario)
 from repro.core.schedule import ScheduleSpec
+from repro.topology.spec import (TOPOLOGY_PRESETS, TierSpec, TopologySpec,
+                                 resolve_topology)
 
 __all__ = [
     "ByzantineSpec", "CheckpointMismatchError", "ChurnSpec",
@@ -45,10 +47,11 @@ __all__ = [
     "ExperimentSpec", "LinkSpec", "MannWhitneyResult", "PRESETS",
     "ROUND_FIELDS", "RoundRecord", "SCENARIO_PRESETS", "STRATEGY_REGISTRY",
     "ScenarioSpec", "ScheduleSpec", "SpecError", "SpecIssue", "Strategy",
-    "StrategyConfig", "SweepPoint", "SweepResult", "World", "WorldSpec",
+    "StrategyConfig", "SweepPoint", "SweepResult", "TOPOLOGY_PRESETS",
+    "TierSpec", "TopologySpec", "World", "WorldSpec",
     "WorldState", "build_spmd_components", "build_world", "get_strategy",
     "list_strategies", "mann_whitney_u", "median_iqr",
     "register_strategy", "resolve_scenario", "resolve_strategy",
-    "run_experiment", "run_spmd_seed_batch", "run_sweep",
-    "seed_vectorizable",
+    "resolve_topology", "run_experiment", "run_spmd_seed_batch",
+    "run_sweep", "seed_vectorizable",
 ]

@@ -80,7 +80,8 @@ def build_simulation(spec: ExperimentSpec) -> "ae.FederatedSimulation":
                                   schedule=spec.resolve_schedule(),
                                   scenario=spec.resolve_scenario(),
                                   candidate_frac=spec.candidate_frac,
-                                  candidate_shards=spec.candidate_shards)
+                                  candidate_shards=spec.candidate_shards,
+                                  topology=spec.resolve_topology())
 
 
 def record_from_metrics(m: "ae.RoundMetrics") -> RoundRecord:
@@ -156,15 +157,18 @@ def build_spmd_components(spec: ExperimentSpec, world=None,
     if scn is not None and scn.drift is not None:
         dirs = scenario_mod.drift_directions(scn.drift, cfg.num_classes,
                                              cfg.num_features)
+    topo = spec.resolve_topology()
     state = fl_step.init_state(jax.random.PRNGKey(spec.seed), cfg, opt,
                                control_plane=cp, scenario=scn,
-                               num_clients=C)
+                               num_clients=C, topology=topo, comm=comm)
     step = fl_step.build_fl_train_step(cfg, opt, theta=st.theta,
                                        lr_schedule=spec.lr_schedule,
                                        donate=False,
                                        beacon_bytes=comm.beacon_bytes,
                                        control_plane=cp,
-                                       scenario=scn, drift_dirs=dirs)
+                                       scenario=scn, drift_dirs=dirs,
+                                       topology=topo, comm=comm,
+                                       num_clients=C)
     return cfg, st, opt, state, step
 
 
@@ -402,6 +406,8 @@ def seed_vectorizable(spec: ExperimentSpec, st=None) -> bool:
         return False
     if spec.resolve_scenario() is not None:
         return False        # dynamic worlds run serially (FLState.world)
+    if spec.resolve_topology() is not None:
+        return False        # per-seed TopologyState: no stacked fast path
     return True
 
 

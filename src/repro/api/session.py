@@ -58,9 +58,9 @@ CHECKPOINT_FORMAT = 1
 # `rounds` is NOT one of them: the round budget is a session argument,
 # and extending a restored run is exactly what sessions are for.
 _FINGERPRINT_DOC = ("engine", "model", "strategy", "schedule", "scenario",
-                    "data", "world", "comm", "seed", "eval_every",
-                    "megastep", "rounds_per_dispatch", "optimizer",
-                    "lr_schedule", "eval_fn")
+                    "topology", "data", "world", "comm", "seed",
+                    "eval_every", "megastep", "rounds_per_dispatch",
+                    "optimizer", "lr_schedule", "eval_fn")
 
 
 def sidecar_path(ckpt_path: str) -> str:
@@ -192,6 +192,7 @@ def _spec_fingerprint(spec: ExperimentSpec) -> Dict[str, Any]:
     data = dataclasses.asdict(spec.data)
     data["factory"] = spec.data.factory is not None   # presence only
     scenario = spec.resolve_scenario()
+    topology = spec.resolve_topology()
     return {
         "engine": spec.engine,
         "model": getattr(cfg, "name", str(spec.model)),
@@ -199,6 +200,8 @@ def _spec_fingerprint(spec: ExperimentSpec) -> Dict[str, Any]:
         "schedule": dataclasses.asdict(spec.resolve_schedule()),
         "scenario": (None if scenario is None
                      else dataclasses.asdict(scenario)),
+        "topology": (None if topology is None
+                     else dataclasses.asdict(topology)),
         "data": data,
         "world": dataclasses.asdict(spec.world),
         "comm": dataclasses.asdict(spec.resolve_comm()),

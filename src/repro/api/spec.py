@@ -23,6 +23,7 @@ from repro.api import world as world_mod
 from repro.core.async_engine import CommModel, StrategyConfig
 from repro.core.scenario import ScenarioSpec, resolve_scenario
 from repro.core.schedule import ScheduleSpec, resolve_schedule
+from repro.topology.spec import TopologySpec, resolve_topology
 
 ENGINES = ("sim", "spmd")
 DATASETS = ("auto", "unsw", "road", "lm")
@@ -109,6 +110,15 @@ class ExperimentSpec:
     # ScenarioSpec composes per-round transitions — concept drift, client
     # churn, link-quality walks, dropout regime switches, byzantine
     # updates — identically on every execution path of both engines
+    topology: Union[str, TopologySpec, None] = None
+    # the hierarchical-federation axis (repro.topology): None (or a
+    # single-tier spec, which normalizes to None) -> today's flat star,
+    # bit-identically; a preset name ("edge-region-global",
+    # "two-tier-pods") or a full TopologySpec attaches an
+    # accumulate-and-sync tier tree — leaf pods accumulate their
+    # clients' weighted deltas every round, tier boundaries sync upward
+    # on their cadence with per-tier θ vetoes, and inter-tier bytes are
+    # priced per tier link — on every execution path of both engines
     engine: str = "sim"
     rounds: int = 5
     seed: int = 0
@@ -177,6 +187,9 @@ class ExperimentSpec:
 
     def resolve_scenario(self) -> Optional[ScenarioSpec]:
         return resolve_scenario(self.scenario)
+
+    def resolve_topology(self) -> Optional[TopologySpec]:
+        return resolve_topology(self.topology)
 
     def strategy_name(self) -> str:
         if isinstance(self.strategy, str):
@@ -292,6 +305,14 @@ class ExperimentSpec:
                     f"needs at least one honest client (world has "
                     f"{self.world.num_clients}); the θ-filter has no "
                     "honest majority to form a reference otherwise"))
+        topology = None
+        try:
+            topology = self.resolve_topology()
+        except (ValueError, TypeError) as e:
+            issues.append(SpecIssue("topology", self.topology, str(e)))
+        if topology is not None:
+            issues.extend(SpecIssue(f, v, h)
+                          for f, v, h in topology.issues())
         strategy = schedule = None
         try:
             strategy = self.resolve_strategy()

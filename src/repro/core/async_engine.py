@@ -64,6 +64,8 @@ from repro.data.loader import ArrayLoader, LoaderPool
 from repro.kernels import arena as arena_mod
 from repro.models import api
 from repro.optim import adamw as optim_mod
+from repro.topology import engine as topology_mod
+from repro.topology.spec import resolve_topology
 
 
 @dataclasses.dataclass
@@ -165,7 +167,7 @@ class FederatedSimulation:
                  schedule: Optional[ScheduleSpec] = None,
                  scenario: Optional[scenario_mod.ScenarioSpec] = None,
                  candidate_frac: Optional[float] = None,
-                 candidate_shards: int = 8):
+                 candidate_shards: int = 8, topology=None):
         self.cfg = cfg
         self.strategy = strategy
         # schedule=None -> legacy StrategyConfig.mode shim
@@ -248,6 +250,21 @@ class FederatedSimulation:
                 # padding rows (see _run_round_mega pass 3)
                 self._ef_arena = compression.init_error_arena(
                     self.num_clients + 1, self._arena)
+
+        # --- hierarchical topology (repro.topology) -----------------------
+        # an accumulate-and-sync measurement layer over the flat round:
+        # the training trajectory is untouched (None / single-tier is
+        # bit-identical to today's path); the carry advances EVERY round
+        # on every execution path so the absolute-round sync cadence is
+        # independent of loop/mega/scanned grouping
+        self.topology = resolve_topology(topology)
+        self._topo = None
+        self._topo_state = None
+        if self.topology is not None:
+            self._topo = topology_mod.TopologyRuntime(
+                self.topology, self.num_clients, self._arena, self.comm)
+            self._topo_state = self._topo.init()
+            self._topo_step = jax.jit(self._topo.step)
 
         # --- per-client state --------------------------------------------
         self.batch_ctrl = BatchSizeController()
@@ -438,6 +455,48 @@ class FederatedSimulation:
             return lat + self._payload_bytes() / bw
         # 1-bit skip beacon: still a message, still on the wire
         return lat + self.comm.beacon_bytes / bw
+
+    # ------------------------------------------------------------------
+    # hierarchical topology (host paths)
+    # ------------------------------------------------------------------
+    def _topology_host_round(self, deltas, cids, weights) -> None:
+        """Advance the topology carry for the round that just ran on a
+        host path (loop/megastep): leaf-pod accumulation of exactly the
+        weighted deltas the flat aggregation consumed, plus any due
+        inter-tier syncs. Called EVERY round — the cadence is a closed
+        form on the absolute round index (``round_idx - 1``; run_round
+        already counted this round), matching the scanned carry.
+
+        deltas: list of (rows, lane) arena rows (device), or a list of
+        (cids, padded, deltas) shape groups from the megastep path;
+        cids: matching client ids; weights: cid -> aggregation weight.
+        """
+        if self._topo is None:
+            return
+        r = self.round_idx - 1
+        if deltas and isinstance(deltas[0], tuple):
+            groups = deltas
+            d = jnp.concatenate([g[2][:len(g[0])] for g in groups])
+            cids = [c for g in groups for c in g[0]]
+        elif deltas:
+            d = jnp.stack(deltas)
+        else:                              # empty round: cadence still ticks
+            d = jnp.zeros((1, self._arena.rows, self._arena.lane),
+                          jnp.float32)
+            cids = [0]
+        w = jnp.asarray([float(weights.get(c, 0.0)) for c in cids],
+                        jnp.float32)
+        pods = self._topo.pod_of[jnp.asarray(cids, jnp.int32)]
+        self._topo_state = self._topo_step(self._topo_state, jnp.int32(r),
+                                           d, w, pods)
+        self.dispatches += 1
+
+    def topology_summary(self) -> Optional[dict]:
+        """Per-tier inter-tier byte/time/sync accounting + the flat-star
+        comparison (None when no topology is attached)."""
+        if self._topo is None:
+            return None
+        return self._topo.summary(self._topo_state, rounds=self.round_idx)
 
     # ------------------------------------------------------------------
     # rounds
@@ -711,6 +770,8 @@ class FederatedSimulation:
             if updates_applied and st.theta is not None:
                 self._ref_mat = ref_mat
 
+        self._topology_host_round(group_results, None, weights)
+
         return self._finish_round(rnd, evaluate, len(selected), losses_all,
                                   n_sent, updates_applied, round_times)
 
@@ -727,6 +788,8 @@ class FederatedSimulation:
         round_times: Dict[int, float] = {}
         losses = []
         n_sent = 0
+        topo_deltas: List = []        # arena-packed rows (topology only)
+        topo_cids: List[int] = []
 
         for cid in selected:
             prof = self.profiles[cid]
@@ -739,6 +802,9 @@ class FederatedSimulation:
                 delay = (self.recovery_time if self.checkpoints.get(cid)
                          else self.restart_time)
             new_params, delta, loss, t_train = self._train_client(cid)
+            if self._topo is not None:
+                topo_deltas.append(self._arena.pack(delta))
+                topo_cids.append(cid)
             losses.append(loss)
             sent, ratio = self._filter_update(delta)
             transfer = self._transfer_time(sent, prof, cid)
@@ -767,6 +833,7 @@ class FederatedSimulation:
         arrivals.sort(key=lambda a: a[0])
         updates_applied = 0
         sched = self.schedule
+        weights: Dict[int, float] = {}    # cid -> aggregation weight
 
         if sched.is_sync:
             sent_params = [p for (_, _, p, sent, _) in arrivals if sent]
@@ -776,6 +843,9 @@ class FederatedSimulation:
                 self.dispatches += 1
                 self.server_step += 1
                 updates_applied = len(sent_params)
+                w1 = 1.0 / len(sent_params)
+                weights = {cid: w1 for (_, cid, _p, sent, _t) in arrivals
+                           if sent}
             if arrivals:
                 barrier = arrivals[-1][0]
                 self.idle_time += sum(barrier - a for (a, *_r) in arrivals)
@@ -791,6 +861,7 @@ class FederatedSimulation:
                 q_idx = max(0, math.ceil(sched.quorum * len(arrivals)) - 1)
                 self.sim_time = arrivals[q_idx][0]
                 buf = []
+                buf_cids = []
                 for i, (arrive, cid, new_params, sent, _t) in enumerate(arrivals):
                     if not sent:
                         continue
@@ -800,12 +871,18 @@ class FederatedSimulation:
                         continue          # too stale: transmitted, dropped
                     alpha = float(self._alpha_table[tau])
                     buf.append((alpha, new_params))
+                    buf_cids.append(cid)
                     self.server_step += 1
                     updates_applied += 1
                 if buf:
                     self.params = aggregation.buffered_async_update(
                         self.params, buf)
                     self.dispatches += 1
+                    inv = 1.0 / len(buf)
+                    weights = {c: a * inv
+                               for c, (a, _p) in zip(buf_cids, buf)}
+
+        self._topology_host_round(topo_deltas, topo_cids, weights)
 
         # reference direction = sign of the global movement this round
         if updates_applied and st.theta is not None:
@@ -883,7 +960,8 @@ class FederatedSimulation:
                 scenario=self.scenario, drift_dirs=self._drift_dirs,
                 drift_label=self._drift_label or "y",
                 candidate_frac=self.candidate_frac,
-                candidate_shards=self.candidate_shards)
+                candidate_shards=self.candidate_shards,
+                topology=self._topo)
         return self._scan_fns[R]
 
     def _run_scanned(self, num_rounds: int,
@@ -900,15 +978,16 @@ class FederatedSimulation:
             Rg = min(R, num_rounds - done)
             carry, ms = self._scan_fn(Rg)(
                 self._params_mat, ref_mat, self._scan_ref_valid,
-                self._scan_ctl, self._world_state, data, sizes, speed,
-                latency, dropout_p,
+                self._scan_ctl, self._world_state, self._topo_state,
+                data, sizes, speed, latency, dropout_p,
                 self._scan_key, jnp.int32(self._scan_round0),
                 jnp.asarray([self.sim_time, self.comm_time,
                              self.idle_time, self.bytes_sent],
                             jnp.float32))
             self.dispatches += 1
             (self._params_mat, ref_mat, self._scan_ref_valid,
-             self._scan_ctl, self._world_state, _acc) = carry
+             self._scan_ctl, self._world_state, self._topo_state,
+             _acc) = carry
             self._params_tree = None          # pytree view now stale
             ms = {k: np.asarray(v) for k, v in ms.items()}
 
@@ -1002,6 +1081,8 @@ class FederatedSimulation:
                          else dev(self.ref_sign)),
             "world_state": (None if self.scenario is None
                             else dev(self._world_state)),
+            "topology": (None if self._topo is None
+                         else dev(self._topo_state)),
             "scan": {
                 "ctl": (None if self._scan_ctl is None
                         else dev(self._scan_ctl)),
@@ -1073,6 +1154,11 @@ class FederatedSimulation:
             self._world_state = jax.tree.map(jnp.asarray,
                                              state["world_state"])
             self._world_view = scenario_mod.host_view(self._world_state)
+        if state.get("topology") is not None:
+            if self._topo is None:
+                raise ValueError("checkpoint carries topology state but "
+                                 "this simulation has no topology")
+            self._topo_state = jax.tree.map(jnp.asarray, state["topology"])
         scan = state["scan"]
         if scan["ctl"] is not None:
             self._scan_setup()        # rebuild the device world and shapes

@@ -42,6 +42,8 @@ from repro.core import scenario as scenario_mod
 from repro.kernels import arena as arena_mod
 from repro.models import api
 from repro.optim import adamw as optim_mod
+from repro.topology import engine as topology_engine
+from repro.topology.spec import resolve_topology
 
 
 class FLState(NamedTuple):
@@ -56,6 +58,10 @@ class FLState(NamedTuple):
     # dynamic-world scenario state (None -> the world stays frozen);
     # transitions run INSIDE the compiled step (core/scenario.py), so
     # churn / drift / byzantine corruption cost no extra dispatches
+    topology: Optional[topology_engine.TopologyState] = None
+    # hierarchical topology carry (repro.topology): per-tier pod
+    # accumulators + reference signs; advanced inside the compiled step
+    # every round, cadence keyed off the absolute ``step`` counter
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,7 +106,8 @@ class ControlPlane:
 
 def init_state(rng, cfg, optimizer=None,
                control_plane: Optional[ControlPlane] = None,
-               scenario=None, num_clients: Optional[int] = None) -> FLState:
+               scenario=None, num_clients: Optional[int] = None,
+               topology=None, comm=None) -> FLState:
     params = api.init_params(rng, cfg)
     optimizer = optimizer or optim_mod.for_config(cfg)
     opt_state = optimizer.init(params)
@@ -120,16 +127,31 @@ def init_state(rng, cfg, optimizer=None,
             raise ValueError("init_state(scenario=...) needs num_clients "
                              "(or a control_plane that names it)")
         world = scenario_mod.init_world(scenario, n)
+    topo = None
+    topology = resolve_topology(topology)
+    if topology is not None:
+        n = num_clients if num_clients is not None else (
+            control_plane.num_clients if control_plane is not None
+            else None)
+        if n is None:
+            raise ValueError("init_state(topology=...) needs num_clients "
+                             "(or a control_plane that names it)")
+        arena = arena_mod.ParamArena(jax.eval_shape(lambda: params))
+        topo = topology_engine.TopologyRuntime(
+            topology, n, arena, comm).init()
     return FLState(params, opt_state, ref_sign, jnp.zeros((), jnp.int32),
                    {"accepted": jnp.zeros((), jnp.float32),
-                    "rounds": jnp.zeros((), jnp.float32)}, ctl, world)
+                    "rounds": jnp.zeros((), jnp.float32)}, ctl, world,
+                   topo)
 
 
 def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
                   lr_schedule=None, agg_dtype=jnp.bfloat16,
                   beacon_bytes: float = 0.125,
                   control_plane: Optional[ControlPlane] = None,
-                  scenario=None, drift_dirs=None, label_key: str = "y"):
+                  scenario=None, drift_dirs=None, label_key: str = "y",
+                  topology=None, comm=None,
+                  num_clients: Optional[int] = None):
     """Un-jitted step(state, batch) -> (state, metrics) — the dry-run wraps
     this with explicit in/out shardings; trainers use build_fl_train_step.
 
@@ -160,6 +182,16 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
             if (scn is not None and scn.drift is not None) else None)
     wire_bytes = (float(compression.arena_wire_bytes(arena))
                   if (cp and cp.quantize) else None)
+    topo_rt = None
+    topology = resolve_topology(topology)
+    if topology is not None:
+        n_top = num_clients if num_clients is not None else (
+            cp.num_clients if cp is not None else None)
+        if n_top is None:
+            raise ValueError("make_raw_step(topology=...) needs "
+                             "num_clients (or an active control_plane)")
+        topo_rt = topology_engine.TopologyRuntime(topology, n_top, arena,
+                                                  comm)
 
     def loss_for_client(params, client_batch):
         return api.loss_fn(params, client_batch, cfg)
@@ -280,6 +312,12 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
                                    jnp.sign(a).astype(jnp.int8), r),
             agg, state.ref_sign)
 
+        # (5b) hierarchical topology: leaf-pod accumulation of the SAME
+        # weighted cohort deltas the aggregation consumed + due syncs
+        topo = state.topology
+        if topo_rt is not None:
+            topo = topo_rt.step(topo, state.step, u, w)
+
         # (6) control-plane statistics for the next round's selection
         if cp is not None:
             cohort = jnp.arange(C)
@@ -325,7 +363,7 @@ def make_raw_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
         run = {"accepted": state.metrics["accepted"] + mask.sum(),
                "rounds": state.metrics["rounds"] + 1.0}
         return FLState(new_params, new_opt, new_ref, state.step + 1, run,
-                       ctl, ws), metrics
+                       ctl, ws, topo), metrics
 
     return step
 
@@ -335,13 +373,15 @@ def build_fl_train_step(cfg, optimizer=None, theta: Optional[float] = 0.65,
                         beacon_bytes: float = 0.125,
                         control_plane: Optional[ControlPlane] = None,
                         scenario=None, drift_dirs=None,
-                        label_key: str = "y"):
+                        label_key: str = "y", topology=None, comm=None,
+                        num_clients: Optional[int] = None):
     """jit'd step(state, batch) -> (state, metrics)."""
     step = make_raw_step(cfg, optimizer, theta, lr_schedule,
                          beacon_bytes=beacon_bytes,
                          control_plane=control_plane,
                          scenario=scenario, drift_dirs=drift_dirs,
-                         label_key=label_key)
+                         label_key=label_key, topology=topology,
+                         comm=comm, num_clients=num_clients)
     if donate:
         return jax.jit(step, donate_argnums=(0,))
     return jax.jit(step)

@@ -1,5 +1,15 @@
 """Hierarchical (cross-pod) selective synchronization — beyond-paper.
 
+.. deprecated:: PR 9
+    This module is the 2-tier special case; the general declarative
+    machinery now lives in :mod:`repro.topology` (`TopologySpec` tier
+    trees wired through ``ExperimentSpec(topology=...)``).  The
+    equivalent of ``maybe_pod_sync(sync_every=S, theta=T)`` is the
+    2-tier tree ``as_topology_spec(sync_every=S, theta=T)`` (or the
+    ``"two-tier-pods"`` preset).  `maybe_pod_sync` is kept intact as
+    the oracle-pinned reference implementation — new code should
+    attach a `TopologySpec` instead.
+
 The paper's async + selective-update idea applied RECURSIVELY to the pod
 axis of the production mesh: within a pod, every round runs the masked
 selective all-reduce (core/fl_step.py); ACROSS pods, models sync only
@@ -20,6 +30,20 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import aggregation, alignment
+# re-exported for migration: the N-tier generalization of this module
+from repro.topology.spec import TierSpec, TopologySpec  # noqa: F401
+
+
+def as_topology_spec(*, fanout: int = 8, sync_every: int = 4,
+                     theta: float = 0.65,
+                     assignment_seed: int = 0) -> TopologySpec:
+    """The `repro.topology` equivalent of this module's 2-tier scheme:
+    leaf pods of ``fanout`` clients syncing into one global tier every
+    ``sync_every`` rounds under the same theta veto."""
+    return TopologySpec(tiers=(
+        TierSpec("pod", fanout=fanout),
+        TierSpec("global", sync_every=sync_every, theta=theta)),
+        assignment_seed=assignment_seed)
 
 
 class PodSyncState(NamedTuple):

@@ -147,7 +147,7 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
                          restart_time: float = 1.0, schedule=None,
                          scenario=None, drift_dirs=None,
                          drift_label: str = "y", candidate_frac=None,
-                         candidate_shards: int = 8):
+                         candidate_shards: int = 8, topology=None):
     """Compile ``rounds_per_dispatch`` full FL rounds — {select → train
     cohort → θ-filter → staleness-weighted arena aggregate → control
     update} — into one jitted ``lax.scan``.
@@ -174,14 +174,18 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
       * the Weibull checkpoint-interval refit (which never feeds back
         into the trajectory) is skipped; failures are counted per round.
 
-    Returns ``run(params_mat, ref_mat, ref_valid, ctl, ws, data, sizes,
-    speed, latency, dropout_p, base_key, round0, acc) -> (carry, metrics)``
-    where ``metrics`` is a dict of ``(R,)`` per-round series and
-    ``carry`` the updated ``(params_mat, ref_mat, ref_valid, ctl, ws,
-    acc)``. ``ws`` is the dynamic-world ``scenario.WorldState`` (the
-    0-width placeholder when no scenario is attached — it passes through
-    untouched); its transitions fold keys from the absolute round index,
-    so world trajectories are independent of the dispatch grouping R.
+    Returns ``run(params_mat, ref_mat, ref_valid, ctl, ws, topo, data,
+    sizes, speed, latency, dropout_p, base_key, round0, acc) ->
+    (carry, metrics)`` where ``metrics`` is a dict of ``(R,)`` per-round
+    series and ``carry`` the updated ``(params_mat, ref_mat, ref_valid,
+    ctl, ws, topo, acc)``. ``ws`` is the dynamic-world
+    ``scenario.WorldState`` (the 0-width placeholder when no scenario is
+    attached — it passes through untouched); its transitions fold keys
+    from the absolute round index, so world trajectories are independent
+    of the dispatch grouping R. ``topo`` is the hierarchical
+    ``topology.TopologyState`` carry (None when ``topology`` — a
+    ``TopologyRuntime`` — is not attached); its sync cadence is a closed
+    form on the absolute round index, so it is likewise R-independent.
     ``acc`` is the (sim_time, comm_time, idle_time, bytes_sent) f32
     accumulator vector.
     """
@@ -199,7 +203,7 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
 
     def round_body(carry, r, data, sizes, speed, latency, dropout_p,
                    base_key):
-        params_mat, ref_mat, ref_valid, ctl, ws, acc = carry
+        params_mat, ref_mat, ref_valid, ctl, ws, topo, acc = carry
         sim_t, comm_t, idle_t, bytes_s = acc
         key = jax.random.fold_in(base_key, r)
         k_eps, k_pick, k_drop, k_data = jax.random.split(key, 4)
@@ -348,6 +352,11 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
             ref_valid = ref_valid | applied
         params_mat = new_mat
 
+        # --- hierarchical topology: leaf accumulation + due syncs -------
+        if topology is not None:
+            topo = topology.step(topo, r, deltas, w,
+                                 topology.pod_of[cohort])
+
         # --- control-plane transitions (core/control.py) ----------------
         ctl = control.observe_round(ctl, cohort, failed=failed,
                                     active=active, passed=sent,
@@ -377,16 +386,16 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
             "n_failures": failed.sum().astype(jnp.int32),
         }
         acc = jnp.stack([sim_t, comm_t, idle_t, bytes_s])
-        return (params_mat, ref_mat, ref_valid, ctl, ws, acc), metrics
+        return (params_mat, ref_mat, ref_valid, ctl, ws, topo, acc), metrics
 
     @jax.jit
-    def run(params_mat, ref_mat, ref_valid, ctl, ws, data, sizes, speed,
-            latency, dropout_p, base_key, round0, acc):
+    def run(params_mat, ref_mat, ref_valid, ctl, ws, topo, data, sizes,
+            speed, latency, dropout_p, base_key, round0, acc):
         body = functools.partial(round_body, data=data, sizes=sizes,
                                  speed=speed, latency=latency,
                                  dropout_p=dropout_p, base_key=base_key)
         rounds = round0 + jnp.arange(R, dtype=jnp.int32)
-        carry0 = (params_mat, ref_mat, ref_valid, ctl, ws, acc)
+        carry0 = (params_mat, ref_mat, ref_valid, ctl, ws, topo, acc)
         return jax.lax.scan(lambda c, r: body(c, r), carry0, rounds)
 
     return run

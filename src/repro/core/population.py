@@ -135,14 +135,25 @@ def _round_kernel(leaves, cohort, failed, active, passed, round_time,
             staleness, has_ckpt)
 
 
+def _pad_leaf(arr, padded: int):
+    """Zero-extend a (n,) population leaf to ``padded`` rows. Pad rows
+    are inert in ``_round_kernel``: cohort ids are < n so no gather or
+    scatter ever selects them (every row transition is row-local — the
+    only cross-row statistic, the batch-rule median, comes from the
+    replicated cohort observations), and they are sliced off after."""
+    n = arr.shape[0]
+    if padded == n:
+        return arr
+    return jnp.concatenate([arr, jnp.zeros((padded - n,), arr.dtype)])
+
+
 def _split_state(state, shards: int):
+    """(leaves viewed as (shards, per), per) — ragged populations are
+    zero-padded up to the next multiple of ``shards``."""
     n = state.avail.shape[0]
-    if n % shards:
-        raise ValueError(
-            f"population of {n} clients does not divide into "
-            f"{shards} shards")
-    per = n // shards
-    return tuple(getattr(state, f).reshape(shards, per)
+    per = -(-n // shards)           # ceil: pad instead of raising
+    padded = per * shards
+    return tuple(_pad_leaf(getattr(state, f), padded).reshape(shards, per)
                  for f in _FIELDS), per
 
 
@@ -151,7 +162,10 @@ def round_update_logical(state, cohort, *, shards: int, failed, active,
                          ema: float = 0.8):
     """Single-device logical-shard driver: vmap ``_round_kernel`` over
     ``shards`` contiguous slices. Bit-identical to ``round_update`` —
-    the parity suite (tests/test_population.py) pins exactly this."""
+    the parity suite (tests/test_population.py) pins exactly this.
+    Populations that don't divide ``shards`` are zero-padded to the
+    next multiple (masked dummy rows, sliced off) — same bits as the
+    unsharded update either way."""
     leaves, per = _split_state(state, int(shards))
     offsets = (jnp.arange(int(shards)) * per).astype(cohort.dtype)
     out = jax.vmap(
@@ -159,22 +173,22 @@ def round_update_logical(state, cohort, *, shards: int, failed, active,
                                       round_time, sent, norms, off, ema),
         in_axes=(0, 0))(leaves, offsets)
     n = state.avail.shape[0]
-    return state._replace(**{f: o.reshape((n,))
+    return state._replace(**{f: o.reshape((-1,))[:n]
                              for f, o in zip(_FIELDS, out)})
 
 
 def round_update_sharded(state, cohort, *, mesh, failed, active, passed,
                          round_time, sent, norms, ema: float = 0.8):
     """The real thing: state sharded over mesh "data" via ``shard_map``,
-    cohort observations replicated. Same kernel, same bits."""
+    cohort observations replicated. Same kernel, same bits. Ragged
+    populations (n % devices != 0) are zero-padded to the next multiple
+    of the "data" axis with inert dummy rows and sliced back — bitwise
+    parity with ``round_update`` holds either way."""
     nshards = mesh.shape["data"]
     n = state.avail.shape[0]
-    if n % nshards:
-        raise ValueError(
-            f"population of {n} clients does not divide the 'data' axis "
-            f"({nshards} shards)")
-    per = n // nshards
-    leaves = tuple(getattr(state, f) for f in _FIELDS)
+    per = -(-n // nshards)
+    padded = per * nshards
+    leaves = tuple(_pad_leaf(getattr(state, f), padded) for f in _FIELDS)
     rep = P()
 
     def body(lv, cohort, failed, active, passed, round_time, sent, norms):
@@ -189,7 +203,7 @@ def round_update_sharded(state, cohort, *, mesh, failed, active, passed,
         out_specs=(P("data"),) * len(_FIELDS),
         check_rep=False)(leaves, cohort, failed, active, passed,
                          round_time, sent, norms)
-    return state._replace(**dict(zip(_FIELDS, out)))
+    return state._replace(**{f: o[:n] for f, o in zip(_FIELDS, out)})
 
 
 # ---------------------------------------------------------------------------
@@ -205,12 +219,16 @@ def sharded_candidates(scores: jnp.ndarray, k: int, frac: float, *,
     cross-shard traffic selection needs."""
     n = scores.shape[0]
     nshards = mesh.shape["data"]
-    if n % nshards:
-        raise ValueError(
-            f"population of {n} clients does not divide the 'data' axis "
-            f"({nshards} shards)")
-    per = n // nshards
+    per = -(-n // nshards)
     quota = selection.candidate_quota(n, k, frac, nshards)
+    pad = per * nshards - n
+    if pad:
+        # ragged population: -inf pad rows lose every ranking, and the
+        # quota already budgets for quota-displacing padding positions
+        # (selection.candidate_quota), so the union still holds >= k
+        # real clients
+        scores = jnp.concatenate(
+            [scores, jnp.full((pad,), -jnp.inf, scores.dtype)])
 
     def local(s):
         v, i = jax.lax.top_k(s, quota)
@@ -229,12 +247,12 @@ def logical_candidates(scores: jnp.ndarray, k: int, frac: float,
     independently of host device count."""
     n = scores.shape[0]
     shards = int(shards)
-    if n % shards:
-        raise ValueError(
-            f"population of {n} clients does not divide into "
-            f"{shards} shards")
-    per = n // shards
+    per = -(-n // shards)
     quota = selection.candidate_quota(n, k, frac, shards)
+    pad = per * shards - n
+    if pad:
+        scores = jnp.concatenate(
+            [scores, jnp.full((pad,), -jnp.inf, scores.dtype)])
     v, i = jax.lax.top_k(scores.reshape(shards, per), quota)
     gid = i.astype(jnp.int32) + (jnp.arange(shards, dtype=jnp.int32)
                                  * per)[:, None]

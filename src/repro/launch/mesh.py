@@ -93,6 +93,21 @@ def make_debug_mesh(shape=(1, 1), axes=("data", "model")):
     return _make_mesh(shape, axes, devices=jax.devices()[:1])
 
 
+def topology_pspec(mesh, min_pods: int = None):
+    """PartitionSpec for a topology accumulator plane ``(pods, rows,
+    lane)`` (repro.topology.engine.TopologyState.accum): shard the
+    leading pod axis over "data" when the plane is tall enough to
+    split evenly-ish (``min_pods`` defaults to the data-axis size),
+    replicate otherwise — small upper-tier planes (often 1 root pod)
+    don't benefit from sharding."""
+    from jax.sharding import PartitionSpec
+    if "data" not in mesh.axis_names:
+        return PartitionSpec()
+    if min_pods is not None and min_pods < mesh.shape["data"]:
+        return PartitionSpec()
+    return PartitionSpec("data")
+
+
 def client_axes_in_mesh(cfg, mesh) -> tuple:
     """The subset of cfg.client_axes present in this mesh."""
     return tuple(a for a in cfg.client_axes if a in mesh.axis_names)

@@ -1,0 +1,223 @@
+"""Pure-jnp multi-tier sync engine: `TopologyState` + `topology_step`.
+
+`TopologyState` is the topology twin of `ControlState`: per-tier arrays
+with a leading pod dim, a valid `lax.scan` carry, so the step runs
+eagerly on the loop/megastep paths, inside `build_scanned_rounds`'
+scan carry, and through `fl_step`.
+
+Design: topology rides ON TOP of the flat round as an
+accumulate-and-sync layer — the flat training trajectory is unchanged
+(single-tier ≡ no topology bit-exactly, accuracy identical by
+construction).  Each round every leaf pod accumulates its clients'
+weighted delta contributions (the scatter-add decomposes the global
+update: the pod accumulators sum to `weighted_sum(deltas, w)`).  A
+boundary b (tier b children -> tier b+1 parents) syncs when
+``(r + 1) % tiers[b+1].sync_every == 0`` — a closed form on the
+ABSOLUTE round index, not a carried counter, so ``rounds_per_dispatch=R``
+stays bit-identical to ``R=1``.  On sync each parent judges its
+children's accumulators against its reference signs
+(`cohort_alignment`), vetoes misaligned pods (theta), with the
+bootstrap `has_ref` semantics and all-vetoed fallback inherited from
+`core/hierarchy.maybe_pod_sync`; accepted children are masked-mean
+aggregated up, all child accumulators reset (broadcast-down), and the
+link pricing charges payloads for accepted pods and beacons for vetoed
+ones.
+"""
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import alignment
+from repro.topology import comm as comm_mod
+from repro.topology import tree as tree_mod
+from repro.topology.spec import TopologySpec
+
+__all__ = ["TopologyRuntime", "TopologyState", "empty_topology",
+           "init_topology"]
+
+
+class TopologyState(NamedTuple):
+    """Per-tier sync state; every leaf is a jnp array (scan-carry safe).
+
+    accum[b]:   (pods[b], rows, lane) f32 — child-side accumulators at
+                boundary b (accum[0] is the leaf-pod plane).
+    ref[b]:     (pods[b+1], rows, lane) int8 — parent reference signs
+                (-2 on arena padding so padding never matches).
+    has_ref[b]: (pods[b+1],) bool — parents that have synced at least
+                once (the PR 8 bootstrap fix: an explicit bool, not a
+                counter == 0 test).
+    tier_bytes / tier_time / syncs / accepts / vetoes: (B,) cumulative
+                per-boundary accounting.
+    """
+    accum: Tuple
+    ref: Tuple
+    has_ref: Tuple
+    tier_bytes: jnp.ndarray
+    tier_time: jnp.ndarray
+    syncs: jnp.ndarray
+    accepts: jnp.ndarray
+    vetoes: jnp.ndarray
+
+
+def empty_topology() -> TopologyState:
+    """Zero-width placeholder carry for topology-less runs (mirrors
+    `scenario.empty_world`)."""
+    zf = jnp.zeros((0,), jnp.float32)
+    return TopologyState(accum=(), ref=(), has_ref=(),
+                         tier_bytes=zf, tier_time=zf,
+                         syncs=jnp.zeros((0,), jnp.int32),
+                         accepts=zf, vetoes=zf)
+
+
+def init_topology(tree: tree_mod.TopologyTree, arena) -> TopologyState:
+    rows, lane = arena.rows, arena.lane
+    base_ref = np.where(arena.valid_mask(), np.int8(0), np.int8(-2))
+    accum, ref, has_ref = [], [], []
+    for b in range(tree.num_boundaries):
+        parents = tree.pods[b + 1]
+        accum.append(jnp.zeros((tree.pods[b], rows, lane), jnp.float32))
+        ref.append(jnp.asarray(np.tile(base_ref[None], (parents, 1, 1))))
+        has_ref.append(jnp.zeros((parents,), bool))
+    nb = tree.num_boundaries
+    return TopologyState(accum=tuple(accum), ref=tuple(ref),
+                         has_ref=tuple(has_ref),
+                         tier_bytes=jnp.zeros((nb,), jnp.float32),
+                         tier_time=jnp.zeros((nb,), jnp.float32),
+                         syncs=jnp.zeros((nb,), jnp.int32),
+                         accepts=jnp.zeros((nb,), jnp.float32),
+                         vetoes=jnp.zeros((nb,), jnp.float32))
+
+
+class TopologyRuntime:
+    """Prepared engine for a fixed (spec, num_clients, arena, comm).
+
+    `step(state, r, deltas, w, pods)` is pure jnp: deltas (C, rows,
+    lane) and weights (C,) are the SAME cohort-packed deltas/weights the
+    flat aggregation consumed that round (w == 0 for non-participants),
+    `pods` the leaf pod of each cohort row (defaults to the full
+    0..N-1 assignment `self.pod_of`), and r the absolute round index.
+    Call it every round on every path — cadence must advance even on
+    empty rounds.
+    """
+
+    def __init__(self, spec: TopologySpec, num_clients: int, arena,
+                 comm=None):
+        self.spec = spec
+        self.arena = arena
+        self.tree = tree_mod.build_tree(spec, num_clients)
+        self.links = comm_mod.boundary_links(spec, comm, arena.n)
+        self.pod_of = jnp.asarray(tree_mod.leaf_pods(
+            self.tree, np.arange(num_clients, dtype=np.int64)))
+        self._valid = tuple(
+            jnp.asarray(tree_mod.child_valid(self.tree, b))
+            for b in range(self.tree.num_boundaries))
+        self._vmask = jnp.asarray(arena.valid_mask())
+        self._syncs = tuple(self._make_sync(b)
+                            for b in range(self.tree.num_boundaries))
+
+    def init(self) -> TopologyState:
+        return init_topology(self.tree, self.arena)
+
+    def step(self, state: TopologyState, r, deltas, w,
+             pods=None) -> TopologyState:
+        if pods is None:
+            pods = self.pod_of
+        contrib = w[:, None, None].astype(jnp.float32) \
+            * deltas.astype(jnp.float32)
+        acc0 = state.accum[0].at[pods].add(contrib)
+        state = state._replace(accum=(acc0,) + state.accum[1:])
+        r = jnp.asarray(r, jnp.int32)
+        for b in range(self.tree.num_boundaries):
+            cadence = self.spec.tiers[b + 1].sync_every
+            due = ((r + 1) % cadence) == 0
+            state = jax.lax.cond(due, self._syncs[b], lambda s: s, state)
+        return state
+
+    def _make_sync(self, b):
+        tree, spec = self.tree, self.spec
+        children, parents = tree.pods[b], tree.pods[b + 1]
+        group = tree.groups[b]
+        theta = spec.tiers[b + 1].theta
+        valid = self._valid[b]                       # (parents, group)
+        vmask = self._vmask                          # (rows, lane)
+        link = self.links[b]
+        n = self.arena.n
+        last = b == tree.num_boundaries - 1
+
+        def sync(state):
+            kids = state.accum[b]                    # (children, r, l)
+            pad = parents * group - children
+            if pad:
+                kids_p = jnp.concatenate(
+                    [kids, jnp.zeros((pad,) + kids.shape[1:], kids.dtype)])
+            else:
+                kids_p = kids
+            grouped = kids_p.reshape(parents, group, *kids.shape[1:])
+            ratios = jax.vmap(
+                lambda u, ref: alignment.cohort_alignment(u, ref, n)
+            )(grouped, state.ref[b])                 # (parents, group)
+            if theta is None:
+                passed = valid
+            else:
+                passed = (ratios >= theta) & valid
+            # bootstrap: a parent with no reference yet accepts every
+            # real child; then the all-vetoed fallback keeps liveness
+            passed = jnp.where(~state.has_ref[b][:, None], valid, passed)
+            none_passed = passed.sum(axis=1) == 0
+            passed = jnp.where(none_passed[:, None], valid, passed)
+            wf = passed.astype(jnp.float32)
+            denom = jnp.maximum(wf.sum(axis=1), 1e-9)
+            agg = jnp.einsum("pg,pgrl->prl", wf, grouped) \
+                / denom[:, None, None]
+            new_ref = jnp.where(vmask[None],
+                                jnp.sign(agg).astype(jnp.int8),
+                                jnp.int8(-2))
+            accepted = wf.sum()
+            vetoed = jnp.float32(children) - accepted
+            accum = list(state.accum)
+            accum[b] = jnp.zeros_like(kids)
+            if not last:
+                accum[b + 1] = state.accum[b + 1] + agg
+            refs = list(state.ref)
+            refs[b] = new_ref
+            hrs = list(state.has_ref)
+            hrs[b] = jnp.ones_like(state.has_ref[b])
+            return state._replace(
+                accum=tuple(accum), ref=tuple(refs), has_ref=tuple(hrs),
+                tier_bytes=state.tier_bytes.at[b].add(
+                    link.sync_bytes(accepted, vetoed)),
+                tier_time=state.tier_time.at[b].add(link.sync_time()),
+                syncs=state.syncs.at[b].add(1),
+                accepts=state.accepts.at[b].add(accepted),
+                vetoes=state.vetoes.at[b].add(vetoed))
+
+        return sync
+
+    def summary(self, state: TopologyState, rounds=None) -> dict:
+        """Host-side per-tier accounting + flat-star comparison."""
+        host = jax.device_get(state)
+        out = {
+            "tiers": [t.name for t in self.spec.tiers],
+            "pods": list(self.tree.pods),
+            "boundaries": [f"{self.spec.tiers[b].name}->"
+                           f"{self.spec.tiers[b + 1].name}"
+                           for b in range(self.tree.num_boundaries)],
+            "tier_bytes": [float(x) for x in host.tier_bytes],
+            "tier_time": [float(x) for x in host.tier_time],
+            "syncs": [int(x) for x in host.syncs],
+            "accepts": [float(x) for x in host.accepts],
+            "vetoes": [float(x) for x in host.vetoes],
+            "total_bytes": float(np.sum(host.tier_bytes)),
+            "payload_bytes": self.links[0].payload_bytes,
+        }
+        if rounds:
+            flat = comm_mod.flat_star_bytes(self.tree.num_clients,
+                                            self.arena.n, rounds)
+            out["rounds"] = int(rounds)
+            out["bytes_per_round"] = out["total_bytes"] / rounds
+            out["flat_star_bytes"] = flat
+            out["flat_star_bytes_per_round"] = flat / rounds
+            out["reduction"] = 1.0 - out["total_bytes"] / max(flat, 1e-9)
+        return out

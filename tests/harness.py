@@ -185,6 +185,66 @@ def assert_candidate_frac_noop(spec: ExperimentSpec,
                      f"{ra.round}: {va!r} != {vb!r}")
 
 
+def assert_topology_parity(spec: ExperimentSpec,
+                           topology="two-tier-pods",
+                           paths: Sequence[str] = ("loop", "megastep",
+                                                   "scanned1", "scanned4")
+                           ) -> Dict[str, dict]:
+    """The hierarchical-topology matrix cell (repro.topology):
+
+      * measurement-only — with a topology attached, every path's
+        RoundRecord stream is BIT-EQUAL to the same cell without one
+        (topology accumulates the deltas the flat aggregation already
+        consumed; it never feeds back into training);
+      * loop ≡ megastep ≡ scanned R=1/4 — sync cadence fires off the
+        ABSOLUTE round index on every path, so sync/accept/veto counts
+        and the per-tier byte accounting agree across all of them (pass
+        a theta-free topology preset for exact counts: discrete veto
+        decisions near the theta boundary may fp-flip between vmap and
+        scan reduction orders);
+      * scanned4 ≡ scanned1 — the full TopologyState carry is bit-exact
+        under dispatch regrouping.
+
+    Returns the per-path topology summaries."""
+    topo_spec = dataclasses.replace(spec, topology=topology)
+    summaries, states = {}, {}
+    for p in paths:
+        base_res = run_cell(spec, p)
+        sess = ExperimentSession.open(path_spec(topo_spec, p))
+        sess.run(topo_spec.rounds)
+        res = sess.result()
+        assert len(res.records) == len(base_res.records)
+        for ra, rb in zip(res.records, base_res.records):
+            for f in ROUND_FIELDS:
+                va, vb = getattr(ra, f), getattr(rb, f)
+                if va != va and vb != vb:
+                    continue              # NaN (unmeasured accuracy)
+                assert va == vb, \
+                    (f"{p}: attaching a topology changed {f} at round "
+                     f"{ra.round}: {va!r} != {vb!r}")
+        summaries[p] = sess._driver.sim.topology_summary()
+        states[p] = sess._driver.sim._topo_state
+    ref_p = paths[0]
+    ref = summaries[ref_p]
+    for p in paths[1:]:
+        s = summaries[p]
+        assert s["syncs"] == ref["syncs"], \
+            f"{p} vs {ref_p}: sync counts differ ({s['syncs']} vs " \
+            f"{ref['syncs']})"
+        for key in ("accepts", "vetoes", "tier_bytes", "tier_time"):
+            np.testing.assert_allclose(
+                s[key], ref[key], rtol=1e-6,
+                err_msg=f"{p} vs {ref_p}: topology {key} differ")
+    if "scanned1" in states and "scanned4" in states:
+        import jax
+        import jax.numpy as jnp
+        for a, b in zip(jax.tree.leaves(states["scanned1"]),
+                        jax.tree.leaves(states["scanned4"])):
+            assert bool(jnp.array_equal(a, b)), \
+                "scanned4 TopologyState not bit-exact vs scanned1"
+    return summaries
+
+
 def accounting_deterministic(spec: ExperimentSpec) -> bool:
     """True when the cell's event accounting cannot depend on which
     samples were drawn: no θ decisions (every update transmits), no
@@ -357,6 +417,21 @@ def main(argv=None) -> int:
     except AssertionError as e:
         failures.append("candidate-frac-noop")
         print(f"# candidate_frac=1.0 noop FAILED: {e}")
+    # hierarchical topology: attaching a tier tree must not perturb the
+    # flat trajectory on ANY path, and its sync accounting must agree
+    # across loop/megastep/scanned (theta-free tiers: exact counts)
+    from repro.api import TierSpec, TopologySpec
+    topo = TopologySpec(tiers=(
+        TierSpec("edge", fanout=3),
+        TierSpec("region", fanout=2, sync_every=2),
+        TierSpec("global", sync_every=4)))
+    topo_cell = base_spec(rounds=rounds, num_clients=8, theta=None)
+    try:
+        assert_topology_parity(topo_cell, topology=topo)
+        print("# topology parity on loop,megastep,scanned1,scanned4  OK")
+    except AssertionError as e:
+        failures.append("topology-parity")
+        print(f"# topology parity FAILED: {e}")
     # byzantine rejection on every path that can carry it — 8 rounds
     # even in smoke mode: the 0.8-EMA needs ~4 rejections to provably
     # cross below 0.5 (1 -> 0.8^k), and round 0 has no reference yet.

@@ -121,7 +121,10 @@ def test_topk_from_candidates_matches_stable_order():
 # shard-local round kernel == global transition rules (bitwise)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("n,shards", [(24, 4), (24, 1), (40, 8)])
+@pytest.mark.parametrize("n,shards", [(24, 4), (24, 1), (40, 8),
+                                      (1000, 8),   # the CI scale cell
+                                      (1000, 7),   # ragged: 6 pad rows
+                                      (10, 8)])    # ragged: n close to shards
 def test_round_update_logical_bitwise(n, shards):
     glob, shrd = _state(n, seed=11), _state(n, seed=11)
     rng = np.random.default_rng(0)
@@ -158,18 +161,43 @@ def test_round_update_sharded_bitwise():
                 np.asarray(getattr(shrd, f)), err_msg=f"{f} round {r}")
 
 
+def test_round_update_sharded_bitwise_ragged():
+    # 1000 clients on however many host devices CI forces (8 in the
+    # topology-smoke step): the population no longer needs to divide
+    # the "data" axis — dummy pad rows are inert and sliced off
+    mesh = mesh_mod.make_population_mesh()
+    ndev = mesh.shape["data"]
+    n = 1000 if 1000 % ndev else 1001     # force raggedness at any ndev
+    glob, shrd = _state(n, seed=23), _state(n, seed=23)
+    rng = np.random.default_rng(3)
+    for r in range(3):
+        cohort = jnp.asarray(
+            rng.choice(n, size=9, replace=False).astype(np.int32))
+        obs = _obs(9, seed=300 + r)
+        glob = population.round_update(glob, cohort, **obs)
+        shrd = population.round_update_sharded(shrd, cohort, mesh=mesh,
+                                               **obs)
+        for f in population._FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(glob, f)),
+                np.asarray(getattr(shrd, f)), err_msg=f"{f} round {r}")
+
+
 def test_sharded_candidates_match_logical():
     mesh = mesh_mod.make_population_mesh()
     ndev = mesh.shape["data"]
-    n, k = 32 * ndev, 6
-    scores = control.score(_state(n, seed=17))
-    lv, li = population.logical_candidates(scores, k, 0.2, ndev)
-    sv, si = population.sharded_candidates(scores, k, 0.2, mesh=mesh)
-    np.testing.assert_array_equal(
-        np.sort(np.asarray(li)), np.sort(np.asarray(si)))
-    np.testing.assert_array_equal(
-        np.asarray(population.topk_from_candidates(lv, li, k)),
-        np.asarray(population.topk_from_candidates(sv, si, k)))
+    k = 6
+    # 32·ndev divides evenly; +5 exercises the -inf ragged padding
+    for n in (32 * ndev, 32 * ndev + 5):
+        scores = control.score(_state(n, seed=17))
+        lv, li = population.logical_candidates(scores, k, 0.2, ndev)
+        sv, si = population.sharded_candidates(scores, k, 0.2, mesh=mesh)
+        np.testing.assert_array_equal(
+            np.sort(np.asarray(li)), np.sort(np.asarray(si)))
+        sel = np.asarray(population.topk_from_candidates(lv, li, k))
+        np.testing.assert_array_equal(
+            sel, np.asarray(population.topk_from_candidates(sv, si, k)))
+        assert (sel < n).all()            # pad ids never selected
 
 
 def test_build_population_round_scan_matches_python_loop():

@@ -1,0 +1,350 @@
+"""repro.topology: spec validation, the seeded tier tree, the pure-jnp
+`topology_step` pinned to a seeded numpy oracle (sync cadence, per-tier
+theta veto, bootstrap has_ref, all-vetoed fallback, link accounting),
+and the engine-level contracts — topology is a measurement layer that
+NEVER perturbs the flat trajectory, runs identically across
+loop/megastep/scanned paths, survives checkpoint/restore bit-exactly,
+and a single-tier tree IS today's path.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSession, ExperimentSpec, SpecError
+from repro.kernels.arena import ParamArena
+from repro.topology import (PARAM_BYTES, TierSpec, TopologyRuntime,
+                            TopologySpec, TOPOLOGY_PRESETS, build_tree,
+                            child_valid, empty_topology, leaf_pods,
+                            resolve_topology)
+from tests import harness
+
+THREE_TIER = TopologySpec(tiers=(
+    TierSpec("edge", fanout=4, sync_every=1),
+    TierSpec("region", fanout=3, sync_every=2, theta=0.3),
+    TierSpec("global", sync_every=4)))
+
+
+# ---------------------------------------------------------------------------
+# spec + resolver
+# ---------------------------------------------------------------------------
+
+def test_resolve_topology_forms():
+    assert resolve_topology(None) is None
+    assert resolve_topology(TopologySpec()) is None          # inactive
+    assert resolve_topology(TopologySpec(tiers=(TierSpec("a"),))) is None
+    spec = resolve_topology("two-tier-pods")
+    assert isinstance(spec, TopologySpec) and spec.active()
+    assert resolve_topology(spec) is spec
+    with pytest.raises(ValueError):
+        resolve_topology("no-such-preset")
+    with pytest.raises(TypeError):
+        resolve_topology(42)
+
+
+def test_presets_validate():
+    for name, spec in TOPOLOGY_PRESETS.items():
+        assert spec.active(), name
+        assert spec.issues() == [], name
+
+
+@pytest.mark.parametrize("tiers,field", [
+    # non-root tier without fanout
+    ((TierSpec("a"), TierSpec("b", sync_every=2)), "fanout"),
+    # leaf tier must sync every round
+    ((TierSpec("a", fanout=2, sync_every=2),
+      TierSpec("b", sync_every=4)), "sync_every"),
+    # nested cadences must be multiples
+    ((TierSpec("a", fanout=2), TierSpec("b", fanout=2, sync_every=3),
+      TierSpec("c", sync_every=4)), "sync_every"),
+    # duplicate names
+    ((TierSpec("a", fanout=2), TierSpec("a", sync_every=2)), "tiers"),
+])
+def test_spec_issues(tiers, field):
+    issues = TopologySpec(tiers=tiers).issues()
+    assert issues, "expected validation issues"
+    assert any(field in f for f, _v, _h in issues), issues
+
+
+def test_experiment_spec_rejects_bad_topology():
+    with pytest.raises(SpecError):
+        ExperimentSpec(rounds=1, topology="no-such-preset").validate()
+    with pytest.raises(SpecError):
+        ExperimentSpec(rounds=1, topology=TopologySpec(tiers=(
+            TierSpec("a"), TierSpec("b", sync_every=3),
+            TierSpec("c", sync_every=4)))).validate()
+
+
+# ---------------------------------------------------------------------------
+# tier tree: seeded static assignment, pointwise at 1M
+# ---------------------------------------------------------------------------
+
+def test_tree_pod_counts():
+    tree = build_tree(THREE_TIER, num_clients=25)
+    assert tree.pods == (7, 3, 1)          # ceil(25/4), ceil(7/3), root
+    assert tree.num_boundaries == 2
+    assert tree.groups == (3, 3)           # region fanout; root absorbs
+
+
+def test_leaf_assignment_is_a_balanced_permutation():
+    n = 64
+    tree = build_tree(TOPOLOGY_PRESETS["two-tier-pods"], n)
+    ids = np.arange(n, dtype=np.int64)
+    pods = leaf_pods(tree, ids)
+    assert pods.min() >= 0 and pods.max() < tree.pods[0]
+    # affine bijection -> perfectly balanced when fanout | n
+    counts = np.bincount(pods, minlength=tree.pods[0])
+    assert (counts == tree.leaf_fanout).all()
+    # seeded: a different seed gives a different assignment
+    other = build_tree(dataclasses.replace(
+        TOPOLOGY_PRESETS["two-tier-pods"], assignment_seed=5), n)
+    assert (pods != leaf_pods(other, ids)).any()
+
+
+def test_leaf_assignment_pointwise_at_1m():
+    # non-resident million-client worlds ask for SINGLE ids; the int64
+    # host math must not wrap (ids * mult overflows int32 well below 1M)
+    spec = TOPOLOGY_PRESETS["edge-region-global"]
+    n = 1_000_000
+    tree = build_tree(spec, n)
+    some = np.array([0, 1, 999_999, 123_456], dtype=np.int64)
+    pods = leaf_pods(tree, some)
+    assert pods.min() >= 0 and pods.max() < tree.pods[0]
+    # pointwise == vectorized on a sample
+    sample = np.linspace(0, n - 1, 257, dtype=np.int64)
+    all_at_once = leaf_pods(tree, sample)
+    one_by_one = np.array([int(leaf_pods(tree, np.array([c]))[0])
+                           for c in sample])
+    np.testing.assert_array_equal(all_at_once, one_by_one)
+
+
+def test_child_valid_masks_padding():
+    tree = build_tree(THREE_TIER, num_clients=25)    # pods (7, 3, 1)
+    v0 = child_valid(tree, 0)                        # (3 parents, 3 group)
+    assert v0.shape == (3, 3)
+    assert v0.sum() == 7                             # 7 real leaf pods
+    v1 = child_valid(tree, 1)                        # (1 root, 3 group)
+    assert v1.sum() == 3
+
+
+# ---------------------------------------------------------------------------
+# topology_step vs a seeded numpy oracle
+# ---------------------------------------------------------------------------
+
+def _arena():
+    return ParamArena({"w": jnp.zeros((5, 7)), "b": jnp.zeros((7,))})
+
+
+def _oracle(spec, tree, arena, rounds, deltas_seq, w_seq, pods):
+    """Independent numpy re-implementation of the accumulate-and-sync
+    semantics (engine.TopologyRuntime.step)."""
+    rows, lane, n = arena.rows, arena.lane, arena.n
+    vmask = np.asarray(arena.valid_mask())
+    B = tree.num_boundaries
+    accum = [np.zeros((tree.pods[b], rows, lane), np.float32)
+             for b in range(B)]
+    ref = [np.where(vmask, np.int8(0), np.int8(-2))[None].repeat(
+        tree.pods[b + 1], axis=0) for b in range(B)]
+    has_ref = [np.zeros(tree.pods[b + 1], bool) for b in range(B)]
+    stats = {k: np.zeros(B) for k in ("syncs", "accepts", "vetoes")}
+    for r in range(rounds):
+        d, w = deltas_seq[r], w_seq[r]
+        for i in range(len(w)):
+            accum[0][pods[i]] += w[i] * d[i]
+        for b in range(B):
+            if (r + 1) % spec.tiers[b + 1].sync_every:
+                continue
+            parents, group = tree.pods[b + 1], tree.groups[b]
+            kids = np.zeros((parents * group, rows, lane), np.float32)
+            kids[:tree.pods[b]] = accum[b]
+            kids = kids.reshape(parents, group, rows, lane)
+            valid = np.asarray(child_valid(tree, b))
+            signs = np.sign(kids).astype(np.int8)
+            counts = (signs == ref[b][:, None]).reshape(
+                parents, group, -1).sum(-1)
+            ratios = counts / max(n, 1)
+            theta = spec.tiers[b + 1].theta
+            passed = valid if theta is None else (ratios >= theta) & valid
+            passed = np.where(~has_ref[b][:, None], valid, passed)
+            none = passed.sum(1) == 0
+            passed = np.where(none[:, None], valid, passed)
+            wf = passed.astype(np.float32)
+            agg = np.einsum("pg,pgrl->prl", wf, kids) \
+                / np.maximum(wf.sum(1), 1e-9)[:, None, None]
+            ref[b] = np.where(vmask[None], np.sign(agg).astype(np.int8),
+                              np.int8(-2))
+            has_ref[b][:] = True
+            accum[b][:] = 0.0
+            if b + 1 < B:
+                accum[b + 1] += agg
+            stats["syncs"][b] += 1
+            stats["accepts"][b] += wf.sum()
+            stats["vetoes"][b] += tree.pods[b] - wf.sum()
+    return accum, ref, has_ref, stats
+
+
+@pytest.mark.parametrize("theta", [None, 0.3])
+def test_topology_step_matches_numpy_oracle(theta):
+    arena = _arena()
+    n_clients, rounds = 25, 8
+    spec = TopologySpec(tiers=(
+        TierSpec("edge", fanout=4),
+        TierSpec("region", fanout=3, sync_every=2, theta=theta),
+        TierSpec("global", sync_every=4, theta=theta)))
+    rt = TopologyRuntime(spec, n_clients, arena)
+    state = rt.init()
+    rng = np.random.default_rng(11)
+    deltas_seq = [rng.normal(size=(n_clients, arena.rows, arena.lane))
+                  .astype(np.float32) for _ in range(rounds)]
+    # zero out arena padding like packed deltas would be
+    pad = np.asarray(arena.valid_mask())
+    deltas_seq = [d * pad[None] for d in deltas_seq]
+    w_seq = [rng.uniform(0, 1, n_clients).astype(np.float32)
+             for _ in range(rounds)]
+    pods = np.asarray(rt.pod_of)
+    step = jax.jit(rt.step)
+    for r in range(rounds):
+        state = step(state, jnp.int32(r), jnp.asarray(deltas_seq[r]),
+                     jnp.asarray(w_seq[r]))
+    accum, ref, has_ref, stats = _oracle(
+        spec, rt.tree, arena, rounds, deltas_seq, w_seq, pods)
+    for b in range(rt.tree.num_boundaries):
+        np.testing.assert_allclose(np.asarray(state.accum[b]), accum[b],
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(state.ref[b]), ref[b])
+        np.testing.assert_array_equal(np.asarray(state.has_ref[b]),
+                                      has_ref[b])
+    np.testing.assert_array_equal(np.asarray(state.syncs),
+                                  stats["syncs"].astype(np.int32))
+    np.testing.assert_allclose(np.asarray(state.accepts), stats["accepts"])
+    np.testing.assert_allclose(np.asarray(state.vetoes), stats["vetoes"])
+    # link accounting: payload per accepted pod, beacon per vetoed pod
+    for b, link in enumerate(rt.links):
+        want = (stats["accepts"][b] * link.payload_bytes
+                + stats["vetoes"][b] * link.beacon_bytes)
+        np.testing.assert_allclose(np.asarray(state.tier_bytes)[b], want,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(state.tier_time)[b],
+            stats["syncs"][b] * link.sync_time(), rtol=1e-6)
+    assert rt.links[0].payload_bytes == arena.n * PARAM_BYTES
+
+
+def test_bootstrap_accepts_all_then_theta_vetoes():
+    # round 0: no reference yet -> every valid child accepted; once a
+    # reference exists, an anti-aligned pod is vetoed
+    arena = _arena()
+    spec = TopologySpec(tiers=(TierSpec("leaf", fanout=4),
+                               TierSpec("top", sync_every=1, theta=0.9)))
+    rt = TopologyRuntime(spec, 8, arena)
+    state = rt.init()
+    pods = np.asarray(rt.pod_of)
+    d = np.ones((8, arena.rows, arena.lane), np.float32)
+    d *= np.asarray(arena.valid_mask())[None]
+    d[pods == 1] *= -1.0                  # pod 1 moves opposite pod 0
+    w = jnp.ones((8,), jnp.float32)
+    state = rt.step(state, jnp.int32(0), jnp.asarray(d), w)
+    assert int(state.syncs[0]) == 1
+    assert float(state.accepts[0]) == 2.0       # bootstrap: both accepted
+    state = rt.step(state, jnp.int32(1), jnp.asarray(d), w)
+    # reference now = sign(mean) which cancels to 0 on conflicting pods;
+    # re-run with aligned pods to pin the veto instead
+    rt2 = TopologyRuntime(spec, 8, arena)
+    s2 = rt2.init()
+    d2 = np.ones((8, arena.rows, arena.lane), np.float32)
+    d2 *= np.asarray(arena.valid_mask())[None]
+    s2 = rt2.step(s2, jnp.int32(0), jnp.asarray(d2), w)     # ref := +1
+    d3 = d2.copy()
+    d3[pods == 1] *= -1.0                 # pod 1 now anti-aligned
+    s2 = rt2.step(s2, jnp.int32(1), jnp.asarray(d3), w)
+    assert float(s2.accepts[0]) == 3.0    # 2 (bootstrap) + 1 accepted
+    assert float(s2.vetoes[0]) == 1.0     # pod 1 vetoed by theta
+    # all-vetoed fallback keeps liveness: flip EVERY pod
+    d4 = -d2
+    s3 = rt2.step(s2, jnp.int32(2), jnp.asarray(d4), w)
+    assert float(s3.accepts[0]) == 5.0    # fallback accepted both
+
+
+def test_empty_topology_is_scan_safe():
+    e = empty_topology()
+    leaves = jax.tree.leaves(e)
+    assert all(l.shape[0] == 0 for l in leaves)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: measurement-only, path parity, checkpoint, single-tier
+# ---------------------------------------------------------------------------
+
+def test_topology_matrix_cell():
+    spec = harness.base_spec(rounds=4, num_clients=8, theta=None)
+    # theta-free tiers: veto decisions can fp-flip between vmap and
+    # scan reduction orders, counts here must be exactly comparable
+    topo = TopologySpec(tiers=(
+        TierSpec("edge", fanout=3),
+        TierSpec("region", fanout=2, sync_every=2),
+        TierSpec("global", sync_every=4)))
+    summaries = harness.assert_topology_parity(spec, topology=topo)
+    assert all(s["syncs"] == [2, 1] for s in summaries.values())
+
+
+def test_single_tier_is_todays_path():
+    # a 1-tier tree resolves to no topology at the spec boundary, so
+    # the engine literally runs today's code — records bit-equal
+    spec = harness.base_spec(rounds=3, num_clients=5)
+    one = dataclasses.replace(
+        spec, topology=TopologySpec(tiers=(TierSpec("all"),)))
+    assert one.validate().resolve_topology() is None
+    a = harness.run_cell(spec, "megastep")
+    b = harness.run_cell(one, "megastep")
+    for ra, rb in zip(a.records, b.records):
+        assert dataclasses.asdict(ra) == dataclasses.asdict(rb)
+
+
+def test_checkpoint_restore_mid_run_bit_identical(tmp_path):
+    spec = dataclasses.replace(
+        harness.base_spec(rounds=8, num_clients=8),
+        topology="two-tier-pods", megastep=True, rounds_per_dispatch=4)
+    full = ExperimentSession.open(spec)
+    full.run(8)
+    part = ExperimentSession.open(spec)
+    part.run(4)
+    p = str(tmp_path / "topo.ckpt")
+    part.checkpoint(p)
+    resumed = ExperimentSession.restore(p)
+    resumed.run(4)
+    fa = jax.tree.leaves(full._driver.sim._topo_state)
+    fb = jax.tree.leaves(resumed._driver.sim._topo_state)
+    assert all(bool(jnp.array_equal(x, y)) for x, y in zip(fa, fb))
+    np.testing.assert_array_equal(
+        np.asarray(full._driver.sim._params_mat),
+        np.asarray(resumed._driver.sim._params_mat))
+    for ra, rb in zip(full.records, resumed.records):
+        assert ra.bytes_sent == rb.bytes_sent
+        assert ra.updates_applied == rb.updates_applied
+
+
+def test_checkpoint_topology_mismatch_rejected(tmp_path):
+    spec = dataclasses.replace(harness.base_spec(rounds=2, num_clients=5),
+                               topology="two-tier-pods")
+    s = ExperimentSession.open(spec)
+    s.run(2)
+    p = str(tmp_path / "t.ckpt")
+    s.checkpoint(p)
+    bare = dataclasses.replace(spec, topology=None)
+    from repro.api import CheckpointMismatchError
+    with pytest.raises(CheckpointMismatchError):
+        ExperimentSession.restore(p, spec=bare)
+
+
+def test_topology_summary_reports_reduction():
+    spec = dataclasses.replace(harness.base_spec(rounds=4, num_clients=8),
+                               topology="two-tier-pods")
+    sess = ExperimentSession.open(spec)
+    sess.run(4)
+    summary = sess._driver.sim.topology_summary()
+    assert summary["syncs"] == [1]              # sync_every=4, 4 rounds
+    assert summary["total_bytes"] > 0
+    assert summary["flat_star_bytes"] > summary["total_bytes"]
+    assert 0.0 < summary["reduction"] <= 1.0
