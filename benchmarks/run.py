@@ -159,7 +159,9 @@ def bench_sim(json_path: str, rounds: int = 20, clients: int = 32,
     path. Reports rounds/sec and compiled dispatches/round: the
     reference loop pays O(clients) dispatches/round, the per-round
     megastep O(1), the scanned device-control-plane path O(1/R)
-    (amortized BELOW one), and the compiled spmd engine exactly one
+    (amortized BELOW one), the fused path (eval folded into the scan
+    carry, ``fused_eval=True``) EXACTLY ceil(rounds/R)/rounds — no eval
+    dispatches at all — and the compiled spmd engine exactly one
     training dispatch per round.
 
     The config is the communication-centric FedSGD setting the paper's
@@ -197,19 +199,30 @@ def bench_sim(json_path: str, rounds: int = 20, clients: int = 32,
                       "batch_size": 64, "max_samples_per_round": 64,
                       "local_steps": 1, "profile": "heterogeneous",
                       "scan_rounds_per_dispatch": SCAN_R,
-                      "scenario": SCENARIO_PRESET}}
+                      "scenario": SCENARIO_PRESET,
+                      "fused_eval_every": SCAN_R}}
     for name, kwargs in (("loop", dict(megastep=False)),
                          ("megastep", dict(megastep=True)),
                          ("scanned", dict(megastep=True,
                                           rounds_per_dispatch=SCAN_R)),
                          ("scanned_scenario",
                           dict(megastep=True, rounds_per_dispatch=SCAN_R,
-                               scenario=SCENARIO_PRESET))):
+                               scenario=SCENARIO_PRESET)),
+                         # whole-experiment fusion: eval joins the scan
+                         # carry, so the ONLY dispatches are the scans
+                         # themselves (no per-chunk host eval readback);
+                         # eval_every=SCAN_R matches the post-hoc row's
+                         # effective chunk-end cadence — same number of
+                         # eval computations, zero extra dispatches
+                         ("fused", dict(megastep=True,
+                                        rounds_per_dispatch=SCAN_R,
+                                        fused_eval=True,
+                                        eval_every=SCAN_R))):
         sim = ae.FederatedSimulation(cfg, world.client_arrays,
                                      world.eval_arrays,
                                      spec.resolve_strategy(), world.profiles,
                                      seed=0, **kwargs)
-        if name.startswith("scanned"):
+        if kwargs.get("rounds_per_dispatch"):
             # warmup compiles BOTH trace lengths the timed run will use
             # (full R-dispatches plus the remainder-length scan, if any)
             sim.run(SCAN_R + rounds % SCAN_R)
@@ -240,6 +253,8 @@ def bench_sim(json_path: str, rounds: int = 20, clients: int = 32,
                            / out["loop"]["rounds_per_sec"], 2)
     out["scan_speedup"] = round(out["scanned"]["rounds_per_sec"]
                                 / out["loop"]["rounds_per_sec"], 2)
+    out["fused_speedup"] = round(out["fused"]["rounds_per_sec"]
+                                 / out["loop"]["rounds_per_sec"], 2)
     # dynamic-world cost on the scanned path: static/scenario rounds-per-
     # sec ratio (>1 means the scenario is slower; acceptance bound 1.10)
     out["scenario_overhead"] = round(
@@ -250,10 +265,12 @@ def bench_sim(json_path: str, rounds: int = 20, clients: int = 32,
         f.write("\n")
     print(json.dumps(out, indent=2))
     print(f"# wrote {json_path}: megastep {out['speedup']}x / scanned "
-          f"{out['scan_speedup']}x rounds/sec vs loop "
+          f"{out['scan_speedup']}x / fused {out['fused_speedup']}x "
+          f"rounds/sec vs loop "
           f"({out['loop']['dispatches_per_round']:.1f} -> "
           f"{out['megastep']['dispatches_per_round']:.1f} -> "
-          f"{out['scanned']['dispatches_per_round']:.2f} dispatches/round); "
+          f"{out['scanned']['dispatches_per_round']:.2f} -> "
+          f"{out['fused']['dispatches_per_round']:.2f} dispatches/round); "
           f"'{SCENARIO_PRESET}' scenario overhead "
           f"{out['scenario_overhead']}x on the scanned path")
     if check_against:
@@ -320,6 +337,8 @@ def _check_regression(out: dict, committed_path: str,
     if "sweep" in out and "sweep" in committed:
         proto += ["sweep_seeds", "sweep_clients", "sweep_batch",
                   "sweep_rounds"]
+    if "fused" in out and "fused" in committed:
+        proto += ["fused_eval_every"]
     mismatch = {k: (out["config"].get(k), committed["config"].get(k))
                 for k in proto
                 if out["config"].get(k) != committed["config"].get(k)}
@@ -341,7 +360,8 @@ def _check_regression(out: dict, committed_path: str,
               f"(bound x1.10) {status}")
         if overhead > 1.10:
             failures.append("scenario_overhead")
-    for path in ("megastep", "scanned", "scanned_scenario", "spmd"):
+    for path in ("megastep", "scanned", "scanned_scenario", "fused",
+                 "spmd"):
         if path not in committed or path not in out:
             continue
         floor = (1.0 - tolerance) * committed[path]["rounds_per_sec"] * scale

@@ -21,7 +21,8 @@ Resumable driving and multi-seed statistics:
 """
 from repro.api.result import (ROUND_FIELDS, ExperimentResult, RoundRecord)
 from repro.api.runner import (build_spmd_components, run_experiment,
-                              run_spmd_seed_batch, seed_vectorizable)
+                              run_scanned_seed_batch, run_spmd_seed_batch,
+                              seed_vectorizable)
 from repro.api.session import (CheckpointMismatchError, ExperimentSession)
 from repro.api.spec import (DataSpec, ExperimentSpec, SpecError, SpecIssue,
                             WorldSpec)
@@ -52,6 +53,6 @@ __all__ = [
     "WorldState", "build_spmd_components", "build_world", "get_strategy",
     "list_strategies", "mann_whitney_u", "median_iqr",
     "register_strategy", "resolve_scenario", "resolve_strategy",
-    "resolve_topology", "run_experiment", "run_spmd_seed_batch",
-    "run_sweep", "seed_vectorizable",
+    "resolve_topology", "run_experiment", "run_scanned_seed_batch",
+    "run_spmd_seed_batch", "run_sweep", "seed_vectorizable",
 ]

@@ -43,6 +43,7 @@ from repro.api.result import ExperimentResult, RoundRecord
 from repro.api.spec import ExperimentSpec
 from repro.core import async_engine as ae
 from repro.core import compression, fl_step
+from repro.core import megastep as megastep_mod
 from repro.core import scenario as scenario_mod
 from repro.data.loader import ArrayLoader
 from repro.kernels import arena as arena_mod
@@ -81,7 +82,8 @@ def build_simulation(spec: ExperimentSpec) -> "ae.FederatedSimulation":
                                   scenario=spec.resolve_scenario(),
                                   candidate_frac=spec.candidate_frac,
                                   candidate_shards=spec.candidate_shards,
-                                  topology=spec.resolve_topology())
+                                  topology=spec.resolve_topology(),
+                                  fused_eval=spec.fused_eval)
 
 
 def record_from_metrics(m: "ae.RoundMetrics") -> RoundRecord:
@@ -161,15 +163,27 @@ def build_spmd_components(spec: ExperimentSpec, world=None,
     state = fl_step.init_state(jax.random.PRNGKey(spec.seed), cfg, opt,
                                control_plane=cp, scenario=scn,
                                num_clients=C, topology=topo, comm=comm)
+    # donate the previous FLState through the compiled step — without it
+    # every dispatch copies the full parameter arena (the driver rebinds
+    # self.state from the step output, so the input buffers are dead)
     step = fl_step.build_fl_train_step(cfg, opt, theta=st.theta,
                                        lr_schedule=spec.lr_schedule,
-                                       donate=False,
+                                       donate=donate_default(),
                                        beacon_bytes=comm.beacon_bytes,
                                        control_plane=cp,
                                        scenario=scn, drift_dirs=dirs,
                                        topology=topo, comm=comm,
                                        num_clients=C)
     return cfg, st, opt, state, step
+
+
+def donate_default() -> bool:
+    """Donate input buffers to compiled steps wherever the platform
+    honors donation (CPU silently ignores it with a warning). Every
+    driver below rebinds its state from the step's output before any
+    other use, and checkpointing reads the live post-step state
+    (``jax.device_get`` in ``state_dict``), so donation is safe."""
+    return jax.default_backend() != "cpu"
 
 
 def _build_eval(cfg, eval_fn):
@@ -467,6 +481,16 @@ def run_spmd_seed_batch(spec: ExperimentSpec,
             "bytes_sent": 0.0} for _ in range(S)]
     last_acc = [float("nan")] * S
     records: List[List[RoundRecord]] = [[] for _ in range(S)]
+    # the round loop keeps every metric ON DEVICE — a per-round
+    # np.asarray would block the dispatch stream on the transfer (the
+    # paper's per-round sync anti-pattern); buffers drain in ONE
+    # device_get after the last round, and the dispatch count stays
+    # exactly (rounds + eval rounds) — asserted below
+    dispatches = 0
+    metric_buf, acc_buf = [], {}
+    eval_rounds = [rnd for rnd in range(spec.rounds)
+                   if (rnd % spec.eval_every == 0)
+                   or (rnd == spec.rounds - 1)]
     for rnd in range(spec.rounds):
         stacked = []
         for ls in loaders:
@@ -480,14 +504,17 @@ def run_spmd_seed_batch(spec: ExperimentSpec,
         batch = {k: jnp.asarray(np.stack([s[k] for s in stacked]))
                  for k in stacked[0]}
         state, m = vstep(state, batch)
+        dispatches += 1
+        metric_buf.append(m)
+        if rnd in eval_rounds:
+            acc_buf[rnd] = veval(state.params, eval_dev)
+            dispatches += 1
+    assert dispatches == spec.rounds + len(eval_rounds), \
+        "buffered readback must not change the dispatch count"
+    metric_buf, acc_buf = jax.device_get((metric_buf, acc_buf))
 
+    for rnd, m in enumerate(metric_buf):
         mask = np.asarray(m["mask"])                       # (S, C)
-        bytes_sent = np.asarray(m["bytes_sent"])
-        accept = np.asarray(m["accept_rate"])
-        loss = np.asarray(m["loss"])
-        do_eval = (rnd % spec.eval_every == 0) or (rnd == spec.rounds - 1)
-        if do_eval:
-            accs = np.asarray(veval(state.params, eval_dev))
         for i in range(S):
             a = acc[i]
             # seed_vectorizable guarantees no selection/dropout (all
@@ -496,16 +523,17 @@ def run_spmd_seed_batch(spec: ExperimentSpec,
                                 n_samples, mask[i],
                                 participating=np.ones(C, bool),
                                 payload_bytes=param_bytes, acc=a)
-            a["bytes_sent"] += float(bytes_sent[i])
-            if do_eval:
-                last_acc[i] = float(accs[i])
+            a["bytes_sent"] += float(m["bytes_sent"][i])
+            if rnd in acc_buf:
+                last_acc[i] = float(acc_buf[rnd][i])
             records[i].append(RoundRecord(
                 round=rnd, sim_time=a["sim_time"],
                 comm_time=a["comm_time"], idle_time=a["idle_time"],
                 bytes_sent=a["bytes_sent"],
                 updates_applied=int(mask[i].sum()),
-                accept_rate=float(accept[i]), accuracy=last_acc[i],
-                loss=float(loss[i])))
+                accept_rate=float(m["accept_rate"][i]),
+                accuracy=last_acc[i],
+                loss=float(m["loss"][i])))
 
     elapsed = time.time() - t0
     out = []
@@ -516,4 +544,152 @@ def run_spmd_seed_batch(spec: ExperimentSpec,
             seed=s.seed, records=records[i], cfg=cfg, params=params_i,
             eval_arrays=worlds[i].eval_arrays, num_clients=C,
             param_bytes=param_bytes, wall_time=elapsed))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# vectorized multi-seed execution of the SCANNED sim engine
+# ---------------------------------------------------------------------------
+
+def run_scanned_seed_batch(spec: ExperimentSpec,
+                           seeds: Sequence[int]) -> List[ExperimentResult]:
+    """Execute the scanned sim engine at every seed as ONE vmapped
+    dispatch stream (the whole-experiment-fusion analogue of
+    :func:`run_spmd_seed_batch`).
+
+    Eval is fused into the scan carry (``fused_eval`` is forced on), so
+    an S-seed sweep cell of N rounds costs ``ceil(N / R)`` compiled
+    dispatches TOTAL — no per-seed, per-dispatch eval readback breaks
+    the stream; per-round metrics buffer on device and drain in one
+    ``device_get`` at the end. Per-seed worlds (data, profiles, control
+    state, PRNG keys) stack along a leading seed axis; the per-client
+    sample capacity pads to the cross-seed maximum, which never changes
+    a trajectory because batch index sampling is bounded by each seed's
+    true shard sizes. Requires every seed to resolve the same scanned
+    trace shape (select_k, steps_phys, batch_phys).
+    """
+    t0 = time.time()
+    if spec.engine != "sim" or not spec.rounds_per_dispatch:
+        raise ValueError(
+            "run_scanned_seed_batch vectorizes the scanned sim engine — "
+            "the spec needs engine='sim' and rounds_per_dispatch")
+    specs = [dataclasses.replace(spec, seed=int(s),
+                                 fused_eval=True).validate()
+             for s in seeds]
+    sims = [build_simulation(s) for s in specs]
+    for sim in sims:
+        sim._scan_setup()
+    shapes = {sim._scan_shapes() for sim in sims}
+    if len(shapes) > 1:
+        raise ValueError(
+            f"seeds resolve different scanned trace shapes "
+            f"{sorted(shapes)} (select_k, steps_phys, batch_phys must "
+            "agree); equalize data sizes across seeds or run serially")
+    sim0 = sims[0]
+    R = sim0.rounds_per_dispatch
+    S = len(sims)
+
+    # --- stack the per-seed device worlds along a leading seed axis ---
+    def _pad_cap(a, cap):
+        pad = cap - a.shape[1]
+        if pad == 0:
+            return a
+        widths = [(0, 0)] * a.ndim
+        widths[1] = (0, pad)
+        return jnp.pad(a, widths)
+
+    keys = list(sims[0]._scan_world[0])
+    cap = max(sim._scan_world[0][keys[0]].shape[1] for sim in sims)
+    data = {k: jnp.stack([_pad_cap(sim._scan_world[0][k], cap)
+                          for sim in sims]) for k in keys}
+    sizes, speed, latency, dropout_p = (
+        jnp.stack([sim._scan_world[1 + a] for sim in sims])
+        for a in range(4))
+    stack = lambda xs: jax.tree.map(lambda *ls: jnp.stack(ls), *xs)
+    ctl = stack([sim._scan_ctl for sim in sims])
+    ws = stack([sim._world_state for sim in sims])
+    topo = (stack([sim._topo_state for sim in sims])
+            if sim0._topo_state is not None else None)
+    params_mat = jnp.stack([sim._params_mat for sim in sims])
+    blank_ref = jnp.where(jnp.asarray(sim0._arena.valid_mask()),
+                          jnp.int8(0), jnp.int8(-2))
+    ref_mat = jnp.stack([blank_ref] * S)
+    ref_valid = jnp.stack([sim._scan_ref_valid for sim in sims])
+    base_key = jnp.stack([sim._scan_key for sim in sims])
+    eval_data = stack([sim._eval_dev for sim in sims])
+    acc = jnp.zeros((S, 4), jnp.float32)
+    prev_acc = jnp.full((S,), jnp.nan, jnp.float32)
+
+    # --- one jitted vmap of the raw scanned run per chunk width -------
+    k_sel, steps_phys, batch_phys = sim0._scan_shapes()
+    vruns = {}
+
+    def vrun(Rg):
+        if Rg not in vruns:
+            raw = megastep_mod.build_scanned_rounds(
+                sim0.cfg, sim0.opt, sim0._arena, sim0.strategy, sim0.comm,
+                num_clients=sim0.num_clients, select_k=k_sel,
+                steps_phys=steps_phys, batch_phys=batch_phys,
+                rounds_per_dispatch=Rg, param_bytes=sim0.param_bytes,
+                wire_bytes=sim0._wire_bytes,
+                recovery_time=sim0.recovery_time,
+                restart_time=sim0.restart_time,
+                schedule=sim0.schedule, scenario=sim0.scenario,
+                drift_dirs=sim0._drift_dirs,
+                drift_label=sim0._drift_label or "y",
+                candidate_frac=sim0.candidate_frac,
+                candidate_shards=sim0.candidate_shards,
+                topology=sim0._topo,
+                eval_fn=sim0._eval, eval_every=sim0.eval_every,
+                jit=False)
+            axes = (0, 0, 0, 0, 0, (0 if topo is not None else None),
+                    0, 0, 0, 0, 0, 0, None, 0, 0, None, 0)
+            vruns[Rg] = jax.jit(
+                jax.vmap(raw, in_axes=axes),
+                donate_argnums=megastep_mod.scan_donate_argnums(
+                    fused=True))
+        return vruns[Rg]
+
+    ms_buf = []
+    round0 = 0
+    while round0 < spec.rounds:
+        Rg = min(R, spec.rounds - round0)
+        mark = (spec.rounds - 1 if round0 + Rg == spec.rounds else -1)
+        carry, ms = vrun(Rg)(
+            params_mat, ref_mat, ref_valid, ctl, ws, topo,
+            data, sizes, speed, latency, dropout_p, base_key,
+            jnp.int32(round0), acc, prev_acc, jnp.int32(mark), eval_data)
+        (params_mat, ref_mat, ref_valid, ctl, ws, topo, acc,
+         prev_acc) = carry
+        ms_buf.append(ms)            # device-side; one readback below
+        round0 += Rg
+    ms_buf, params_final = jax.device_get((ms_buf, params_mat))
+
+    records: List[List[RoundRecord]] = [[] for _ in range(S)]
+    rnd = 0
+    for ms in ms_buf:
+        Rg = ms["loss"].shape[1]
+        for j in range(Rg):
+            for i in range(S):
+                records[i].append(RoundRecord(
+                    round=rnd + j,
+                    sim_time=float(ms["sim_time"][i, j]),
+                    comm_time=float(ms["comm_time"][i, j]),
+                    idle_time=float(ms["idle_time"][i, j]),
+                    bytes_sent=float(ms["bytes_sent"][i, j]),
+                    updates_applied=int(ms["updates_applied"][i, j]),
+                    accept_rate=float(ms["accept_rate"][i, j]),
+                    accuracy=float(ms["accuracy"][i, j]),
+                    loss=float(ms["loss"][i, j])))
+        rnd += Rg
+
+    elapsed = time.time() - t0
+    out = []
+    for i, (s, sim) in enumerate(zip(specs, sims)):
+        out.append(ExperimentResult(
+            engine="sim", strategy=s.strategy_name(), rounds=s.rounds,
+            seed=s.seed, records=records[i], cfg=sim.cfg,
+            params=sim._arena.unpack(jnp.asarray(params_final[i])),
+            eval_arrays=sim.eval_arrays, num_clients=sim.num_clients,
+            param_bytes=sim.param_bytes, wall_time=elapsed))
     return out

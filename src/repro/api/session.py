@@ -60,7 +60,7 @@ CHECKPOINT_FORMAT = 1
 _FINGERPRINT_DOC = ("engine", "model", "strategy", "schedule", "scenario",
                     "topology", "data", "world", "comm", "seed",
                     "eval_every", "megastep", "rounds_per_dispatch",
-                    "optimizer", "lr_schedule", "eval_fn")
+                    "fused_eval", "optimizer", "lr_schedule", "eval_fn")
 
 
 def sidecar_path(ckpt_path: str) -> str:
@@ -209,6 +209,7 @@ def _spec_fingerprint(spec: ExperimentSpec) -> Dict[str, Any]:
         "eval_every": spec.eval_every,
         "megastep": spec.megastep,
         "rounds_per_dispatch": spec.rounds_per_dispatch,
+        "fused_eval": spec.fused_eval,
         "optimizer": _marker(spec.optimizer),
         "lr_schedule": spec.lr_schedule is not None,
         "eval_fn": spec.eval_fn is not None,

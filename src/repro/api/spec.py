@@ -138,6 +138,13 @@ class ExperimentSpec:
                                                # dispatch (core/control.py).
                                                # None -> host control plane
                                                # (the pinned reference paths)
+    fused_eval: bool = False                   # sim engine, scanned path:
+                                               # evaluation joins the
+                                               # lax.scan carry (eval_every
+                                               # cadence inside the scan, no
+                                               # per-dispatch host readback)
+                                               # — needs rounds_per_dispatch
+                                               # and the default eval
     eval_fn: Optional[Callable] = None         # custom eval(params, batch)
     lr_schedule: Optional[Callable] = None     # spmd engine only
     candidate_frac: Optional[float] = None     # two-stage selection: each
@@ -231,6 +238,23 @@ class ExperimentSpec:
                     "megastep", self.megastep,
                     "rounds_per_dispatch requires megastep=True (the "
                     "scanned path runs on the parameter arena)"))
+        if self.fused_eval:
+            if self.rounds_per_dispatch is None:
+                issues.append(SpecIssue(
+                    "fused_eval", self.fused_eval,
+                    "fused_eval folds evaluation into the scanned "
+                    "lax.scan carry — set rounds_per_dispatch"))
+            if self.engine != "sim":
+                issues.append(SpecIssue(
+                    "fused_eval", self.fused_eval,
+                    "fused_eval is a sim-engine knob (the scanned "
+                    "control plane)"))
+            if self.eval_fn is not None:
+                issues.append(SpecIssue(
+                    "fused_eval", self.fused_eval,
+                    "fused_eval traces evaluation inside the compiled "
+                    "scan; custom eval_fn callables are not guaranteed "
+                    "traceable — drop one of the two"))
         if self.world.num_clients < 1:
             issues.append(SpecIssue("world.num_clients",
                                     self.world.num_clients,

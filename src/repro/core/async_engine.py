@@ -167,7 +167,8 @@ class FederatedSimulation:
                  schedule: Optional[ScheduleSpec] = None,
                  scenario: Optional[scenario_mod.ScenarioSpec] = None,
                  candidate_frac: Optional[float] = None,
-                 candidate_shards: int = 8, topology=None):
+                 candidate_shards: int = 8, topology=None,
+                 fused_eval: bool = False):
         self.cfg = cfg
         self.strategy = strategy
         # schedule=None -> legacy StrategyConfig.mode shim
@@ -192,6 +193,20 @@ class FederatedSimulation:
             raise ValueError("rounds_per_dispatch requires megastep=True "
                              "(the scanned path runs on the parameter "
                              "arena)")
+        # whole-experiment fusion: eval lives in the scan carry (no
+        # per-dispatch host readback); needs the scanned path and the
+        # default (traceable) eval — a custom eval_fn has no traceability
+        # contract, so it keeps the host eval dispatch
+        self.fused_eval = bool(fused_eval)
+        if self.fused_eval and not self.rounds_per_dispatch:
+            raise ValueError("fused_eval folds evaluation into the "
+                             "scanned lax.scan carry — set "
+                             "rounds_per_dispatch")
+        if self.fused_eval and eval_fn is not None:
+            raise ValueError("fused_eval traces the eval inside the "
+                             "compiled scan; custom eval_fn callables "
+                             "are not guaranteed traceable — drop one "
+                             "of the two")
         # two-stage selection: None -> legacy single-stage; 1.0 is
         # bit-identical to it (all-True candidate mask) on every path
         self.candidate_frac = (None if candidate_frac is None
@@ -961,7 +976,9 @@ class FederatedSimulation:
                 drift_label=self._drift_label or "y",
                 candidate_frac=self.candidate_frac,
                 candidate_shards=self.candidate_shards,
-                topology=self._topo)
+                topology=self._topo,
+                eval_fn=(self._eval if self.fused_eval else None),
+                eval_every=self.eval_every)
         return self._scan_fns[R]
 
     def _run_scanned(self, num_rounds: int,
@@ -976,36 +993,49 @@ class FederatedSimulation:
         done = 0
         while done < num_rounds:
             Rg = min(R, num_rounds - done)
-            carry, ms = self._scan_fn(Rg)(
-                self._params_mat, ref_mat, self._scan_ref_valid,
-                self._scan_ctl, self._world_state, self._topo_state,
-                data, sizes, speed, latency, dropout_p,
-                self._scan_key, jnp.int32(self._scan_round0),
-                jnp.asarray([self.sim_time, self.comm_time,
-                             self.idle_time, self.bytes_sent],
-                            jnp.float32))
+            last = start + done + Rg - 1
+            prev_acc = (self.history[-1].accuracy if self.history
+                        else float("nan"))
+            args = [self._params_mat, ref_mat, self._scan_ref_valid,
+                    self._scan_ctl, self._world_state, self._topo_state,
+                    data, sizes, speed, latency, dropout_p,
+                    self._scan_key, jnp.int32(self._scan_round0),
+                    jnp.asarray([self.sim_time, self.comm_time,
+                                 self.idle_time, self.bytes_sent],
+                                jnp.float32)]
+            if self.fused_eval:
+                # eval rides the scan carry: only the final round of the
+                # whole run() is forced (eval_final), the rest follow
+                # the absolute-round eval_every cadence inside the scan
+                mark = (last if (eval_final
+                                 and last == start + num_rounds - 1)
+                        else -1)
+                args += [jnp.float32(prev_acc), jnp.int32(mark),
+                         self._eval_dev]
+            carry, ms = self._scan_fn(Rg)(*args)
             self.dispatches += 1
             (self._params_mat, ref_mat, self._scan_ref_valid,
              self._scan_ctl, self._world_state, self._topo_state,
-             _acc) = carry
+             *_rest) = carry
             self._params_tree = None          # pytree view now stale
             ms = {k: np.asarray(v) for k, v in ms.items()}
 
-            last = start + done + Rg - 1
-            # evaluate once per dispatch (at its last round) when the
-            # eval cadence lands inside the dispatch or the run ends —
-            # cadence over the ABSOLUTE round index, so a resumed
-            # session keeps the uninterrupted run's eval rounds
-            do_eval = (any(r % self.eval_every == 0
-                           for r in range(start + done, start + done + Rg))
-                       or (eval_final and last == start + num_rounds - 1))
-            if do_eval:
-                acc_val = float(self._eval(self.params, self._eval_dev))
-                self.dispatches += 1
+            if self.fused_eval:
+                acc_val = None                # accuracy is per-round in ms
             else:
-                acc_val = None
-            prev_acc = (self.history[-1].accuracy if self.history
-                        else float("nan"))
+                # evaluate once per dispatch (at its last round) when the
+                # eval cadence lands inside the dispatch or the run ends —
+                # cadence over the ABSOLUTE round index, so a resumed
+                # session keeps the uninterrupted run's eval rounds
+                do_eval = (any(r % self.eval_every == 0
+                               for r in range(start + done,
+                                              start + done + Rg))
+                           or (eval_final and last == start + num_rounds - 1))
+                if do_eval:
+                    acc_val = float(self._eval(self.params, self._eval_dev))
+                    self.dispatches += 1
+                else:
+                    acc_val = None
             for j in range(Rg):
                 is_last = j == Rg - 1
                 self.history.append(RoundMetrics(
@@ -1016,8 +1046,10 @@ class FederatedSimulation:
                     bytes_sent=float(ms["bytes_sent"][j]),
                     updates_applied=int(ms["updates_applied"][j]),
                     accept_rate=float(ms["accept_rate"][j]),
-                    accuracy=(acc_val if (is_last and acc_val is not None)
-                              else prev_acc),
+                    accuracy=(float(ms["accuracy"][j]) if self.fused_eval
+                              else (acc_val
+                                    if (is_last and acc_val is not None)
+                                    else prev_acc)),
                     loss=float(ms["loss"][j])))
             self.server_step += int(ms["updates_applied"].sum())
             # failure times are only known to round granularity on the

@@ -147,7 +147,9 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
                          restart_time: float = 1.0, schedule=None,
                          scenario=None, drift_dirs=None,
                          drift_label: str = "y", candidate_frac=None,
-                         candidate_shards: int = 8, topology=None):
+                         candidate_shards: int = 8, topology=None,
+                         eval_fn=None, eval_every: int = 1,
+                         jit: bool = True, donate=None):
     """Compile ``rounds_per_dispatch`` full FL rounds — {select → train
     cohort → θ-filter → staleness-weighted arena aggregate → control
     update} — into one jitted ``lax.scan``.
@@ -188,6 +190,26 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
     form on the absolute round index, so it is likewise R-independent.
     ``acc`` is the (sim_time, comm_time, idle_time, bytes_sent) f32
     accumulator vector.
+
+    Whole-experiment fusion (``eval_fn`` not None): evaluation joins the
+    scan carry instead of breaking the dispatch stream. ``eval_fn`` must
+    be a traceable ``(params_tree, eval_data) -> accuracy`` function; the
+    carry gains a ``prev_acc`` f32 scalar (NaN before the first eval) and
+    ``run`` three trailing arguments ``(prev_acc, eval_mark, eval_data)``
+    — ``eval_mark`` is the absolute round index forced to evaluate (the
+    engine's eval_final semantics; -1 disables) and ``eval_data`` the
+    device-resident eval batch, passed explicitly (not closed over) so
+    the whole ``run`` can be vmapped over a seed axis with per-seed eval
+    arrays. Rounds where ``r % eval_every == 0`` (or ``r == eval_mark``)
+    evaluate inside a ``lax.cond`` — the untaken branch costs nothing —
+    and every round's metrics carry the latest accuracy (the loop
+    engine's carry-forward semantics). Eval keys off the absolute round
+    index, so fused accuracy is independent of the dispatch grouping R.
+
+    ``jit=False`` returns the raw python callable (for a caller-side
+    ``jax.jit(jax.vmap(run, ...))`` over seeds); ``donate`` controls
+    buffer donation of the carry operands through the jitted path —
+    default: donate whenever the platform honors donation (not CPU).
     """
     from repro.core import scenario as scenario_mod
     from repro.core.schedule import ScheduleSpec
@@ -196,14 +218,19 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
     dirs = (jnp.asarray(drift_dirs)
             if (scn is not None and scn.drift is not None) else None)
     N, K, R = int(num_clients), int(select_k), int(rounds_per_dispatch)
+    E = int(eval_every)
     theta_on = st.theta is not None
     payload = float(wire_bytes if (st.quantize_updates and wire_bytes)
                     else param_bytes)
     beacon = float(comm.beacon_bytes)
 
     def round_body(carry, r, data, sizes, speed, latency, dropout_p,
-                   base_key):
-        params_mat, ref_mat, ref_valid, ctl, ws, topo, acc = carry
+                   base_key, eval_mark=None, eval_data=None):
+        if eval_fn is not None:
+            (params_mat, ref_mat, ref_valid, ctl, ws, topo, acc,
+             prev_acc) = carry
+        else:
+            params_mat, ref_mat, ref_valid, ctl, ws, topo, acc = carry
         sim_t, comm_t, idle_t, bytes_s = acc
         key = jax.random.fold_in(base_key, r)
         k_eps, k_pick, k_drop, k_data = jax.random.split(key, 4)
@@ -386,16 +413,64 @@ def build_scanned_rounds(cfg, opt, arena, st, comm, *, num_clients: int,
             "n_failures": failed.sum().astype(jnp.int32),
         }
         acc = jnp.stack([sim_t, comm_t, idle_t, bytes_s])
+
+        # --- fused eval: accuracy joins the scan carry ------------------
+        if eval_fn is not None:
+            do = (r % E == 0) | (r == eval_mark)
+            prev_acc = jax.lax.cond(
+                do,
+                lambda m: jnp.asarray(
+                    eval_fn(arena.unpack(m), eval_data), jnp.float32),
+                lambda m: prev_acc,
+                params_mat)
+            metrics["accuracy"] = prev_acc
+            return (params_mat, ref_mat, ref_valid, ctl, ws, topo, acc,
+                    prev_acc), metrics
         return (params_mat, ref_mat, ref_valid, ctl, ws, topo, acc), metrics
 
-    @jax.jit
-    def run(params_mat, ref_mat, ref_valid, ctl, ws, topo, data, sizes,
-            speed, latency, dropout_p, base_key, round0, acc):
-        body = functools.partial(round_body, data=data, sizes=sizes,
-                                 speed=speed, latency=latency,
-                                 dropout_p=dropout_p, base_key=base_key)
-        rounds = round0 + jnp.arange(R, dtype=jnp.int32)
-        carry0 = (params_mat, ref_mat, ref_valid, ctl, ws, topo, acc)
-        return jax.lax.scan(lambda c, r: body(c, r), carry0, rounds)
+    if eval_fn is None:
+        def run_impl(params_mat, ref_mat, ref_valid, ctl, ws, topo, data,
+                     sizes, speed, latency, dropout_p, base_key, round0,
+                     acc):
+            body = functools.partial(round_body, data=data, sizes=sizes,
+                                     speed=speed, latency=latency,
+                                     dropout_p=dropout_p, base_key=base_key)
+            rounds = round0 + jnp.arange(R, dtype=jnp.int32)
+            carry0 = (params_mat, ref_mat, ref_valid, ctl, ws, topo, acc)
+            return jax.lax.scan(lambda c, r: body(c, r), carry0, rounds)
+    else:
+        def run_impl(params_mat, ref_mat, ref_valid, ctl, ws, topo, data,
+                     sizes, speed, latency, dropout_p, base_key, round0,
+                     acc, prev_acc, eval_mark, eval_data):
+            body = functools.partial(round_body, data=data, sizes=sizes,
+                                     speed=speed, latency=latency,
+                                     dropout_p=dropout_p, base_key=base_key,
+                                     eval_mark=eval_mark,
+                                     eval_data=eval_data)
+            rounds = round0 + jnp.arange(R, dtype=jnp.int32)
+            carry0 = (params_mat, ref_mat, ref_valid, ctl, ws, topo, acc,
+                      prev_acc)
+            return jax.lax.scan(lambda c, r: body(c, r), carry0, rounds)
 
-    return run
+    if not jit:
+        return run_impl
+    return jax.jit(run_impl, donate_argnums=scan_donate_argnums(
+        fused=eval_fn is not None, donate=donate))
+
+
+def scan_donate_argnums(*, fused: bool, donate=None):
+    """Donation set for the scanned ``run``: the carry operands
+    (arena, reference sign, control state, world/topology state, the
+    accounting accumulator — plus ``prev_acc`` when eval is fused) are
+    consumed and rebound from the scan output by every caller, so their
+    input buffers can be reused in place. The read-only population
+    stacks (data/sizes/speed/latency/dropout_p) and the PRNG key are
+    never donated. CPU ignores donation with a warning, so the default
+    donates only where the platform honors it.
+    """
+    if donate is None:
+        donate = jax.default_backend() != "cpu"
+    if not donate:
+        return ()
+    nums = (0, 1, 2, 3, 4, 5, 13)          # carry operands
+    return nums + ((14,) if fused else ())  # + prev_acc

@@ -14,13 +14,17 @@ single buffer:
 offsets, row count) so ``pack``/``unpack`` are pure jnp reshapes that
 trace away inside a jitted step — no per-leaf dispatches at run time.
 
-Backend dispatch (one switch for every op): on TPU the Pallas kernels run
-compiled (``interpret=False``); everywhere else the pure-jnp oracles from
-``kernels/ref.py`` are used — XLA-compiled, bit-matching the kernel
-semantics, and fast on CPU where interpret-mode Pallas would be a
-correctness-only crawl. Padding uses value 0 for updates and a -2
-sentinel for reference signs so padded positions can never count as
-aligned (sign() ∈ {-1, 0, 1}).
+Backend dispatch (one selector for every op, ``kernels.backend``): on
+TPU the Mosaic-Pallas kernels run compiled (``interpret=False``), on GPU
+the Triton-Pallas kernels from ``kernels/gpu.py`` run compiled, and
+everywhere else the pure-jnp oracles from ``kernels/ref.py`` are used —
+XLA-compiled, bit-matching the kernel semantics, and fast on CPU where
+interpret-mode Pallas would be a correctness-only crawl. The resolved
+backend is logged once per process and can be forced with
+``REPRO_KERNEL_BACKEND={pallas,oracle,auto}`` (unknown values and
+pallas-on-unsupported-platform raise — no silent fallback). Padding uses
+value 0 for updates and a -2 sentinel for reference signs so padded
+positions can never count as aligned (sign() ∈ {-1, 0, 1}).
 """
 from __future__ import annotations
 
@@ -28,7 +32,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import backend as _backend
 from repro.kernels import gather as _gather
+from repro.kernels import gpu as _gpu
 from repro.kernels import masked_agg as _agg
 from repro.kernels import quantize as _qz
 from repro.kernels import ref as _ref
@@ -38,8 +44,9 @@ LANE = _sa.LANE
 
 
 def use_pallas() -> bool:
-    """One dispatch switch: compiled Pallas on TPU, jnp oracle elsewhere."""
-    return jax.default_backend() == "tpu"
+    """True when a compiled Pallas lowering (TPU Mosaic or GPU Triton)
+    is the active kernel backend; False on the jnp-oracle path."""
+    return _backend.resolve() != "oracle"
 
 
 class ParamArena:
@@ -127,14 +134,17 @@ class ParamArena:
 
 
 # ---------------------------------------------------------------------------
-# dispatch-switched cohort ops (jnp oracle on CPU, Pallas on TPU)
+# backend-dispatched cohort ops (TPU Mosaic / GPU Triton / jnp oracle)
 # ---------------------------------------------------------------------------
 
 def cohort_sign_align(u, r) -> jnp.ndarray:
     """u: (C, rows, lane) f32 updates; r: (rows, lane) int8 reference.
     Returns (C,) aligned counts (divide by the arena's true n for ratios)."""
-    if use_pallas():
+    b = _backend.resolve()
+    if b == "tpu-pallas":
         return _sa.per_client_sign_align(u, r, interpret=False)
+    if b == "gpu-pallas":
+        return _gpu.per_client_sign_align(u, r)
     return _ref.per_client_sign_align(u, r)
 
 
@@ -143,10 +153,13 @@ def weighted_sum(u, w, compute_dtype=jnp.float32) -> jnp.ndarray:
 
     ``compute_dtype`` selects the cross-client reduction precision for
     the jnp oracle (bf16 halves all-reduce bytes on the production mesh);
-    the Pallas kernel always reduces in f32.
+    the Pallas kernels always reduce in f32.
     """
-    if use_pallas():
+    b = _backend.resolve()
+    if b == "tpu-pallas":
         return _agg.masked_agg(u, w, interpret=False)
+    if b == "gpu-pallas":
+        return _gpu.masked_agg(u, w)
     out = jnp.einsum("crl,c->rl", u.astype(compute_dtype),
                      w.astype(compute_dtype))
     return out.astype(jnp.float32)
@@ -154,8 +167,11 @@ def weighted_sum(u, w, compute_dtype=jnp.float32) -> jnp.ndarray:
 
 def fused_apply(p, u, w_lr) -> jnp.ndarray:
     """p − Σ_c w_lr[c]·u[c] (aggregate+apply fused, p.dtype preserved)."""
-    if use_pallas():
+    b = _backend.resolve()
+    if b == "tpu-pallas":
         return _agg.fused_update(p, u, w_lr, interpret=False)
+    if b == "gpu-pallas":
+        return _gpu.fused_update(p, u, w_lr)
     return _ref.fused_update(p, u, w_lr)
 
 
@@ -163,23 +179,33 @@ def cohort_gather(src, idx) -> jnp.ndarray:
     """Gather per-client arena slabs by cohort index: src (N, rows, lane)
     f32, idx (K,) i32 -> (K, rows, lane). The device control plane's
     top-k selection feeds this (EF buffers, per-client state slabs); on
-    TPU it runs as a one-hot matmul sweep (MXU-friendly, no serial DMA
-    per row), on CPU as the bit-identical ``jnp.take`` oracle."""
-    if use_pallas():
-        onehot = (idx[:, None] == jnp.arange(src.shape[0])[None, :]
-                  ).astype(jnp.float32)
-        return _gather.onehot_gather(src, onehot, interpret=False)
-    return _ref.cohort_gather(src, idx)
+    TPU/GPU it runs as a one-hot matmul sweep (matrix-unit friendly, no
+    serial DMA per row), on CPU as the bit-identical ``jnp.take``
+    oracle."""
+    b = _backend.resolve()
+    if b == "oracle":
+        return _ref.cohort_gather(src, idx)
+    onehot = (idx[:, None] == jnp.arange(src.shape[0])[None, :]
+              ).astype(jnp.float32)
+    if b == "gpu-pallas":
+        return _gpu.onehot_gather(src, onehot)
+    return _gather.onehot_gather(src, onehot, interpret=False)
 
 
 def quantize_rows(x):
     """x: (R, lane) f32 -> (q int8 (R, lane), scales f32 (R, 1))."""
-    if use_pallas():
+    b = _backend.resolve()
+    if b == "tpu-pallas":
         return _qz.quantize_q8(x, interpret=False)
+    if b == "gpu-pallas":
+        return _gpu.quantize_q8(x)
     return _ref.quantize_q8(x)
 
 
 def dequantize_rows(q, s) -> jnp.ndarray:
-    if use_pallas():
+    b = _backend.resolve()
+    if b == "tpu-pallas":
         return _qz.dequantize_q8(q, s, interpret=False)
+    if b == "gpu-pallas":
+        return _gpu.dequantize_q8(q, s)
     return _ref.dequantize_q8(q, s)

@@ -1,0 +1,73 @@
+"""Explicit kernel-backend selection for the (R, LANE) arena ops.
+
+Three backends:
+
+  * ``tpu-pallas``  — the Mosaic-lowered Pallas kernels, compiled
+    (``interpret=False``) on TPU.
+  * ``gpu-pallas``  — the Triton-lowered Pallas kernels in
+    ``kernels/gpu.py``, compiled on GPU.
+  * ``oracle``      — the pure-jnp reference implementations in
+    ``kernels/ref.py`` (XLA-compiled, bit-matching the kernel
+    semantics; the CPU default).
+
+Resolution order: the ``REPRO_KERNEL_BACKEND`` environment variable
+(``pallas`` | ``oracle`` | ``auto``) wins; ``auto`` (and the unset
+default) picks by ``jax.default_backend()``. Forcing ``pallas`` on a
+platform with no Pallas lowering is an error, not a degrade, and an
+unknown forced value raises immediately — the silent-fallback failure
+mode this module exists to remove. The resolved backend is logged once
+per process so every run names the kernels it actually executed.
+"""
+from __future__ import annotations
+
+import logging
+import os
+
+import jax
+
+ENV_VAR = "REPRO_KERNEL_BACKEND"
+FORCED_VALUES = ("pallas", "oracle", "auto")
+BACKENDS = ("tpu-pallas", "gpu-pallas", "oracle")
+
+_PLATFORM_PALLAS = {"tpu": "tpu-pallas", "gpu": "gpu-pallas"}
+
+_log = logging.getLogger("repro.kernels")
+_announced: set = set()
+
+
+def resolve() -> str:
+    """Return the active kernel backend, one of ``BACKENDS``.
+
+    Re-reads the environment on every call (cheap: two dict lookups)
+    so tests can flip ``REPRO_KERNEL_BACKEND`` mid-process; the
+    announcement log still fires only once per distinct resolution.
+    """
+    forced = os.environ.get(ENV_VAR, "auto").strip().lower() or "auto"
+    if forced not in FORCED_VALUES:
+        raise ValueError(
+            f"{ENV_VAR}={forced!r} is not a valid kernel backend override; "
+            f"expected one of {FORCED_VALUES}")
+    platform = jax.default_backend()
+    if forced == "oracle":
+        backend = "oracle"
+    elif forced == "pallas":
+        backend = _PLATFORM_PALLAS.get(platform)
+        if backend is None:
+            raise RuntimeError(
+                f"{ENV_VAR}=pallas was forced but platform {platform!r} has "
+                "no Pallas lowering (TPU -> Mosaic, GPU -> Triton); refusing "
+                "to degrade to the jnp oracles silently. Unset the override "
+                f"or use {ENV_VAR}=oracle explicitly.")
+    else:  # auto
+        backend = _PLATFORM_PALLAS.get(platform, "oracle")
+    _announce(backend, platform, forced)
+    return backend
+
+
+def _announce(backend: str, platform: str, forced: str) -> None:
+    key = (backend, platform, forced)
+    if key in _announced:
+        return
+    _announced.add(key)
+    _log.info("active kernel backend: %s (platform=%s, %s=%s)",
+              backend, platform, ENV_VAR, forced)

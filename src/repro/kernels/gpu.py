@@ -1,0 +1,274 @@
+"""Triton-lowered Pallas kernels for GPU — the same (R, LANE) arena ops
+as the TPU modules, rewritten inside Triton's constraints:
+
+  * every block dimension must be a power of two (``tl.arange``
+    requirement), so the public wrappers pad the client/population axes
+    (C, K, N) to the next power of two and slice the padding back off —
+    zero-padded rows contribute exactly 0 to every reduction, and sign
+    references pad with the -2 sentinel so padded slots can never count
+    as aligned;
+  * the grid is a parallel launch with no cross-program accumulation,
+    so reductions stay inside one program (partials summed by the
+    jit'd wrapper, as on TPU);
+  * no 3-D einsum — the client-axis reductions are broadcast-multiply
+    followed by ``jnp.sum(axis=0)``, which Triton lowers as a register
+    reduction.
+
+Block shapes keep the full LANE (1024, a power of two) but sweep one
+arena row per program for the client-resident kernels so the resident
+tile stays C·4 KiB — inside shared memory for any realistic cohort.
+
+All kernels bit-match the jnp oracles in ``kernels/ref.py``; the oracle
+tests in ``tests/test_kernels.py`` run them in interpret mode on any
+backend and compiled when ``jax.default_backend() == "gpu"``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 1024
+BLOCK_R = 8          # rows per program for the 2-D (row-tiled) kernels
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _pad_axis(x, axis: int, target: int, value=0):
+    pad = target - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# sign alignment
+# ---------------------------------------------------------------------------
+
+def _count_kernel(g_ref, r_ref, out_ref):
+    s = jnp.sign(g_ref[...].astype(jnp.float32)).astype(jnp.int8)
+    eq = (s == r_ref[...]).astype(jnp.float32)
+    out_ref[0, 0] = jnp.sum(eq)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_r"))
+def sign_align_counts(g, r, *, interpret: bool = False,
+                      block_r: int = BLOCK_R):
+    """g: (R, LANE) float; r: (R, LANE) int8. Returns scalar f32 count.
+
+    R is padded to a block multiple: g with zeros (sign 0), r with the
+    -2 sentinel — padded positions never compare equal.
+    """
+    R = g.shape[0]
+    Rp = pl.cdiv(R, block_r) * block_r
+    g = _pad_axis(g, 0, Rp)
+    r = _pad_axis(r, 0, Rp, value=-2)
+    grid = (Rp // block_r,)
+    partial = pl.pallas_call(
+        _count_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid[0], 1), jnp.float32),
+        interpret=interpret,
+    )(g, r)
+    return partial.sum()
+
+
+def _per_client_kernel(u_ref, r_ref, out_ref):
+    s = jnp.sign(u_ref[...].astype(jnp.float32)).astype(jnp.int8)
+    eq = (s == r_ref[...][None]).astype(jnp.float32)       # (C, 1, LANE)
+    out_ref[:, 0] = jnp.sum(eq, axis=(1, 2))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def per_client_sign_align(u, r, *, interpret: bool = False):
+    """u: (C, R, LANE); r: (R, LANE) int8 -> (C,) aligned counts (f32).
+
+    One arena row per program; the client axis (padded to a power of
+    two with zero rows — sign 0, counted never) stays resident.
+    """
+    C, R, _ = u.shape
+    Cp = _pow2(C)
+    u = _pad_axis(u, 0, Cp)
+    grid = (R,)
+    partial = pl.pallas_call(
+        _per_client_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Cp, 1, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((1, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((Cp, 1), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((Cp, R), jnp.float32),
+        interpret=interpret,
+    )(u, r)
+    return partial.sum(axis=1)[:C]
+
+
+# ---------------------------------------------------------------------------
+# masked aggregation / fused apply
+# ---------------------------------------------------------------------------
+
+def _agg_kernel(u_ref, w_ref, out_ref):
+    u = u_ref[...].astype(jnp.float32)                 # (C, 1, LANE)
+    w = w_ref[...].astype(jnp.float32)                 # (C, 1)
+    out_ref[...] = jnp.sum(u[:, 0, :] * w, axis=0)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_agg(u, w, *, interpret: bool = False):
+    """u: (C, R, LANE); w: (C,) normalized weights -> (R, LANE) f32."""
+    C, R, _ = u.shape
+    Cp = _pow2(C)
+    u = _pad_axis(u, 0, Cp)
+    w = _pad_axis(w.reshape(-1, 1), 0, Cp)
+    grid = (R,)
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Cp, 1, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((Cp, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, LANE), jnp.float32),
+        interpret=interpret,
+    )(u, w)
+
+
+def _fused_kernel(p_ref, u_ref, w_ref, out_ref):
+    u = u_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    agg = jnp.sum(u[:, 0, :] * w, axis=0)[None]
+    out_ref[...] = (p_ref[...].astype(jnp.float32) - agg).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_update(p, u, w_lr, *, interpret: bool = False):
+    """p: (R, LANE); u: (C, R, LANE); w_lr: (C,) = lr·mask·weight.
+    Returns p − Σ_c w_lr[c]·u[c] in p.dtype (aggregate+apply fused)."""
+    C, R, _ = u.shape
+    Cp = _pow2(C)
+    u = _pad_axis(u, 0, Cp)
+    w_lr = _pad_axis(w_lr.reshape(-1, 1), 0, Cp)
+    grid = (R,)
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((Cp, 1, LANE), lambda i: (0, i, 0)),
+            pl.BlockSpec((Cp, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, LANE), p.dtype),
+        interpret=interpret,
+    )(p, u, w_lr)
+
+
+# ---------------------------------------------------------------------------
+# one-hot cohort gather
+# ---------------------------------------------------------------------------
+
+def _gather_kernel(oh_ref, src_ref, out_ref):
+    oh = oh_ref[...].astype(jnp.float32)               # (1, N)
+    src = src_ref[...].astype(jnp.float32)             # (N, 1, LANE)
+    out_ref[...] = jnp.sum(src[:, 0, :] * oh[0, :, None], axis=0)[None, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def onehot_gather(src, onehot, *, interpret: bool = False):
+    """src: (N, R, LANE) f32; onehot: (K, N) f32 -> (K, R, LANE) f32.
+
+    Grid over (K, R); N padded to a power of two with zero slabs
+    (coefficient 0 — exact). Exactness holds because each one-hot row
+    has a single 1.0 coefficient, matching the ``jnp.take`` oracle.
+    """
+    N, R, _ = src.shape
+    K = onehot.shape[0]
+    Np = _pow2(N)
+    src = _pad_axis(src, 0, Np)
+    onehot = _pad_axis(onehot, 1, Np)
+    grid = (K, R)
+    return pl.pallas_call(
+        _gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Np), lambda k, i: (k, 0)),
+            pl.BlockSpec((Np, 1, LANE), lambda k, i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, LANE), lambda k, i: (k, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((K, R, LANE), jnp.float32),
+        interpret=interpret,
+    )(onehot, src)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantization
+# ---------------------------------------------------------------------------
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q_ref[...] = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize_q8(x, *, interpret: bool = False):
+    """x: (R, LANE) float -> (q int8 (R, LANE), scale f32 (R, 1)).
+
+    One row per program — the per-row amax reduction never crosses a
+    program boundary, so no grid accumulation is needed.
+    """
+    R = x.shape[0]
+    grid = (R,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, LANE), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, LANE), jnp.int8),
+            jax.ShapeDtypeStruct((R, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def _dequant_kernel(q_ref, s_ref, out_ref):
+    out_ref[...] = q_ref[...].astype(jnp.float32) * s_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequantize_q8(q, scale, *, interpret: bool = False):
+    R = q.shape[0]
+    grid = (R,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, LANE), jnp.float32),
+        interpret=interpret,
+    )(q, scale)

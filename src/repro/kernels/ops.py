@@ -1,7 +1,13 @@
 """jit'd public wrappers over the Pallas kernels: pytree <-> (R, LANE)
 layout management, padding, and ratio/aggregation conveniences.
 
-``interpret`` defaults to True off-TPU (this container) and False on TPU.
+Backend routing goes through ``kernels.backend.resolve()`` (overridable
+via ``REPRO_KERNEL_BACKEND``): compiled Mosaic-Pallas on TPU, compiled
+Triton-Pallas (``kernels/gpu.py``) on GPU, interpret-mode kernel bodies
+elsewhere — and the resolved choice is logged once, never silent. An
+explicit ``interpret=`` argument bypasses the selector (used by the
+oracle bit-match tests to pin a specific lowering).
+
 Padding uses value 0 for updates and a -2 sentinel for reference signs so
 padded positions can never count as aligned (sign() ∈ {-1,0,1}).
 """
@@ -10,15 +16,45 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import backend as _backend
+from repro.kernels import gpu as _gpu
 from repro.kernels import masked_agg as _agg
 from repro.kernels import quantize as _q
 from repro.kernels import sign_align as _sa
 
 LANE = _sa.LANE
 
+# op name -> (TPU/interpret module fn, GPU Triton-Pallas fn)
+_KERNELS = {
+    "sign_align_counts": (_sa.sign_align_counts, _gpu.sign_align_counts),
+    "per_client_sign_align": (_sa.per_client_sign_align,
+                              _gpu.per_client_sign_align),
+    "masked_agg": (_agg.masked_agg, _gpu.masked_agg),
+    "fused_update": (_agg.fused_update, _gpu.fused_update),
+    "quantize_q8": (_q.quantize_q8, _gpu.quantize_q8),
+    "dequantize_q8": (_q.dequantize_q8, _gpu.dequantize_q8),
+}
+
 
 def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    """True when the resolved backend runs kernel bodies in interpret
+    mode (i.e. no compiled Pallas lowering is active)."""
+    return _backend.resolve() not in ("tpu-pallas", "gpu-pallas")
+
+
+def _kernel(name, *args, interpret=None):
+    """Dispatch one kernel call through the backend selector.
+
+    ``interpret`` non-None pins the legacy Mosaic-kernel path with that
+    lowering mode; ``None`` routes by ``backend.resolve()``.
+    """
+    tpu_fn, gpu_fn = _KERNELS[name]
+    if interpret is not None:
+        return tpu_fn(*args, interpret=interpret)
+    b = _backend.resolve()
+    if b == "gpu-pallas":
+        return gpu_fn(*args)
+    return tpu_fn(*args, interpret=(b != "tpu-pallas"))
 
 
 def flatten_to_lanes(tree, lane: int = LANE):
@@ -60,17 +96,15 @@ def ref_sign_lanes(ref_sign_tree, lane: int = LANE):
 
 def sign_align_ratio(update_tree, ref_sign_tree, interpret=None) -> jnp.ndarray:
     """Kernel-backed Algorithm-1 relevance for one client's update."""
-    interpret = default_interpret() if interpret is None else interpret
     g, n = flatten_to_lanes(update_tree)
     r = ref_sign_lanes(ref_sign_tree)
-    count = _sa.sign_align_counts(g, r, interpret=interpret)
+    count = _kernel("sign_align_counts", g, r, interpret=interpret)
     return count / jnp.maximum(jnp.float32(n), 1.0)
 
 
 def per_client_sign_align_ratio(stacked_updates, ref_sign_tree,
                                 interpret=None) -> jnp.ndarray:
     """stacked_updates: pytree with leading client dim C -> (C,) ratios."""
-    interpret = default_interpret() if interpret is None else interpret
     C = jax.tree.leaves(stacked_updates)[0].shape[0]
     per_client = [jax.tree.map(lambda x, i=i: x[i], stacked_updates)
                   for i in range(C)]
@@ -78,21 +112,20 @@ def per_client_sign_align_ratio(stacked_updates, ref_sign_tree,
     n = flatten_to_lanes(per_client[0])[1]
     u = jnp.stack(mats)                                  # (C, R, LANE)
     r = ref_sign_lanes(ref_sign_tree)
-    counts = _sa.per_client_sign_align(u, r, interpret=interpret)
+    counts = _kernel("per_client_sign_align", u, r, interpret=interpret)
     return counts / jnp.maximum(jnp.float32(n), 1.0)
 
 
 def masked_aggregate(stacked_updates, mask, weights=None, interpret=None):
     """Kernel-backed masked mean over the client axis. Returns a pytree
     shaped like one client's update (f32 leaves cast back to input dtype)."""
-    interpret = default_interpret() if interpret is None else interpret
     C = jax.tree.leaves(stacked_updates)[0].shape[0]
     w = mask if weights is None else mask * weights
     w = w / jnp.maximum(w.sum(), 1e-9)
     per_client = [jax.tree.map(lambda x, i=i: x[i], stacked_updates)
                   for i in range(C)]
     u = jnp.stack([flatten_to_lanes(t)[0] for t in per_client])
-    out = _agg.masked_agg(u, w, interpret=interpret)
+    out = _kernel("masked_agg", u, w, interpret=interpret)
     like = per_client[0]
     return unflatten_from_lanes(out, like)
 
@@ -100,7 +133,6 @@ def masked_aggregate(stacked_updates, mask, weights=None, interpret=None):
 def fused_selective_update(params, stacked_updates, mask, lr,
                            weights=None, interpret=None):
     """Beyond-paper fused kernel: params − lr · masked_mean(updates)."""
-    interpret = default_interpret() if interpret is None else interpret
     C = jax.tree.leaves(stacked_updates)[0].shape[0]
     w = mask if weights is None else mask * weights
     w_lr = lr * w / jnp.maximum(w.sum(), 1e-9)
@@ -108,19 +140,17 @@ def fused_selective_update(params, stacked_updates, mask, lr,
     per_client = [jax.tree.map(lambda x, i=i: x[i], stacked_updates)
                   for i in range(C)]
     u = jnp.stack([flatten_to_lanes(t)[0] for t in per_client])
-    out = _agg.fused_update(p_mat, u, w_lr, interpret=interpret)
+    out = _kernel("fused_update", p_mat, u, w_lr, interpret=interpret)
     return unflatten_from_lanes(out, params)
 
 
 def quantize_tree(tree, interpret=None):
     """Compress a pytree update to (int8 mat, scales, n). ~4x fewer bytes."""
-    interpret = default_interpret() if interpret is None else interpret
     mat, n = flatten_to_lanes(tree)
-    q, s = _q.quantize_q8(mat, interpret=interpret)
+    q, s = _kernel("quantize_q8", mat, interpret=interpret)
     return q, s, n
 
 
 def dequantize_tree(q, s, like, interpret=None):
-    interpret = default_interpret() if interpret is None else interpret
-    mat = _q.dequantize_q8(q, s, interpret=interpret)
+    mat = _kernel("dequantize_q8", q, s, interpret=interpret)
     return unflatten_from_lanes(mat, like)

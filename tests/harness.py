@@ -245,6 +245,84 @@ def assert_topology_parity(spec: ExperimentSpec,
     return summaries
 
 
+def assert_fused_equivalent(spec: ExperimentSpec, *, R: int = 4,
+                            tmpdir: Optional[str] = None) -> None:
+    """Eval-in-carry parity: folding eval into the scanned lax.scan
+    carry (``fused_eval=True``) must change NOTHING about the
+    trajectory —
+
+      * fused R=1 ≡ post-hoc R=1  — bit-equal on every scan-computed
+        field; accuracy bit-equal at eval-cadence rounds (between them
+        fused carries the last measurement forward while post-hoc
+        leaves NaN, which is a reporting difference, not a trajectory
+        one);
+      * fused R ≡ fused R=1       — eval keys off the ABSOLUTE round
+        index inside the scan, so dispatch grouping is invisible
+        (bit-exact, every field including accuracy);
+      * fused ≡ loop              — the cross-family contract: exact
+        event accounting on accounting-deterministic cells
+        (assert_accounting_close; the families draw different batch
+        RNGs so accuracies only agree statistically — sanity band);
+      * checkpoint boundary       — a fused run interrupted by
+        checkpoint/restore mid-stream is bit-equal to the
+        uninterrupted one (prev_acc re-seeds from persisted history).
+        Accuracy is compared at eval-cadence rounds: ending a stream
+        evaluates its final round (the documented ``stream()``
+        eval_final contract, fused and unfused alike), so when the cut
+        lands off-cadence the runs legitimately report different
+        carry-forward values until the next cadence round — the
+        trajectory itself (every other field) must stay bit-equal at
+        EVERY round.
+    """
+    E = spec.eval_every
+    n = spec.rounds
+    fused = dataclasses.replace(spec, engine="sim", megastep=True,
+                                fused_eval=True)
+    f1 = run_experiment(dataclasses.replace(fused, rounds_per_dispatch=1))
+    fR = run_experiment(dataclasses.replace(fused, rounds_per_dispatch=R))
+    posthoc = run_cell(spec, "scanned1")
+    loop = run_cell(spec, "loop")
+
+    def eval_round(i):
+        return i % E == 0 or i == n - 1
+
+    assert len(f1.records) == len(posthoc.records) == n
+    for i, (a, b) in enumerate(zip(f1.records, posthoc.records)):
+        for f in ("round", "sim_time", "comm_time", "idle_time",
+                  "bytes_sent", "updates_applied", "accept_rate", "loss"):
+            assert getattr(a, f) == getattr(b, f), \
+                f"fused eval changed {f} at round {i}"
+        if eval_round(i):
+            assert a.accuracy == b.accuracy, \
+                f"fused accuracy diverged from post-hoc at round {i}"
+    for i, (a, b) in enumerate(zip(fR.records, f1.records)):
+        for f in ROUND_FIELDS:
+            assert getattr(a, f) == getattr(b, f), \
+                f"fused dispatch grouping changed {f} at round {i}"
+    if accounting_deterministic(spec):
+        assert_accounting_close(loop, f1)
+    for i, (a, b) in enumerate(zip(f1.records, loop.records)):
+        if eval_round(i):
+            np.testing.assert_allclose(a.accuracy, b.accuracy, atol=5e-2)
+    if tmpdir is not None:
+        ckpt_spec = dataclasses.replace(fused, rounds_per_dispatch=R)
+        cut = max(1, n // 2)
+        s = ExperimentSession.open(ckpt_spec)
+        s.run(cut)
+        path = s.checkpoint(os.path.join(tmpdir, "fused.ckpt"))
+        s2 = ExperimentSession.restore(path)
+        s2.run(n - cut)
+        resumed = s2.result()
+        assert len(resumed.records) == n
+        for i, (a, b) in enumerate(zip(resumed.records, fR.records)):
+            for f in ROUND_FIELDS:
+                if f == "accuracy" and not eval_round(i):
+                    continue
+                assert getattr(a, f) == getattr(b, f), \
+                    (f"checkpoint/restore perturbed fused {f} at round "
+                     f"{i}: {getattr(a, f)!r} != {getattr(b, f)!r}")
+
+
 def accounting_deterministic(spec: ExperimentSpec) -> bool:
     """True when the cell's event accounting cannot depend on which
     samples were drawn: no θ decisions (every update transmits), no
@@ -432,6 +510,19 @@ def main(argv=None) -> int:
     except AssertionError as e:
         failures.append("topology-parity")
         print(f"# topology parity FAILED: {e}")
+    # eval-in-carry fusion: folding eval into the scan carry must not
+    # perturb the trajectory on any grouping, across a checkpoint
+    # boundary included (eval_every=2 so carry-forward rounds exist)
+    import tempfile
+    fused_cell = dataclasses.replace(
+        base_spec(rounds=rounds, theta=None), eval_every=2)
+    try:
+        with tempfile.TemporaryDirectory() as td:
+            assert_fused_equivalent(fused_cell, tmpdir=td)
+        print("# fused-eval parity (R1,R4,loop,checkpoint)  OK")
+    except AssertionError as e:
+        failures.append("fused-eval-parity")
+        print(f"# fused-eval parity FAILED: {e}")
     # byzantine rejection on every path that can carry it — 8 rounds
     # even in smoke mode: the 0.8-EMA needs ~4 rejections to provably
     # cross below 0.5 (1 -> 0.8^k), and round 0 has no reference yet.

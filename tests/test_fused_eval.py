@@ -1,0 +1,225 @@
+"""Whole-experiment fusion: eval-in-carry parity, donated spmd steps,
+and the vectorized multi-seed scanned path.
+
+The fused scanned engine folds evaluation into the ``lax.scan`` carry
+(``ExperimentSpec.fused_eval``), so a run's dispatch stream never
+breaks for a host eval readback. These tests pin
+
+  * the full harness parity cell (fused ≡ post-hoc ≡ loop, grouping-
+    and checkpoint-invariant) — tests/harness.py owns the asserts;
+  * spec validation: fused_eval composes only with the scanned sim
+    engine and the default (traceable) eval;
+  * the donation contract of the compiled spmd step: the driver NEVER
+    touches a state it has already passed into the step (emulated
+    donation — the previous state's buffers are deleted after every
+    step, so any reuse raises), and donate=True produces the same
+    trajectory as donate=False;
+  * run_scanned_seed_batch: S seeds as one vmapped dispatch stream
+    match S solo fused runs within the established vmap-vs-solo
+    reduction tolerance (tests/test_sweep.py contract), and seeds that
+    resolve different scanned trace shapes fail loudly.
+"""
+import dataclasses
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+import harness
+from repro.api import (DataSpec, ExperimentSession, ExperimentSpec,
+                       ROUND_FIELDS, SpecError, WorldSpec,
+                       run_experiment, run_scanned_seed_batch)
+
+
+def _fused_cell(rounds=6, eval_every=2, **kw):
+    return dataclasses.replace(
+        harness.base_spec(rounds=rounds, theta=None, **kw),
+        eval_every=eval_every)
+
+
+# ---------------------------------------------------------------------------
+# eval-in-carry parity (satellite: harness cell)
+# ---------------------------------------------------------------------------
+
+def test_fused_eval_parity_cell(tmp_path):
+    harness.assert_fused_equivalent(_fused_cell(), tmpdir=str(tmp_path))
+
+
+def test_fused_grouping_invariance_with_theta():
+    # θ decisions ride the carry too — grouping must stay invisible
+    spec = dataclasses.replace(harness.base_spec(rounds=6, theta=0.6),
+                               eval_every=2, megastep=True,
+                               fused_eval=True)
+    f1 = run_experiment(dataclasses.replace(spec, rounds_per_dispatch=1))
+    f3 = run_experiment(dataclasses.replace(spec, rounds_per_dispatch=3))
+    for a, b in zip(f3.records, f1.records):
+        for f in ROUND_FIELDS:
+            assert getattr(a, f) == getattr(b, f)
+
+
+def test_fused_dispatch_count():
+    # 6 rounds at R=3: 2 scan dispatches, zero extra eval dispatches
+    spec = dataclasses.replace(_fused_cell(rounds=6), megastep=True,
+                               rounds_per_dispatch=3, fused_eval=True)
+    sess = ExperimentSession.open(spec)
+    sess.run(spec.rounds)
+    assert sess._driver.sim.dispatches == 2
+    posthoc = ExperimentSession.open(
+        dataclasses.replace(spec, fused_eval=False))
+    posthoc.run(spec.rounds)
+    assert posthoc._driver.sim.dispatches > 2
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+def test_fused_requires_rounds_per_dispatch():
+    spec = dataclasses.replace(harness.base_spec(), fused_eval=True)
+    with pytest.raises(SpecError, match="rounds_per_dispatch"):
+        spec.validate()
+
+
+def test_fused_rejects_spmd_engine():
+    spec = dataclasses.replace(harness.base_spec(), engine="spmd",
+                               fused_eval=True, rounds_per_dispatch=2,
+                               megastep=True)
+    with pytest.raises(SpecError, match="sim-engine"):
+        spec.validate()
+
+
+def test_fused_rejects_custom_eval_fn():
+    spec = dataclasses.replace(harness.base_spec(), fused_eval=True,
+                               megastep=True, rounds_per_dispatch=2,
+                               eval_fn=lambda params, arrays: 0.0)
+    with pytest.raises(SpecError, match="eval_fn"):
+        spec.validate()
+
+
+# ---------------------------------------------------------------------------
+# spmd donation (satellite: runner donate=False bug)
+# ---------------------------------------------------------------------------
+
+def _spmd_spec(rounds=5):
+    return harness.path_spec(harness.base_spec(rounds=rounds), "spmd")
+
+
+def test_spmd_driver_never_reuses_donated_state(tmp_path):
+    """Emulate donation on CPU: delete every buffer of the state that
+    was just passed into the compiled step. If any driver code path
+    (accounting, eval, checkpointing) still read the donated state, it
+    would raise on the deleted buffer."""
+    spec = _spmd_spec()
+    sess = ExperimentSession.open(spec)
+    driver = sess._driver
+    orig_step = driver.step
+
+    def donating_step(state, batch):
+        out = orig_step(state, batch)
+        for leaf in jax.tree.leaves(state):
+            if isinstance(leaf, jax.Array):
+                leaf.delete()
+        return out
+
+    driver.step = donating_step
+    sess.run(3)
+    sess.checkpoint(str(tmp_path / "donated.ckpt"))   # post-step state live
+    sess.run(spec.rounds - 3)
+    res = sess.result()
+    assert len(res.records) == spec.rounds
+    ref = run_experiment(spec)
+    for a, b in zip(res.records, ref.records):
+        for f in ROUND_FIELDS:
+            va, vb = getattr(a, f), getattr(b, f)
+            if va != va and vb != vb:
+                continue                 # NaN (unmeasured accuracy)
+            assert va == vb
+
+
+def test_spmd_donate_flag_is_trajectory_invariant():
+    """The donate flag must not change the math — only buffer reuse.
+    CPU ignores donation with a warning; silence it so the comparison
+    runs everywhere."""
+    from repro.core import fl_step
+
+    spec = _spmd_spec(rounds=3)
+    cfg = spec.resolve_model()
+    rng = np.random.default_rng(0)
+    batches = []
+    for _ in range(3):
+        batches.append({
+            "x": np.asarray(rng.normal(
+                size=(spec.world.num_clients, 32, cfg.num_features)),
+                np.float32),
+            "y": rng.integers(0, cfg.num_classes,
+                              size=(spec.world.num_clients, 32)),
+        })
+
+    def run(donate):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            opt = None
+            state = fl_step.init_state(jax.random.PRNGKey(spec.seed),
+                                       cfg, opt)
+            step = fl_step.build_fl_train_step(cfg, opt, donate=donate)
+            traj = []
+            for batch in batches:
+                state, m = step(state, jax.tree.map(jax.numpy.asarray,
+                                                    batch))
+                traj.append(float(m["loss"]))
+            return traj
+
+    assert run(True) == run(False)
+
+
+# ---------------------------------------------------------------------------
+# vectorized multi-seed scanned path
+# ---------------------------------------------------------------------------
+
+def _batch_spec(rounds=5):
+    return dataclasses.replace(
+        ExperimentSpec(
+            model="anomaly-mlp-smoke",
+            data=DataSpec(n_samples=1200, eval_samples=300,
+                          partition="iid"),
+            world=WorldSpec(num_clients=5, profile="heterogeneous"),
+            rounds=rounds, seed=0, rounds_per_dispatch=3,
+            fused_eval=True),
+        eval_every=2)
+
+
+def test_scanned_seed_batch_matches_solo_runs():
+    spec = _batch_spec()
+    seeds = [0, 1, 2]
+    batch = run_scanned_seed_batch(spec, seeds)
+    for s, res in zip(seeds, batch):
+        solo = run_experiment(dataclasses.replace(spec, seed=s))
+        assert len(res.records) == len(solo.records) == spec.rounds
+        for a, b in zip(res.records, solo.records):
+            assert a.round == b.round
+            assert a.updates_applied == b.updates_applied
+            # the vmap-vs-solo reduction-order tolerance contract of
+            # tests/test_sweep.py::test_seed_batch_matches_serial_runs
+            np.testing.assert_allclose(a.sim_time, b.sim_time, rtol=1e-9)
+            np.testing.assert_allclose(a.bytes_sent, b.bytes_sent,
+                                       rtol=1e-9)
+            np.testing.assert_allclose(a.accuracy, b.accuracy, atol=1e-5)
+            np.testing.assert_allclose(a.loss, b.loss, rtol=1e-4)
+
+
+def test_scanned_seed_batch_rejects_shape_mismatch():
+    # dirichlet partitions are seed-dependent -> per-seed trace shapes
+    # diverge; the batch path must refuse loudly, not silently pad math
+    spec = dataclasses.replace(
+        _batch_spec(), data=DataSpec(n_samples=1200, eval_samples=300,
+                                     partition="dirichlet"))
+    with pytest.raises(ValueError, match="trace shapes"):
+        run_scanned_seed_batch(spec, [0, 1, 2])
+
+
+def test_scanned_seed_batch_requires_scanned_engine():
+    spec = dataclasses.replace(_batch_spec(), rounds_per_dispatch=None,
+                               fused_eval=False)
+    with pytest.raises(ValueError, match="rounds_per_dispatch"):
+        run_scanned_seed_batch(spec, [0, 1])
